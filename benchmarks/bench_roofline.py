@@ -1,0 +1,40 @@
+"""Roofline table from the dry-run artifacts (deliverable (g)): one row per
+compiled (arch × shape × mesh) cell.  us_per_call = the dominant roofline
+term (the modeled step-time lower bound on v5e)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import emit
+
+ART_DIRS = ("artifacts/dryrun",)
+
+
+def run() -> None:
+    rows = []
+    for d in ART_DIRS:
+        for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+            r = json.load(open(path))
+            if r.get("status") != "ok":
+                continue
+            rows.append(r)
+    if not rows:
+        print("# no dry-run artifacts found — run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all")
+        return
+    for r in rows:
+        t_dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(
+            f"roofline_{r['mesh']}_{r['arch']}_{r['shape']}",
+            t_dom * 1e6,
+            f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f};"
+            f"useful={r['useful_ratio']:.2f};"
+            f"tc={r['t_compute_s']:.3f};tm={r['t_memory_s']:.3f};"
+            f"tx={r['t_collective_s']:.3f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

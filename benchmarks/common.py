@@ -1,0 +1,63 @@
+"""Shared benchmark fixtures: the paper's testbed geometry + fleet builders."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import numpy as np
+
+from repro.core.types import VM_SPEC, Host, Instance, Request
+
+SIZES = {
+    "small": VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20),
+    "medium": VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40),
+    "large": VM_SPEC.make(vcpus=4, ram_mb=8000, disk_gb=80),
+}
+#: paper Table 1 nodes (disk non-binding; see tests/test_scheduler_correctness)
+NODE_CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=10_000)
+NOW = 1_000_000.0
+
+
+def empty_fleet(n: int) -> List[Host]:
+    return [Host(name=f"h{i}", capacity=NODE_CAP) for i in range(n)]
+
+
+def saturated_fleet(n: int, seed: int = 0, preemptible_frac: float = 0.5,
+                    k_max: int = 4) -> List[Host]:
+    """Hosts filled with medium instances, mixed normal/preemptible, integer
+    run-time minutes (paper §4.4.1 conditions)."""
+    rng = np.random.default_rng(seed)
+    hosts = []
+    iid = 0
+    for i in range(n):
+        h = Host(name=f"h{i}", capacity=NODE_CAP)
+        n_pre = 0
+        for _ in range(4):  # 4 medium slots per node
+            pre = bool(rng.random() < preemptible_frac) and n_pre < k_max
+            n_pre += int(pre)
+            h.place(Instance(
+                id=f"x{iid}", resources=SIZES["medium"], preemptible=pre,
+                host=h.name, start_time=NOW - float(rng.integers(10, 500)) * 60.0,
+            ))
+            iid += 1
+        if n_pre == 0:  # guarantee evacuability somewhere
+            inst = next(iter(h.instances.values()))
+            inst.preemptible = True
+        hosts.append(h)
+    return hosts
+
+
+def time_call(fn: Callable, repeats: int = 30, warmup: int = 3) -> Tuple[float, float]:
+    """(mean_us, std_us) of fn()."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.mean(ts)), float(np.std(ts))
+
+
+def emit(name: str, us: float, derived: str) -> None:
+    print(f"{name},{us:.1f},{derived}")

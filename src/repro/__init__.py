@@ -1,0 +1,4 @@
+"""repro — preemptible-aware cluster scheduling (FGCS 2018) + a multi-pod
+JAX training/serving framework.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

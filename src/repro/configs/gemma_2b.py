@@ -1,0 +1,9 @@
+"""gemma-2b [arXiv:2403.08295] — GeGLU, head_dim=256, MQA (kv=1)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b", family="dense",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+    d_ff=16384, vocab_size=256000, head_dim=256,
+    mlp_type="geglu", tie_embeddings=True,
+)

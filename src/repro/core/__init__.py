@@ -1,0 +1,39 @@
+"""repro.core — the paper's preemptible-aware scheduling, as a library.
+
+Python reference implementation (oracle + paper-faithful):
+    scheduler.FilterScheduler / RetryScheduler / PreemptibleScheduler
+Vectorized beyond-paper implementation:
+    jax_scheduler.JaxPreemptibleScheduler  (jit; optional Pallas hot path)
+"""
+from .cluster import Cluster, make_uniform_fleet
+from .cost import CountCost, PeriodCost, RecomputeCost, RevenueCost
+from .preemption import PreemptAck, PreemptionController
+from .scheduler import (
+    FilterScheduler,
+    PreemptibleScheduler,
+    RetryScheduler,
+    SCHEDULER_REGISTRY,
+)
+from .simulator import Simulator, WorkloadSpec
+from .types import (
+    Flavor,
+    Host,
+    Instance,
+    Request,
+    ResourceSpec,
+    Resources,
+    ScheduleResult,
+    TerminationPlan,
+    TPU_SPEC,
+    VM_SPEC,
+)
+
+__all__ = [
+    "Cluster", "make_uniform_fleet",
+    "CountCost", "PeriodCost", "RecomputeCost", "RevenueCost",
+    "PreemptAck", "PreemptionController",
+    "FilterScheduler", "PreemptibleScheduler", "RetryScheduler", "SCHEDULER_REGISTRY",
+    "Simulator", "WorkloadSpec",
+    "Flavor", "Host", "Instance", "Request", "ResourceSpec", "Resources",
+    "ScheduleResult", "TerminationPlan", "TPU_SPEC", "VM_SPEC",
+]

@@ -1,0 +1,321 @@
+"""Vectorized JAX implementation of the preemptible-aware scheduler.
+
+The paper's single-pass design (Alg. 2+5+6) has a property the retry design
+lacks: *the whole decision is a pure function of the host-state arrays* — no
+data-dependent second cycle.  We exploit that to turn scheduling into one
+jit-compiled array program over struct-of-arrays host state:
+
+    filter (dual-view)  →  subset enumeration (2^K masks)  →
+    weigh (normalized)  →  argmax  →  termination mask
+
+Cost functions must be *per-instance additive* (all of the paper's are:
+period, count, revenue, recompute), so a subset's cost is ``mask @ inst_cost``
+and Alg. 5 becomes a masked matmul + argmin — MXU-shaped work.  The Pallas
+kernel in ``repro.kernels.sched_weigh`` fuses the hot part (filter + subset
+feasibility/cost + per-host reduction) over VMEM tiles; this module provides
+the pure-jnp equivalent (also the kernel's oracle) and the end-to-end
+scheduler wrapper used by benchmarks.
+
+Capacity model: each host carries up to ``K`` preemptible instances (padded,
+masked).  2^K subset masks are enumerated exactly — K≤12 covers every
+practical oversubscription level (the paper's testbed peaked at 4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .cost import BILL_PERIOD_S, CostFunction, PeriodCost
+from .types import (
+    EMPTY_PLAN,
+    Host,
+    Instance,
+    Request,
+    ScheduleResult,
+    TerminationPlan,
+)
+
+NEG_INF = -1e30
+POS_INF = 1e30
+
+
+# ---------------------------------------------------------------------------
+# SoA host state
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SoAHostState:
+    """Struct-of-arrays mirror of a host fleet (device-resident)."""
+
+    free_f: jax.Array       # (N, D) h_f free resources
+    free_n: jax.Array       # (N, D) h_n free resources
+    schedulable: jax.Array  # (N,)   bool
+    domain: jax.Array       # (N,)   int32
+    slow: jax.Array         # (N,)   float32 straggler factor
+    inst_res: jax.Array     # (N, K, D) preemptible instance resources (padded)
+    inst_cost: jax.Array    # (N, K)    per-instance termination cost
+    inst_valid: jax.Array   # (N, K)    bool
+
+    @property
+    def n_hosts(self) -> int:
+        return self.free_f.shape[0]
+
+    @property
+    def k_slots(self) -> int:
+        return self.inst_res.shape[1]
+
+
+def build_soa_state(
+    hosts: Sequence[Host],
+    now: float,
+    cost_fn: Optional[CostFunction] = None,
+    k_slots: int = 8,
+    domain_ids: Optional[Dict[str, int]] = None,
+) -> Tuple[SoAHostState, List[List[Instance]]]:
+    """Convert python ``Host`` objects to device arrays.
+
+    Returns the state plus the per-host preemptible instance lists (slot
+    order), needed to translate a winning mask back into instance ids.
+    """
+    cost_fn = cost_fn or PeriodCost()
+    n = len(hosts)
+    d = len(hosts[0].capacity.spec.dims) if hosts else 0
+    if domain_ids is None:
+        domain_ids = {}
+        for h in hosts:
+            domain_ids.setdefault(h.domain, len(domain_ids))
+    free_f = np.zeros((n, d), np.float32)
+    free_n = np.zeros((n, d), np.float32)
+    schedulable = np.zeros((n,), bool)
+    domain = np.zeros((n,), np.int32)
+    slow = np.ones((n,), np.float32)
+    inst_res = np.zeros((n, k_slots, d), np.float32)
+    inst_cost = np.zeros((n, k_slots), np.float32)
+    inst_valid = np.zeros((n, k_slots), bool)
+    slots: List[List[Instance]] = []
+    for i, h in enumerate(hosts):
+        free_f[i] = h.free_full.vec
+        free_n[i] = h.free_normal.vec
+        schedulable[i] = h.schedulable
+        domain[i] = domain_ids[h.domain]
+        slow[i] = h.slow_factor
+        pre = sorted(h.preemptible_instances(), key=lambda x: x.id)
+        if len(pre) > k_slots:
+            raise ValueError(
+                f"host {h.name} has {len(pre)} preemptible instances > k_slots={k_slots}"
+            )
+        slots.append(pre)
+        for k, inst in enumerate(pre):
+            inst_res[i, k] = inst.resources.vec
+            inst_cost[i, k] = cost_fn.cost([inst], now)
+            inst_valid[i, k] = True
+    state = SoAHostState(
+        free_f=jnp.asarray(free_f),
+        free_n=jnp.asarray(free_n),
+        schedulable=jnp.asarray(schedulable),
+        domain=jnp.asarray(domain),
+        slow=jnp.asarray(slow),
+        inst_res=jnp.asarray(inst_res),
+        inst_cost=jnp.asarray(inst_cost),
+        inst_valid=jnp.asarray(inst_valid),
+    )
+    return state, slots
+
+
+def subset_masks(k: int) -> np.ndarray:
+    """(2^k, k) 0/1 matrix enumerating all subsets (row 0 = empty set)."""
+    m = np.arange(1 << k, dtype=np.uint32)
+    return ((m[:, None] >> np.arange(k)[None, :]) & 1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# The jit'd decision (pure jnp; also the Pallas kernel's oracle)
+# ---------------------------------------------------------------------------
+
+
+def host_plan_terms(
+    free_f: jax.Array,
+    inst_res: jax.Array,
+    inst_cost: jax.Array,
+    inst_valid: jax.Array,
+    req_res: jax.Array,
+    masks: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-host Alg. 5 terms, vectorized over all hosts and all 2^K masks.
+
+    Returns (best_cost, best_mask_idx, any_feasible):
+      best_cost   (N,)  cost of the cheapest feasible termination subset
+                        (0 where the request already fits h_f),
+      best_mask   (N,)  int32 index into ``masks``,
+      feasible    (N,)  whether ANY subset admits the request.
+    """
+    # Invalid slots contribute nothing and cost +inf if ever selected.
+    res = jnp.where(inst_valid[..., None], inst_res, 0.0)            # (N,K,D)
+    cost = jnp.where(inst_valid, inst_cost, POS_INF)                 # (N,K)
+    freed = jnp.einsum("mk,nkd->nmd", masks, res)                    # (N,M,D)
+    ok = jnp.all(free_f[:, None, :] + freed >= req_res[None, None, :] - 1e-6, axis=-1)
+    # Subsets touching an invalid slot are excluded via +inf cost.
+    sub_cost = jnp.einsum("mk,nk->nm", masks, cost)                  # (N,M)
+    sub_cost = jnp.where(ok, sub_cost, POS_INF)
+    # Tie-break: cheaper cost first, then fewer instances, then first index
+    # (matches the python reference).  Two-stage to stay exact in f32.
+    best_cost = jnp.min(sub_cost, axis=-1)                           # (N,)
+    size = masks.sum(-1)                                             # (M,)
+    is_tie = sub_cost <= best_cost[:, None] + 1e-3
+    size_key = jnp.where(is_tie, size[None, :], POS_INF)
+    best_mask = jnp.argmin(size_key, axis=-1).astype(jnp.int32)      # (N,)
+    feasible = jnp.any(ok, axis=-1)
+    return best_cost, best_mask, feasible
+
+
+def _normalize(w: jax.Array, valid: jax.Array) -> jax.Array:
+    """OpenStack weight normalization over the valid candidate set."""
+    lo = jnp.min(jnp.where(valid, w, POS_INF))
+    hi = jnp.max(jnp.where(valid, w, NEG_INF))
+    span = hi - lo
+    return jnp.where(span > 1e-12, (w - lo) / jnp.where(span > 1e-12, span, 1.0), 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("use_pallas", "weigher_multipliers"),
+)
+def schedule_decision(
+    state: SoAHostState,
+    req_res: jax.Array,          # (D,)
+    req_preemptible: jax.Array,  # () bool
+    req_domain: jax.Array,       # () int32; -1 = any
+    masks: jax.Array,            # (M, K)
+    use_pallas: bool = False,
+    weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One scheduling decision.  Returns (host_idx, term_mask_idx, ok).
+
+    ``weigher_multipliers`` = (overcommit, termination_cost, packing,
+    straggler) — the first two reproduce the paper's evaluation policy.
+    """
+    # ---- phase 1: dual-view filtering (the paper's trick) -------------------
+    view = jnp.where(req_preemptible, state.free_f, state.free_n)    # (N,D)
+    fits = jnp.all(view >= req_res[None, :] - 1e-6, axis=-1)
+    fits &= state.schedulable
+    fits &= (req_domain < 0) | (state.domain == req_domain)
+
+    # ---- phase 2+3 terms: Alg.5 enumeration (skipped for preemptible reqs) --
+    if use_pallas:
+        from repro.kernels.sched_weigh import sched_weigh as _sched_weigh
+
+        best_cost, best_mask, any_feasible = _sched_weigh(
+            state.free_f, state.inst_res, state.inst_cost,
+            state.inst_valid, req_res, masks,
+        )
+    else:
+        best_cost, best_mask, any_feasible = host_plan_terms(
+            state.free_f, state.inst_res, state.inst_cost,
+            state.inst_valid, req_res, masks,
+        )
+    # Preemptible requests never terminate others: empty plan, zero cost.
+    best_cost = jnp.where(req_preemptible, 0.0, best_cost)
+    best_mask = jnp.where(req_preemptible, 0, best_mask)
+    feasible = jnp.where(req_preemptible, fits, any_feasible)
+
+    valid = fits & feasible
+    overcommitted = ~jnp.all(state.free_f >= req_res[None, :] - 1e-6, axis=-1)
+
+    # ---- phase 2: normalized weighing on h_f --------------------------------
+    m_over, m_term, m_pack, m_strag = weigher_multipliers
+    omega = jnp.zeros(state.n_hosts)
+    if m_over:
+        omega += m_over * _normalize(jnp.where(overcommitted, -1.0, 0.0), valid)
+    if m_term:
+        omega += m_term * _normalize(-jnp.minimum(best_cost, POS_INF), valid)
+    if m_pack:
+        omega += m_pack * _normalize(-state.free_f.sum(-1), valid)
+    if m_strag:
+        omega += m_strag * _normalize(-state.slow, valid)
+    omega = jnp.where(valid, omega, NEG_INF)
+
+    # ---- argmax (first-index tie-break) --------------------------------------
+    host_idx = jnp.argmax(omega).astype(jnp.int32)
+    ok = omega[host_idx] > NEG_INF / 2
+    return host_idx, best_mask[host_idx], ok
+
+
+# ---------------------------------------------------------------------------
+# Drop-in scheduler wrapper (same .schedule() contract as the python ones)
+# ---------------------------------------------------------------------------
+
+
+class JaxPreemptibleScheduler:
+    """Beyond-paper vectorized scheduler with the python-class interface.
+
+    For apples-to-apples latency benchmarks against the python schedulers it
+    rebuilds device arrays from the python hosts per call unless the caller
+    maintains the SoA state incrementally (``schedule_soa``).
+    """
+
+    def __init__(
+        self,
+        cost_fn: Optional[CostFunction] = None,
+        k_slots: int = 8,
+        use_pallas: bool = False,
+        weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+    ):
+        self.cost_fn = cost_fn or PeriodCost()
+        self.k_slots = k_slots
+        self.use_pallas = use_pallas
+        self.weigher_multipliers = weigher_multipliers
+        self._masks = jnp.asarray(subset_masks(k_slots))
+
+    # -- full pipeline from python objects ------------------------------------
+    def schedule(
+        self, req: Request, hosts: Sequence[Host], now: float
+    ) -> ScheduleResult:
+        state, slots = build_soa_state(
+            hosts, now, cost_fn=self.cost_fn, k_slots=self.k_slots
+        )
+        domains = {h.domain: i for i, h in enumerate({h.domain: h for h in hosts}.values())}
+        dom = -1
+        if req.domain is not None:
+            dom = domains.get(req.domain, -1)
+        host_idx, mask_idx, ok = self.schedule_soa(
+            state,
+            jnp.asarray(req.resources.vec, jnp.float32),
+            bool(req.preemptible),
+            dom,
+        )
+        if not bool(ok):
+            return ScheduleResult(request=req, host=None, passes=1)
+        hi = int(host_idx)
+        mask = int(mask_idx)
+        victims = tuple(
+            slots[hi][k] for k in range(len(slots[hi])) if (mask >> k) & 1
+        )
+        plan = (
+            EMPTY_PLAN
+            if not victims
+            else TerminationPlan(
+                instances=victims,
+                cost=self.cost_fn.cost(victims, now),
+                feasible=True,
+            )
+        )
+        return ScheduleResult(request=req, host=hosts[hi].name, plan=plan, passes=1)
+
+    # -- jit'd core (device arrays in/out) -------------------------------------
+    def schedule_soa(self, state: SoAHostState, req_res, preemptible: bool, domain: int = -1):
+        return schedule_decision(
+            state,
+            req_res,
+            jnp.asarray(preemptible),
+            jnp.asarray(domain, jnp.int32),
+            self._masks,
+            use_pallas=self.use_pallas,
+            weigher_multipliers=self.weigher_multipliers,
+        )

@@ -1,0 +1,356 @@
+"""Pallas TPU flash attention: fwd + bwd, GQA-aware, causal.
+
+TPU adaptation of the flash algorithm: the (Bq × Bk) score tile lives in
+VMEM/VREGs only; online softmax statistics (m, l) and the output accumulator
+persist in VMEM scratch across the innermost (KV) grid dimension.  The MXU
+sees two matmuls per tile (QKᵀ and PV); HBM traffic is O(S·hd) per head
+instead of O(S²).
+
+Grid (fwd): (B, H, nQ, nK) with nK innermost ("arbitrary" semantics — the
+scratch carries across it).  GQA: K/V index maps divide the head index by
+H/G, so grouped heads read the same KV block without materializing repeats.
+
+Backward uses the standard two-kernel split with recompute:
+  * dq kernel: grid (B, H, nQ, nK), accumulates dq over KV blocks;
+  * dkv kernel: grid (B, H, nK, nQ), accumulates dk/dv over Q blocks;
+both consume the saved (o, lse) and delta = rowsum(do·o).
+
+Oracle: ``repro.kernels.ref.attention_ref`` (== models.attention reference
+math).  Validated in interpret mode over shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # TPU scratch memory spaces (interpret-mode safe)
+    from jax.experimental.pallas import tpu as pltpu
+
+    _VMEM = pltpu.VMEM
+except Exception:  # pragma: no cover
+    _VMEM = None
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr,
+                *, scale, causal, block_q, block_k, n_k):
+    kk = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0, ...].astype(jnp.float32)            # (Bq, hd)
+        k = k_ref[0, ...].astype(jnp.float32)            # (Bk, hd)
+        v = v_ref[0, ...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                         # (Bq, Bk)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = kk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal:
+        pl.when(qi * block_q + block_q - 1 >= kk * block_k)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kk == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, ...] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, ...] = m_scr[...] + jnp.log(l)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def _flash_fwd(q, k, v, causal, block_q, block_k, interpret):
+    bh, sq, hd = q.shape           # q flattened to (B*H, S, hd)
+    bg, skv, _ = k.shape           # k/v (B*G, S, hd)
+    rep = bh // bg
+    n_q = sq // block_q
+    n_k = skv // block_k
+    scale = 1.0 / np.sqrt(hd)
+    grid = (bh, 1, n_q, n_k)       # (bh, dummy, q blocks, kv blocks)
+
+    kern = functools.partial(
+        _fwd_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_k=n_k,
+    )
+    scratch = []
+    if _VMEM is not None:
+        scratch = [
+            _VMEM((block_q,), jnp.float32),
+            _VMEM((block_q,), jnp.float32),
+            _VMEM((block_q, hd), jnp.float32),
+        ]
+    out_shape = (
+        jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+    )
+    o, lse = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, _, qi, kk: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, _, qi, kk, rep=rep: (b // rep, kk, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, _, qi, kk, rep=rep: (b // rep, kk, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_q, hd), lambda b, _, qi, kk: (b, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, _, qi, kk: (b, qi)),
+        ),
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_scr, *, scale, causal, block_q, block_k, n_k):
+    kk = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0, ...].astype(jnp.float32)
+        k = k_ref[0, ...].astype(jnp.float32)
+        v = v_ref[0, ...].astype(jnp.float32)
+        do = do_ref[0, ...].astype(jnp.float32)
+        lse = lse_ref[0, ...]
+        delta = delta_ref[0, ...]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = kk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        acc_scr[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                            preferred_element_type=jnp.float32)
+
+    if causal:
+        pl.when(qi * block_q + block_q - 1 >= kk * block_k)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kk == n_k - 1)
+    def _finalize():
+        dq_ref[0, ...] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr,
+                *, scale, causal, block_q, block_k, n_q, rep):
+    # grid (B*G, n_k, rep, n_q): scratch accumulates over (rep, q blocks)
+    # for one KV block, then flushes — kk outer of (r, qi) is essential.
+    qi = pl.program_id(3)          # innermost: q blocks
+    h_in_group = pl.program_id(2)  # grouped head (0..rep-1)
+    kk = pl.program_id(1)
+
+    @pl.when(jnp.logical_and(qi == 0, h_in_group == 0))
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    def _compute():
+        q = q_ref[0, ...].astype(jnp.float32)
+        k = k_ref[0, ...].astype(jnp.float32)
+        v = v_ref[0, ...].astype(jnp.float32)
+        do = do_ref[0, ...].astype(jnp.float32)
+        lse = lse_ref[0, ...]
+        delta = delta_ref[0, ...]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+            kpos = kk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])                       # (Bq, Bk)
+        dv_scr[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_scr[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+
+    if causal:
+        pl.when(qi * block_q + block_q - 1 >= kk * block_k)(_compute)
+    else:
+        _compute()
+
+    @pl.when(jnp.logical_and(qi == n_q - 1, h_in_group == rep - 1))
+    def _finalize():
+        dk_ref[0, ...] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, ...] = dv_scr[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"),
+)
+def _flash_bwd(q, k, v, o, lse, do, causal, block_q, block_k, interpret):
+    bh, sq, hd = q.shape
+    bg, skv, _ = k.shape
+    rep = bh // bg
+    n_q = sq // block_q
+    n_k = skv // block_k
+    scale = 1.0 / np.sqrt(hd)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # (bh, sq)
+
+    kern_dq = functools.partial(
+        _dq_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_k=n_k,
+    )
+    scratch_dq = [] if _VMEM is None else [_VMEM((block_q, hd), jnp.float32)]
+    dq = pl.pallas_call(
+        kern_dq,
+        grid=(bh, 1, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, _, qi, kk: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, _, qi, kk, rep=rep: (b // rep, kk, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, _, qi, kk, rep=rep: (b // rep, kk, 0)),
+            pl.BlockSpec((1, block_q, hd), lambda b, _, qi, kk: (b, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, _, qi, kk: (b, qi)),
+            pl.BlockSpec((1, block_q), lambda b, _, qi, kk: (b, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, _, qi, kk: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=scratch_dq,
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    kern_dkv = functools.partial(
+        _dkv_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_q=n_q, rep=rep,
+    )
+    scratch_dkv = [] if _VMEM is None else [
+        _VMEM((block_k, hd), jnp.float32),
+        _VMEM((block_k, hd), jnp.float32),
+    ]
+    dk, dv = pl.pallas_call(
+        kern_dkv,
+        grid=(bg, n_k, rep, n_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, kk, r, qi, rep=rep: (b * rep + r, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, kk, r, qi: (b, kk, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, kk, r, qi: (b, kk, 0)),
+            pl.BlockSpec((1, block_q, hd), lambda b, kk, r, qi, rep=rep: (b * rep + r, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda b, kk, r, qi, rep=rep: (b * rep + r, qi)),
+            pl.BlockSpec((1, block_q), lambda b, kk, r, qi, rep=rep: (b * rep + r, qi)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_k, hd), lambda b, kk, r, qi: (b, kk, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, kk, r, qi: (b, kk, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ),
+        scratch_shapes=scratch_dkv,
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# public op with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, block_q, block_k, interpret):
+    o, _ = _flash_fwd(q, k, v, causal, block_q, block_k, interpret)
+    return o
+
+
+def _flash_fwd_rule(q, k, v, causal, block_q, block_k, interpret):
+    o, lse = _flash_fwd(q, k, v, causal, block_q, block_k, interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd_rule(causal, block_q, block_k, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _flash_bwd(q, k, v, o, lse, do, causal, block_q, block_k, interpret)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(
+    q: jax.Array,                  # (B, S, H, hd)
+    k: jax.Array,                  # (B, S, G, hd)
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Flash attention; returns (B, S, H, hd).  GQA via head grouping."""
+    if interpret is None:
+        interpret = _interpret_default()
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    assert h % g == 0
+    block_q = min(block_q, sq)
+    while sq % block_q:
+        block_q //= 2
+    block_k = min(block_k, k.shape[1])
+    while k.shape[1] % block_k:
+        block_k //= 2
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * g, k.shape[1], hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * g, v.shape[1], hd)
+    o = _flash(qf, kf, vf, causal, block_q, block_k, interpret)
+    return o.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` layer).
+
+These are the ground truth in kernel tests: interpret-mode kernels must
+``assert_allclose`` against these across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, causal: bool = True):
+    """q (B,S,H,hd); k/v (B,S,G,hd) → (B,S,H,hd).  fp32 softmax."""
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    rep = h // g
+    qg = q.reshape(b, sq, g, rep, hd).astype(jnp.float32)
+    scores = jnp.einsum("bsgrh,btgh->bgrst", qg, k.astype(jnp.float32))
+    scores = scores / np.sqrt(hd)
+    if causal:
+        skv = k.shape[1]
+        mask = jnp.arange(skv)[None, :] <= jnp.arange(sq)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrst,btgh->bsgrh", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def rmsnorm_ref(x, weight, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + weight.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def sched_weigh_ref(free_f, inst_res, inst_cost, inst_valid, req_res, masks):
+    """== core.jax_scheduler.host_plan_terms (re-exported for the kernels
+    test-layer convention)."""
+    from repro.core.jax_scheduler import host_plan_terms
+
+    return host_plan_terms(
+        jnp.asarray(free_f), jnp.asarray(inst_res), jnp.asarray(inst_cost),
+        jnp.asarray(inst_valid), jnp.asarray(req_res), jnp.asarray(masks),
+    )

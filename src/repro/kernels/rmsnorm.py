@@ -1,0 +1,57 @@
+"""Pallas fused RMSNorm kernel: one HBM read, one write per row tile.
+
+Grid over row tiles (T, D): mean-of-squares reduction, rsqrt, scale — all in
+VMEM.  D is the model width (128-lane aligned for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 256
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)                    # (T, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + w_ref[...].astype(jnp.float32))
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def _rmsnorm_2d(x, w, eps, interpret):
+    n, d = x.shape
+    t = min(TILE_ROWS, n)
+    grid = (n // t,)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((t, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), x.dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-5,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Fused RMSNorm over the last axis; any leading shape."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = x.shape
+    n = 1
+    for s in shape[:-1]:
+        n *= s
+    x2 = x.reshape(n, shape[-1])
+    pad = (-n) % min(TILE_ROWS, max(n, 1))
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, shape[-1]), x.dtype)])
+    out = _rmsnorm_2d(x2, weight, eps, interpret)
+    return out[:n].reshape(shape)

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fused filter + Alg.5 subset enumeration per host tile.
+
+This is the scheduling hot loop at fleet scale: for every host, evaluate all
+2^K termination subsets of its (padded) K preemptible-instance slots —
+feasibility against the request's resource vector and additive cost — and
+reduce to the per-host best plan.  Formulated as two small matmuls per tile
+(``res_d @ masks`` and ``cost @ masks``) so the MXU does the enumeration,
+plus VPU compares/reductions.
+
+Tiling: hosts are tiled T=128 per grid step (sublane-aligned); the mask
+matrix (K, M=2^K) and the request vector live in VMEM for the whole grid
+(index_map → block 0).  VMEM working set per step, K=8, D=4:
+  inst_res (128,8,4)f32 + masks (8,256) + ok/sub_cost (128,256)f32×2 ≈ 300 KB
+— comfortably inside the ~16 MB v5e VMEM budget; T could rise to 2048, but
+128 keeps the kernel latency-bound rather than occupancy-bound at small
+fleets (see EXPERIMENTS.md §Perf for the sweep).
+
+Oracle: ``repro.core.jax_scheduler.host_plan_terms`` (pure jnp).  Validated
+in interpret mode over shape/dtype sweeps in tests/test_kernels_sched.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+POS_INF = 1e30
+TILE_HOSTS = 128
+
+
+def _kernel(free_f_ref, inst_res_ref, inst_cost_ref, inst_valid_ref,
+            req_ref, masks_ref, best_cost_ref, best_mask_ref, feas_ref, *, ndim):
+    free_f = free_f_ref[...]          # (T, D)
+    res = inst_res_ref[...]           # (T, K, D)
+    cost = inst_cost_ref[...]         # (T, K)
+    valid = inst_valid_ref[...]       # (T, K) float 0/1
+    req = req_ref[...]                # (1, D)
+    masks = masks_ref[...]            # (K, M)
+
+    # Invalid (padding) slots free nothing and poison any subset they join.
+    res = res * valid[:, :, None]
+    cost = jnp.where(valid > 0.5, cost, POS_INF)
+
+    # Feasibility: for every mask m, all D dims satisfied.  One MXU matmul
+    # per resource dimension (D is small and static → unrolled).
+    ok = None
+    for d in range(ndim):
+        freed_d = jnp.dot(res[:, :, d], masks,
+                          preferred_element_type=jnp.float32)       # (T, M)
+        cond = free_f[:, d][:, None] + freed_d >= req[0, d] - 1e-6
+        ok = cond if ok is None else (ok & cond)
+
+    sub_cost = jnp.dot(cost, masks, preferred_element_type=jnp.float32)
+    sub_cost = jnp.where(ok, sub_cost, POS_INF)                     # (T, M)
+
+    best_cost = jnp.min(sub_cost, axis=1)                           # (T,)
+    # tie-break: fewest instances, then lowest mask index (argmin is first-hit)
+    sizes = jnp.sum(masks, axis=0)                                  # (M,)
+    is_tie = sub_cost <= best_cost[:, None] + 1e-3
+    size_key = jnp.where(is_tie, sizes[None, :], POS_INF)
+    best_mask = jnp.argmin(size_key, axis=1).astype(jnp.int32)
+
+    best_cost_ref[...] = best_cost[:, None]
+    best_mask_ref[...] = best_mask[:, None]
+    feas_ref[...] = jnp.any(ok, axis=1)[:, None].astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _sched_weigh_padded(free_f, inst_res, inst_cost, inst_valid, req, masks_t,
+                        interpret=True):
+    n, d = free_f.shape
+    k = inst_cost.shape[1]
+    m = masks_t.shape[1]
+    t = TILE_HOSTS
+    grid = (n // t,)
+    kern = functools.partial(_kernel, ndim=d)
+    out_shapes = (
+        jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        jax.ShapeDtypeStruct((n, 1), jnp.int32),
+    )
+    in_specs = [
+        pl.BlockSpec((t, d), lambda i: (i, 0)),
+        pl.BlockSpec((t, k, d), lambda i: (i, 0, 0)),
+        pl.BlockSpec((t, k), lambda i: (i, 0)),
+        pl.BlockSpec((t, k), lambda i: (i, 0)),
+        pl.BlockSpec((1, d), lambda i: (0, 0)),
+        pl.BlockSpec((k, m), lambda i: (0, 0)),
+    ]
+    out_specs = (
+        pl.BlockSpec((t, 1), lambda i: (i, 0)),
+        pl.BlockSpec((t, 1), lambda i: (i, 0)),
+        pl.BlockSpec((t, 1), lambda i: (i, 0)),
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(free_f, inst_res, inst_cost, inst_valid, req, masks_t)
+
+
+def sched_weigh(free_f, inst_res, inst_cost, inst_valid, req_res, masks,
+                interpret=None):
+    """Fused per-host best-plan terms.  Same contract as
+    ``core.jax_scheduler.host_plan_terms`` → (best_cost, best_mask, feasible).
+
+    ``masks``: (M, K) subset enumeration matrix (row 0 = empty set).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = free_f.shape
+    k = inst_cost.shape[1]
+    t = TILE_HOSTS
+    pad = (-n) % t
+    if pad:
+        neg = jnp.full((pad, d), -POS_INF, free_f.dtype)
+        free_f = jnp.concatenate([free_f, neg])
+        inst_res = jnp.concatenate([inst_res, jnp.zeros((pad, k, d), inst_res.dtype)])
+        inst_cost = jnp.concatenate([inst_cost, jnp.zeros((pad, k), inst_cost.dtype)])
+        inst_valid = jnp.concatenate([inst_valid, jnp.zeros((pad, k), inst_valid.dtype)])
+    best_cost, best_mask, feas = _sched_weigh_padded(
+        jnp.asarray(free_f, jnp.float32),
+        jnp.asarray(inst_res, jnp.float32),
+        jnp.asarray(inst_cost, jnp.float32),
+        jnp.asarray(inst_valid, jnp.float32),
+        jnp.asarray(req_res, jnp.float32).reshape(1, d),
+        jnp.asarray(masks, jnp.float32).T,
+        interpret=interpret,
+    )
+    return best_cost[:n, 0], best_mask[:n, 0], feas[:n, 0].astype(bool)

@@ -1,0 +1,263 @@
+"""Multi-pod dry run: lower + compile every (arch × shape × mesh) cell and
+extract memory / cost / collective statistics for the roofline analysis.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out artifacts/dryrun]
+
+The XLA_FLAGS line below MUST run before any other import touches jax —
+jax locks the device count on first init.  Only the dry run sees 512 fake
+devices; tests and benchmarks see the real single CPU device.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config
+from repro.data.pipeline import make_batch_specs
+from repro.launch import roofline as rl
+from repro.launch import sharding as shr
+from repro.launch.mesh import make_production_mesh
+from repro.models.layers import shape_tree
+from repro.models.model import (
+    decode_step,
+    forward_logits,
+    init_decode_state,
+    model_defs,
+    param_pspecs,
+)
+from repro.optim.optimizers import make_optimizer
+from repro.training.train_step import TrainSettings, make_train_step
+
+from jax.sharding import PartitionSpec as P
+
+#: microbatch counts keeping per-shard batch ≥1 and activations inside HBM.
+MICROBATCHES = {"train_4k": 8}
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    return make_batch_specs(cfg, SHAPES[shape_name])
+
+
+def _serve_step(cfg):
+    def serve_step(params, token, state):
+        logits, state = decode_step(cfg, params, token, state)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+    return serve_step
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               verbose: bool = True,
+               cfg_overrides: Dict[str, object] = None,
+               settings_overrides: Dict[str, object] = None,
+               mesh_shape: str = None) -> Dict[str, object]:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    if mesh_shape:
+        # right-sized slice (scheduler-level decision): "DxM" data x model
+        d, m = (int(x) for x in mesh_shape.split("x"))
+        mesh = jax.make_mesh((d, m), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh_name = f"slice{d}x{m}"
+        chips = d * m
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+        chips = 512 if multi_pod else 256
+    t0 = time.time()
+
+    with jax.set_mesh(mesh):
+        pspecs = param_pspecs(cfg)
+        pshapes = shape_tree(model_defs(cfg), jnp.dtype(cfg.params_dtype))
+        batch = make_batch_specs(cfg, shape)
+        bspecs = shr.batch_pspecs(cfg, batch)
+
+        if shape.kind == "train":
+            skw = dict(microbatches=MICROBATCHES.get(shape.name, 1))
+            skw.update(settings_overrides or {})
+            settings = TrainSettings(**skw)
+            opt = make_optimizer(cfg.optimizer)
+            ostate = jax.eval_shape(opt.init, pshapes)
+            ospecs = opt.state_specs(pspecs)
+            step = make_train_step(cfg, settings, opt)
+            fn = jax.jit(
+                step,
+                in_shardings=(pspecs, ospecs, bspecs),
+                donate_argnums=(0, 1),
+            )
+            lowered = fn.lower(pshapes, ostate, batch)
+        elif shape.kind == "prefill":
+            fn = jax.jit(
+                lambda p, b: forward_logits(cfg, p, b, last_only=True),
+                in_shardings=(pspecs, bspecs),
+            )
+            lowered = fn.lower(pshapes, batch)
+        else:  # decode
+            b = shape.global_batch
+            state = jax.eval_shape(
+                lambda: init_decode_state(cfg, b, shape.seq_len, enc_len=shape.seq_len)
+            )
+            sspecs = shr.decode_state_pspecs(cfg, state)
+            tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            tspec = P(shr._batch_entry(b), None)
+            fn = jax.jit(
+                _serve_step(cfg),
+                in_shardings=(pspecs, tspec, sspecs),
+                donate_argnums=(2,),
+            )
+            lowered = fn.lower(pshapes, tok, state)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    bytes_per_device = None
+    mem_repr = None
+    if mem is not None:
+        mem_repr = {
+            k: getattr(mem, k)
+            for k in dir(mem)
+            if not k.startswith("_") and isinstance(getattr(mem, k, None), (int, float))
+        }
+        for key in ("temp_size_in_bytes",):
+            if key in mem_repr:
+                bytes_per_device = (
+                    mem_repr.get("argument_size_in_bytes", 0)
+                    + mem_repr.get("output_size_in_bytes", 0)
+                    - mem_repr.get("alias_size_in_bytes", 0)
+                    + mem_repr.get("temp_size_in_bytes", 0)
+                )
+
+    roof = rl.build(
+        arch, shape, mesh_name, chips, cost or {}, hlo, cfg, bytes_per_device
+    )
+    row = roof.row()
+    row.update(
+        status="ok",
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        memory_analysis=mem_repr,
+        hlo_collective_lines=sum(roof.collective_counts.values()),
+    )
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+              f"flops={row['hlo_flops']:.3e} bytes={row['hlo_bytes']:.3e} "
+              f"coll={row['collective_bytes']:.3e} dominant={row['dominant']} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        if mem_repr:
+            print(f"        memory_analysis: {mem_repr}")
+    return row
+
+
+def run_cells(archs, shapes, multi_pod: bool, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    for arch in archs:
+        cfg = get_config(arch)
+        for shape, skip in applicable_shapes(cfg):
+            if shapes and shape.name not in shapes:
+                continue
+            path = os.path.join(out_dir, f"{mesh_name}__{arch}__{shape.name}.json")
+            if skip is not None:
+                row = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+                       "status": "skipped", "reason": skip}
+                with open(path, "w") as f:
+                    json.dump(row, f, indent=1)
+                print(f"[dryrun] SKIP {arch} × {shape.name}: {skip}")
+                continue
+            if os.path.exists(path):
+                with open(path) as f:
+                    if json.load(f).get("status") == "ok":
+                        print(f"[dryrun] cached {arch} × {shape.name}")
+                        continue
+            try:
+                row = lower_cell(arch, shape.name, multi_pod)
+            except Exception as e:
+                row = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+                       "status": "error", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                print(f"[dryrun] ERROR {arch} × {shape.name}: {e}")
+            with open(path, "w") as f:
+                json.dump(row, f, indent=1, default=str)
+
+
+def _parse_overrides(pairs):
+    out = {}
+    for p in pairs or []:
+        k, v = p.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "True"):
+            v = True
+        if v in ("false", "False"):
+            v = False
+        out[k] = v
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default=None)
+    ap.add_argument("--shape", choices=list(SHAPES), default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--cfg", action="append", metavar="K=V",
+                    help="ModelConfig override (perf experiments)")
+    ap.add_argument("--settings", action="append", metavar="K=V",
+                    help="TrainSettings override (perf experiments)")
+    ap.add_argument("--tag", default=None, help="experiment tag for the artifact name")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="right-sized slice mesh, e.g. 64x1 (perf experiments)")
+    args = ap.parse_args()
+
+    cfg_o = _parse_overrides(args.cfg)
+    set_o = _parse_overrides(args.settings)
+    if cfg_o or set_o or args.tag:
+        assert args.arch and args.shape and args.tag, "--cfg/--settings need --arch --shape --tag"
+        row = lower_cell(args.arch, args.shape, args.multi_pod,
+                         cfg_overrides=cfg_o, settings_overrides=set_o,
+                         mesh_shape=args.mesh)
+        row["experiment"] = {"tag": args.tag, "cfg": cfg_o, "settings": set_o}
+        os.makedirs(args.out, exist_ok=True)
+        mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+        path = os.path.join(
+            args.out, f"{mesh_name}__{args.arch}__{args.shape}__{args.tag}.json"
+        )
+        with open(path, "w") as f:
+            json.dump(row, f, indent=1, default=str)
+        return
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else []
+    run_cells(archs, shapes, args.multi_pod, args.out)
+
+
+if __name__ == "__main__":
+    main()

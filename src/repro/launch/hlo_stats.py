@@ -1,0 +1,322 @@
+"""Loop-aware cost extraction from optimized (SPMD-partitioned) HLO text.
+
+``compiled.cost_analysis()`` visits every while-loop body ONCE, so with
+scan-over-layers (and microbatch / chunk scans) it understates FLOPs and
+bytes by the trip counts.  This parser rebuilds the totals:
+
+  * computations are parsed into symbol tables (instr name → shape);
+  * ``while`` ops carry ``known_trip_count {n:"L"}`` in backend_config —
+    bodies are scaled by L (recursively; fusions/calls recurse at ×1);
+  * FLOPs: 2 · numel(result) · prod(contracted dims) per dot;
+  * HBM bytes: Σ over *top-level* instructions of result + operand bytes
+    (fusion interiors are never materialized; parameters/GTE/tuple/bitcast
+    and other no-traffic ops are skipped);
+  * collective link-bytes per chip with ring conventions (see roofline.py).
+
+Shapes in partitioned HLO are per-device, so every total is per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT )?%?([\w\.\-]+) = (.*)$")
+_OP_RE = re.compile(r"([a-z][a-z0-9\-]*(?:-start|-done)?)\(")
+_TRIP_RE = re.compile(r'known_trip_count[\"\\:{\s]+n[\"\\:\s]+(\d+)')
+_CALL_RE = re.compile(r"(?:calls|body|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "bitcast-convert", "copy", "copy-start", "copy-done", "after-all",
+    "partition-id", "replica-id", "iota", "reshape",
+}
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+
+def _shape_list(text: str) -> List[Tuple[str, int]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in _shape_list(text))
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_text: str
+    args_text: str
+    attrs_text: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]  # instr name → result text (shape spec)
+    root: Optional[str] = None
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Costs", scale: float = 1.0) -> None:
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.collective_bytes += other.collective_bytes * scale
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] = self.coll_by_kind.get(k, 0.0) + v * scale
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + int(v * scale)
+
+
+def _group_size(attrs: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(attrs)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _collective_link_bytes(instr: Instr, comp: Computation, n_devices: int) -> Tuple[str, float]:
+    kind = instr.op.replace("-start", "")
+    n = max(2, _group_size(instr.attrs_text + instr.args_text, n_devices))
+    result_bytes = _bytes_of(instr.result_text)
+    operand_bytes = 0
+    for om in _OPERAND_RE.finditer(instr.args_text):
+        operand_bytes += _bytes_of(comp.shapes.get(om.group(1), ""))
+    if kind == "all-reduce":
+        link = 2.0 * (n - 1) / n * max(result_bytes, operand_bytes)
+    elif kind == "all-gather":
+        link = (n - 1) / n * result_bytes
+    elif kind == "reduce-scatter":
+        link = (n - 1) / n * max(operand_bytes, result_bytes * n)
+    elif kind == "all-to-all":
+        link = (n - 1) / (n * n) * max(result_bytes, operand_bytes)
+    else:  # collective-permute
+        link = result_bytes
+    return kind, link
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    result = _shape_list(instr.result_text)
+    if not result:
+        return 0.0
+    numel = sum(n for _, n in result)
+    contract = 1
+    m = _LHS_CONTRACT_RE.search(instr.attrs_text)
+    operands = _OPERAND_RE.findall(instr.args_text)
+    if m and operands:
+        lhs_text = comp.shapes.get(operands[0], "")
+        sm = _SHAPE_RE.search(lhs_text)
+        if sm and sm.group(2):
+            dims = [int(d) for d in sm.group(2).split(",")]
+            for di in m.group(1).split(","):
+                if di != "" and int(di) < len(dims):
+                    contract *= dims[int(di)]
+    return 2.0 * numel * contract
+
+
+class HloCost:
+    def __init__(self, text: str, n_devices: int):
+        self.comps, self.entry = {}, None
+        comps: Dict[str, Computation] = {}
+        # parse_module inlined to also capture entry
+        current = None
+        for raw in text.splitlines():
+            if raw and not raw[0].isspace() and "{" in raw and "(" in raw:
+                header = raw.strip()
+                is_entry = header.startswith("ENTRY")
+                name = header.split("(", 1)[0].replace("ENTRY", "").strip().lstrip("%").rstrip()
+                current = Computation(name=name, instrs=[], shapes={})
+                comps[name] = current
+                if is_entry:
+                    self.entry = name
+                continue
+            if raw.startswith("}"):
+                current = None
+                continue
+            if current is None:
+                continue
+            m = _INSTR_RE.match(raw)
+            if not m:
+                continue
+            iname, rest = m.group(1), m.group(2)
+            om = _OP_RE.search(rest)
+            if not om:
+                continue
+            op = om.group(1)
+            result_text = rest[: om.start()]
+            after = rest[om.end():]
+            depth, idx = 1, 0
+            for idx, ch in enumerate(after):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            current.instrs.append(
+                Instr(name=iname, op=op, result_text=result_text,
+                      args_text=after[:idx], attrs_text=after[idx + 1:], line=rest)
+            )
+            current.shapes[iname] = result_text
+            if "ROOT " in raw:
+                current.root = iname
+        self.comps = comps
+        self.n_devices = n_devices
+        self._memo: Dict[str, Costs] = {}
+
+    def total(self) -> Costs:
+        if self.entry is None:
+            return Costs()
+        return self._visit(self.entry, count_bytes=True)
+
+    def _visit(self, comp_name: str, count_bytes: bool) -> Costs:
+        """count_bytes=False inside fused computations: interiors are never
+        materialized, so only flops/collectives count there."""
+        key = (comp_name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Costs()  # cycle guard
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return self._memo[key]
+        total = Costs()
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                trips = 1
+                tm = _TRIP_RE.search(ins.attrs_text)
+                if tm:
+                    trips = int(tm.group(1))
+                bm = _CALL_RE.search(ins.attrs_text)
+                if bm:
+                    total.add(self._visit(bm.group(1), count_bytes), scale=trips)
+                cm = _COND_RE.search(ins.attrs_text)
+                if cm:
+                    total.add(self._visit(cm.group(1), False), scale=trips)
+                continue
+            if op in ("fusion", "call", "custom-call", "map", "reduce",
+                      "reduce-window", "sort", "scatter", "select-and-scatter",
+                      "conditional"):
+                bm = _CALL_RE.search(ins.attrs_text)
+                if bm:
+                    total.add(self._visit(bm.group(1), False))
+            if op == "dot":
+                total.flops += _dot_flops(ins, comp)
+            if op in _COLLECTIVES or op.replace("-start", "") in _COLLECTIVES:
+                if op.endswith("-done"):
+                    continue
+                kind, link = _collective_link_bytes(ins, comp, self.n_devices)
+                total.collective_bytes += link
+                total.coll_by_kind[kind] = total.coll_by_kind.get(kind, 0.0) + link
+                total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
+                if count_bytes:
+                    total.bytes += _bytes_of(ins.result_text)
+                continue
+            if op in _NO_TRAFFIC or op.endswith("-done"):
+                continue
+            if count_bytes:
+                operands = _OPERAND_RE.findall(ins.args_text)
+                if op in ("dynamic-slice", "slice", "gather"):
+                    # in-place views: traffic = slice read + write, not buffer
+                    tb = 2 * _bytes_of(ins.result_text)
+                elif op == "dynamic-update-slice":
+                    upd = comp.shapes.get(operands[1], "") if len(operands) > 1 else ""
+                    tb = 2 * _bytes_of(upd)
+                elif op == "scatter":
+                    upd = comp.shapes.get(operands[-1], "") if operands else ""
+                    tb = 2 * _bytes_of(upd) + _bytes_of(ins.result_text)
+                elif op == "fusion":
+                    tb = self._fusion_traffic(ins, comp)
+                else:
+                    # HBM traffic: result + named operands (top-level buffers)
+                    tb = _bytes_of(ins.result_text)
+                    for name in operands:
+                        tb += _bytes_of(comp.shapes.get(name, ""))
+                total.bytes += tb
+        self._memo[key] = total
+        return total
+
+    def _fusion_traffic(self, ins: Instr, comp: Computation) -> float:
+        """HBM traffic of a fusion call site, accounting for operands that
+        the fused computation only *slices* (scan xs reads) or updates
+        in place (scan ys / stacked-activation DUS roots)."""
+        operands = _OPERAND_RE.findall(ins.args_text)
+        bm = _CALL_RE.search(ins.attrs_text)
+        called = self.comps.get(bm.group(1)) if bm else None
+        if called is None:
+            tb = _bytes_of(ins.result_text)
+            for name in operands:
+                tb += _bytes_of(comp.shapes.get(name, ""))
+            return tb
+        params: Dict[int, str] = {}
+        for pi in called.instrs:
+            if pi.op == "parameter":
+                try:
+                    params[int(pi.args_text.strip() or "0")] = pi.name
+                except ValueError:
+                    pass
+        root = next((i for i in called.instrs if i.name == called.root), None)
+        if root is not None and root.op == "dynamic-update-slice":
+            upd_ops = _OPERAND_RE.findall(root.args_text)
+            upd = called.shapes.get(upd_ops[1], "") if len(upd_ops) > 1 else ""
+            tb = 2.0 * _bytes_of(upd)  # write slice (+read-modify)
+        else:
+            tb = float(_bytes_of(ins.result_text))
+        for i, name in enumerate(operands):
+            pname = params.get(i)
+            full = _bytes_of(comp.shapes.get(name, ""))
+            if pname is None:
+                tb += full
+                continue
+            pat = re.compile(rf"%{re.escape(pname)}\b")
+            users = [u for u in called.instrs if pat.search(u.args_text)]
+            if users and all(u.op in ("dynamic-slice", "slice") for u in users):
+                tb += sum(_bytes_of(u.result_text) for u in users)
+            elif (
+                root is not None
+                and root.op == "dynamic-update-slice"
+                and users == [root]
+                and _OPERAND_RE.findall(root.args_text)[:1] == [pname]
+            ):
+                tb += 0.0  # aliased in-place destination buffer
+            else:
+                tb += full
+        return tb

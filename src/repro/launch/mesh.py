@@ -1,0 +1,27 @@
+"""Production mesh factory.  A FUNCTION, not a module constant — importing
+this module never touches jax device state (smoke tests see 1 device; only
+dryrun.py forces 512 host-platform devices)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: 16×16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: 'data' carries DP+FSDP (and the expert axis of MoE layers),
+    'model' carries TP/SP, 'pod' is pure DP across the DCN.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_dev_mesh(data: int = 1, model: int = 1):
+    """Small mesh for tests on whatever devices exist."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

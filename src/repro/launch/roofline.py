@@ -1,0 +1,235 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips · peak_FLOP/s)
+    memory     = HLO_bytes / (chips · HBM_bw)
+    collective = Σ per-op link-bytes / link_bw        (per chip)
+
+``cost_analysis()`` provides FLOPs and bytes.  Collective bytes are parsed
+from the optimized HLO: for each all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute we take operand/result sizes and apply the
+standard ring-cost conventions *per participating chip*:
+
+    all-reduce        2·(n−1)/n · B        (B = full tensor bytes)
+    all-gather        (n−1)/n · B_result
+    reduce-scatter    (n−1)/n · B_operand
+    all-to-all        (n−1)/n² · B ≈ B/n   (each chip keeps 1/n)
+    collective-permute B                   (one hop)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the assignment).  Cross-pod (DCN) bytes are reported separately
+when replica groups span pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+DCN_BW = 25e9                # bytes/s / host across pods (assumption, noted)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_REPL_RE = re.compile(r"replica_groups=\{(.*?)\}")
+_REPL_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _parse_shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in ``text``."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _REPL_IOTA_RE.search(line)
+    if m:  # iota format [groups,size]
+        return int(m.group(2))
+    m = _REPL_RE.search(line)
+    if m:
+        body = m.group(1)
+        first = body.split("}", 1)[0].strip("{} ")
+        if first:
+            return len(first.split(","))
+    return total_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    #: per-chip link bytes by op kind
+    by_kind: Dict[str, float]
+    #: number of collective ops by kind
+    counts: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.by_kind.values())
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    by_kind: Dict[str, float] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match op instructions like: %x = bf16[..] all-reduce(...)
+        kind = None
+        for k in _COLLECTIVES:
+            if re.search(rf"= ?\S* {k}\(", s) or re.search(rf"= {k}\(", s) or (
+                f" {k}(" in s and "=" in s.split(f" {k}(")[0]
+            ):
+                kind = k
+                break
+        if kind is None or s.startswith("//"):
+            continue
+        if f"{kind}-start" in s or f"{kind}-done" in s:
+            # async pair: count the -start only (has the shapes)
+            if f"{kind}-done" in s:
+                continue
+        lhs = s.split("=", 1)[0] + "= "
+        result_part = s.split("=", 1)[1]
+        result_bytes = _parse_shape_bytes(result_part.split("(", 1)[0])
+        operand_bytes = _parse_shape_bytes(result_part.split("(", 1)[1].split(")", 1)[0]) \
+            if "(" in result_part else 0
+        n = max(2, _group_size(s, total_devices))
+        if kind == "all-reduce":
+            link = 2.0 * (n - 1) / n * result_bytes
+        elif kind == "all-gather":
+            link = (n - 1) / n * result_bytes
+        elif kind == "reduce-scatter":
+            link = (n - 1) / n * operand_bytes
+        elif kind == "all-to-all":
+            link = (n - 1) / (n * n) * max(result_bytes, operand_bytes)
+        else:  # collective-permute
+            link = result_bytes
+        by_kind[kind] = by_kind.get(kind, 0.0) + link
+        counts[kind] = counts.get(kind, 0) + 1
+    return CollectiveStats(by_kind=by_kind, counts=counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All flop/byte figures are PER CHIP (partitioned-HLO shapes are local;
+    the loop-aware parser in hlo_stats.py scales while bodies by trip count).
+    """
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # per chip, loop-scaled
+    hlo_bytes: float              # per chip, loop-scaled HBM traffic estimate
+    collective_bytes: float       # per chip link bytes, loop-scaled
+    collective_by_kind: Dict[str, float]
+    collective_counts: Dict[str, int]
+    model_flops: float            # global 6·N·D-style useful flops
+    bytes_per_device: Optional[float]
+    raw_cost_analysis: Optional[Dict[str, float]] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute-term share of the critical path — the score we hillclimb."""
+        total = max(self.t_compute, self.t_memory, self.t_collective)
+        return self.t_compute / total if total else 0.0
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_by_kind": self.collective_by_kind,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE); decode counts one token/step."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def build(arch: str, shape, mesh_name: str, chips: int,
+          cost: Dict[str, float], hlo_text: str, cfg,
+          bytes_per_device: Optional[float]) -> Roofline:
+    from .hlo_stats import HloCost
+
+    totals = HloCost(hlo_text, chips).total()
+    return Roofline(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops=totals.flops,
+        hlo_bytes=totals.bytes,
+        collective_bytes=totals.collective_bytes,
+        collective_by_kind=totals.coll_by_kind,
+        collective_counts=totals.coll_counts,
+        model_flops=model_flops_for(cfg, shape),
+        bytes_per_device=bytes_per_device,
+        raw_cost_analysis={
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(
+                cost.get("bytes accessed", cost.get("bytes_accessed", 0.0))
+            ),
+        },
+    )

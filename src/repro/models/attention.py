@@ -1,0 +1,256 @@
+"""GQA/MQA attention with RoPE, KV cache, cross-attention, flash-kernel path.
+
+Reference math is pure jnp (the oracle for the Pallas flash kernel and the
+path used by CPU smoke tests AND the dry run — kernel lowering targets TPU).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain, mesh_axes
+from .layers import ParamDef, apply_rope
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stack decode cache.  k/v: (L, B, S_max, G, hd)."""
+
+    k: jax.Array
+    v: jax.Array
+    #: current length (tokens already written), int32 scalar
+    length: jax.Array
+
+
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamDef]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    flat = "qkv_flat" if cfg.attn_tp else None
+    defs = {
+        "wq": ParamDef((d, nq), ("embed", flat)),
+        "wk": ParamDef((d, nkv), ("embed", flat)),
+        "wv": ParamDef((d, nkv), ("embed", flat)),
+        "wo": ParamDef((nq, d), (flat, "embed")),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = ParamDef((nq,), (flat,), init="zeros")
+        defs["bk"] = ParamDef((nkv,), (flat,), init="zeros")
+        defs["bv"] = ParamDef((nkv,), (flat,), init="zeros")
+    return defs
+
+
+def _heads_logical(cfg: ModelConfig, kv: bool = False) -> Optional[str]:
+    """Shard the head axis only when divisible by the TP degree."""
+    if not cfg.attn_tp:
+        return None
+    try:
+        tp = dict(zip(mesh_axes(), jax.sharding.get_abstract_mesh().shape.values())).get(
+            "model", 1
+        )
+    except Exception:
+        tp = 1
+    heads = cfg.n_kv_heads if kv else cfg.n_heads
+    return "heads" if tp > 1 and heads % tp == 0 else None
+
+
+def _project_qkv(x, p, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if positions is not None:  # rope (None for e.g. encoder abs-pos variants)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", None, _heads_logical(cfg), None)
+    k = constrain(k, "batch", None, _heads_logical(cfg, kv=True), None)
+    v = constrain(v, "batch", None, _heads_logical(cfg, kv=True), None)
+    return q, k, v
+
+
+def _sdpa_reference(q, k, v, causal: bool, q_offset=0, kv_len: Optional[jax.Array] = None):
+    """Grouped scaled-dot-product attention, fp32 softmax.
+
+    q: (B, Sq, H, hd);  k/v: (B, Skv, G, hd).  ``q_offset`` places queries at
+    absolute positions offset..offset+Sq (decode).  ``kv_len`` masks the
+    valid cache prefix.
+    """
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    rep = h // g
+    qg = q.reshape(b, sq, g, rep, hd)
+    scores = jnp.einsum("bsgrh,btgh->bgrst", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    skv = k.shape[1]
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(skv)[None, :]
+        mask = kpos <= qpos                                   # (Sq, Skv)
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    if kv_len is not None:
+        valid = jnp.arange(skv) < kv_len                      # (Skv,)
+        scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bgrst,btgh->bsgrh", w, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_blocked(q, k, v, causal: bool, block_q: int = 512, block_k: int = 1024):
+    """Flash-algorithm attention in pure jnp (lax.scan over KV blocks with
+    online softmax, remat'd block body) — the XLA-path equivalent of the
+    Pallas kernel: O(Bq·Bk) live intermediates instead of O(S²) HBM tensors,
+    in forward AND backward (the per-block jax.checkpoint recomputes scores).
+    Used by train/prefill when cfg.attention_impl == "blocked"."""
+    b, sq, h, hd = q.shape
+    skv, g = k.shape[1], k.shape[2]
+    rep = h // g
+    bq = min(block_q, sq)
+    while sq % bq:
+        bq //= 2
+    bk = min(block_k, skv)
+    while skv % bk:
+        bk //= 2
+    nq, nk = sq // bq, skv // bk
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+    qb = q.reshape(b, nq, bq, h, hd).transpose(1, 0, 2, 3, 4)       # (nq,B,bq,H,hd)
+    kb = k.reshape(b, nk, bk, g, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, bk, g, hd).transpose(1, 0, 2, 3, 4)
+
+    def kv_step(carry, inp):
+        m, l, acc, qi, q_blk = carry[0], carry[1], carry[2], carry[3], carry[4]
+        kj, k_blk, v_blk = inp
+        kf = jnp.repeat(k_blk, rep, axis=2)                          # (B,bk,H,hd)
+        vf = jnp.repeat(v_blk, rep, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q_blk.astype(jnp.float32),
+                       kf.astype(jnp.float32)) * scale
+        if causal:
+            qpos = qi * bq + jnp.arange(bq)
+            kpos = kj * bk + jnp.arange(bk)
+            s = jnp.where((kpos[None, :] <= qpos[:, None])[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vf.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new, qi, q_blk), None
+
+    kv_step = jax.checkpoint(kv_step)
+
+    def q_block(_, inp):
+        qi, q_blk = inp
+        init = (
+            jnp.full((b, h, bq), -1e30, jnp.float32),
+            jnp.zeros((b, h, bq), jnp.float32),
+            jnp.zeros((b, h, bq, hd), jnp.float32),
+            qi,
+            q_blk,
+        )
+        (m, l, acc, _, _), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kb, vb)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]                 # (B,H,bq,hd)
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)       # (B,bq,H,hd)
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))      # (nq,B,bq,H,hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def attention(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    positions: jax.Array,
+    causal: bool = True,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    b, s, d = x.shape
+    q, k, v = _project_qkv(x, p, cfg, positions)
+    if cfg.attention_impl == "flash" and causal:
+        from repro.kernels.flash_attention import flash_attention
+
+        out = flash_attention(q, k, v, causal=True)
+    elif cfg.attention_impl == "blocked":
+        out = _sdpa_blocked(q, k, v, causal=causal)
+    else:
+        out = _sdpa_reference(q, k, v, causal=causal)
+    out = out.reshape(b, s, cfg.n_heads * cfg.resolved_head_dim)
+    y = out @ p["wo"]
+    return constrain(y, "batch", None, None)
+
+
+def attention_decode(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    k_cache: jax.Array,       # (B, S_max, G, hd)
+    v_cache: jax.Array,
+    length: jax.Array,        # () int32 — tokens already in cache
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode: append K/V at ``length``, attend over the prefix."""
+    from repro.sharding import decode_kv_axes
+
+    b = x.shape[0]
+    q, k, v = _project_qkv(x, p, cfg, positions=jnp.full((b, 1), length))
+    k_cache = jax.lax.dynamic_update_slice(
+        k_cache, k.astype(k_cache.dtype), (0, length, 0, 0)
+    )
+    v_cache = jax.lax.dynamic_update_slice(
+        v_cache, v.astype(v_cache.dtype), (0, length, 0, 0)
+    )
+    # Pin q and the cache to ONE layout (heads xor head_dim on 'model') so
+    # the scores contraction partial-sums instead of SPMD resharding the
+    # whole cache every layer (§Perf E: 80% of decode HBM traffic).
+    g_ax, hd_ax = decode_kv_axes(cfg.n_kv_heads, cfg.resolved_head_dim)
+    k_cache = constrain(k_cache, "batch", None, g_ax, hd_ax)
+    v_cache = constrain(v_cache, "batch", None, g_ax, hd_ax)
+    q = constrain(q, "batch", None, None if g_ax else _heads_logical(cfg), hd_ax)
+    out = _sdpa_reference(
+        q, k_cache, v_cache, causal=False, kv_len=length + 1
+    )
+    y = out.reshape(b, 1, -1) @ p["wo"]
+    return constrain(y, "batch", None, None), k_cache, v_cache
+
+
+def cross_attention(
+    x: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    enc_k: jax.Array,          # (B, S_enc, G, hd) — precomputed from encoder
+    enc_v: jax.Array,
+) -> jax.Array:
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, hd)
+    q = constrain(q, "batch", None, _heads_logical(cfg), None)
+    out = _sdpa_reference(q, enc_k, enc_v, causal=False)
+    y = out.reshape(b, s, -1) @ p["wo"]
+    return constrain(y, "batch", None, None)
+
+
+def encode_cross_kv(enc_out: jax.Array, p: Dict[str, jax.Array], cfg: ModelConfig):
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    k = (enc_out @ p["wk"]).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(b, s, cfg.n_kv_heads, hd)
+    return k, v
+
+
+def init_kv_cache(
+    cfg: ModelConfig, n_layers: int, batch: int, max_len: int, dtype=jnp.bfloat16
+) -> KVCache:
+    hd = cfg.resolved_head_dim
+    shape = (n_layers, batch, max_len, cfg.n_kv_heads, hd)
+    return KVCache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        length=jnp.zeros((), jnp.int32),
+    )

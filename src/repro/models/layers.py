@@ -1,0 +1,154 @@
+"""Shared layer machinery: parameter definition trees, norms, RoPE, MLPs.
+
+Parameters are plain nested dicts of jnp arrays.  Every parameter is declared
+once as a ``ParamDef`` carrying shape, init and *logical sharding axes*; the
+same tree therefore yields (a) materialized params, (b) PartitionSpecs for
+jit boundaries, (c) shape-only ShapeDtypeStructs for the dry run — keeping
+init and sharding impossible to de-synchronize.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import constrain, resolve
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed | ssm_dt | ssm_alog
+    scale: float = 1.0            # fan-in style divisor applied to normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(d: ParamDef, key, dtype) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "ssm_dt":  # dt bias ~ log-uniform in [1e-3, 1e-1]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1e-3, 1e-1)
+        inv = u + jnp.log(-jnp.expm1(-u))  # inverse softplus
+        return inv.astype(dtype)
+    if d.init == "ssm_alog":  # A in [1, 16], stored as log
+        a = jax.random.uniform(key, d.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(a).astype(dtype)
+    std = d.scale / np.sqrt(max(1, d.shape[0] if d.init == "normal" else 1))
+    if d.init == "embed":
+        std = d.scale
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(defs: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    """ParamDef tree → param tree (deterministic per-leaf keys by path)."""
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(defs, is_leaf=is_def)[0]
+    flat = {}
+    for path, d in leaves_with_path:
+        path_str = jax.tree_util.keystr(path)
+        leaf_key = jax.random.fold_in(key, hash(path_str) % (2**31))
+        flat[path_str] = _init_leaf(d, leaf_key, dtype)
+    treedef = jax.tree_util.tree_structure(defs, is_leaf=is_def)
+    return jax.tree_util.tree_unflatten(
+        treedef, [flat[jax.tree_util.keystr(p)] for p, _ in leaves_with_path]
+    )
+
+
+def pspec_tree(defs: Any):
+    """ParamDef tree → PartitionSpec tree (resolved against current mesh)."""
+    return jax.tree.map(lambda d: resolve(d.logical), defs, is_leaf=is_def)
+
+
+def shape_tree(defs: Any, dtype=jnp.float32):
+    """ParamDef tree → ShapeDtypeStruct tree (dry run, no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=is_def
+    )
+
+
+def stack_defs(defs: Any, n: int) -> Any:
+    """Prepend a layer axis (for scan-over-layers stacked parameters)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (None,) + d.logical, d.init, d.scale),
+        defs,
+        is_leaf=is_def,
+    )
+
+
+def param_count(tree: Any) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+# ---------------------------------------------------------------------------
+# Norms / rotary / MLP
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def glu_mlp(x: jax.Array, p: Dict[str, jax.Array], kind: str) -> jax.Array:
+    """SwiGLU / GeGLU feed-forward with TP constraints."""
+    act = jax.nn.silu if kind == "swiglu" else jax.nn.gelu
+    gate = x @ p["w_gate"]
+    up = x @ p["w_up"]
+    h = act(gate) * up
+    h = constrain(h, "batch", None, "ff")
+    return h @ p["w_down"]
+
+
+def mlp_defs(d_model: int, d_ff: int) -> Dict[str, ParamDef]:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("embed", "ff")),
+        "w_up": ParamDef((d_model, d_ff), ("embed", "ff")),
+        "w_down": ParamDef((d_ff, d_model), ("ff", "embed")),
+    }
+
+
+def norm_defs(d_model: int) -> ParamDef:
+    return ParamDef((d_model,), ("norm",), init="zeros")
+
+
+def cross_entropy_loss(
+    logits: jax.Array, labels: jax.Array, z_loss: float = 1e-4
+) -> jax.Array:
+    """Token-mean CE in fp32 with optional z-loss (stabilizes large vocabs)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    true = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - true
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

@@ -1,0 +1,586 @@
+"""Model assembly: parameter trees + train/prefill/decode forwards for all
+six assigned families (dense / moe / vlm / audio enc-dec / xlstm / hybrid).
+
+Layer stacks run under ``lax.scan`` with stacked parameters (compact HLO at
+512-way SPMD; MaxText-style), except xLSTM whose 12 heterogeneous blocks are
+unrolled.  Remat policy per config.  All forwards are mesh-agnostic: sharding
+enters only through ``repro.sharding.constrain`` and the ParamDef logical
+axes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from . import xlstm as xl
+from .attention import (
+    attn_defs,
+    attention,
+    attention_decode,
+    cross_attention,
+    encode_cross_kv,
+)
+from .layers import (
+    ParamDef,
+    cross_entropy_loss,
+    glu_mlp,
+    materialize,
+    mlp_defs,
+    norm_defs,
+    pspec_tree,
+    rms_norm,
+    shape_tree,
+    stack_defs,
+)
+from .moe import moe_defs, moe_ffn
+from .ssm import (
+    MambaState,
+    mamba_decode_step,
+    mamba_defs,
+    mamba_forward,
+    mamba_init_state,
+)
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+def _decoder_layer_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, Any]:
+    defs: Dict[str, Any] = {
+        "attn_norm": norm_defs(cfg.d_model),
+        "attn": attn_defs(cfg),
+    }
+    if cross:
+        defs["cross_norm"] = norm_defs(cfg.d_model)
+        defs["cross"] = attn_defs(cfg, cross=True)
+    defs["mlp_norm"] = norm_defs(cfg.d_model)
+    if cfg.is_moe:
+        defs["moe"] = moe_defs(cfg)
+        if cfg.moe_dense_residual:
+            defs["dense_mlp"] = mlp_defs(cfg.d_model, cfg.d_ff)
+    elif cfg.mlp_type != "none":
+        defs["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff)
+    return defs
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_padded
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), init="embed", scale=0.02),
+        "final_norm": norm_defs(d),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"), scale=1.0)
+
+    if cfg.block_pattern == "attention":
+        defs["layers"] = stack_defs(
+            _decoder_layer_defs(cfg, cross=cfg.encoder_decoder), cfg.n_layers
+        )
+        if cfg.encoder_decoder:
+            enc_layer = {
+                "attn_norm": norm_defs(d),
+                "attn": attn_defs(cfg),
+                "mlp_norm": norm_defs(d),
+                "mlp": mlp_defs(d, cfg.d_ff),
+            }
+            defs["encoder"] = {
+                "layers": stack_defs(enc_layer, cfg.n_encoder_layers),
+                "final_norm": norm_defs(d),
+            }
+    elif cfg.block_pattern == "zamba_hybrid":
+        groups, tail = divmod(cfg.n_layers, cfg.shared_attn_every)
+        defs["mamba_groups"] = stack_defs(
+            stack_defs(mamba_defs(cfg), cfg.shared_attn_every), groups
+        )
+        if tail:
+            defs["mamba_tail"] = stack_defs(mamba_defs(cfg), tail)
+        defs["shared"] = {
+            "attn_norm": norm_defs(d),
+            "attn": attn_defs(cfg),
+            "mlp_norm": norm_defs(d),
+            "mlp": mlp_defs(d, cfg.d_ff),
+        }
+    elif cfg.block_pattern == "xlstm":
+        layers: Dict[str, Any] = {}
+        for i in range(cfg.n_layers):
+            if (i % cfg.slstm_every) == cfg.slstm_every - 1:
+                layers[f"slstm_{i}"] = xl.slstm_defs(cfg)
+            else:
+                layers[f"mlstm_{i}"] = xl.mlstm_defs(cfg)
+        defs["layers"] = layers
+    else:
+        raise ValueError(cfg.block_pattern)
+    return defs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    dtype = jnp.dtype(cfg.params_dtype)
+    return materialize(model_defs(cfg), key, dtype)
+
+
+def param_pspecs(cfg: ModelConfig):
+    return pspec_tree(model_defs(cfg))
+
+
+def param_shapes(cfg: ModelConfig):
+    return shape_tree(model_defs(cfg), jnp.dtype(cfg.params_dtype))
+
+
+# ---------------------------------------------------------------------------
+# Block applications
+# ---------------------------------------------------------------------------
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def _attn_layer(h, lp, cfg: ModelConfig, positions, causal=True, enc_out=None):
+    """One transformer block (optionally with cross-attention)."""
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.sequence_parallel:
+        # residual stream lives seq-sharded between blocks (Megatron-SP)
+        h = constrain(h, "batch", "seq_shard", None)
+    a = attention(rms_norm(h, lp["attn_norm"], cfg.norm_eps), lp["attn"], cfg,
+                  positions, causal=causal)
+    h = h + a
+    if enc_out is not None:
+        ek, ev = encode_cross_kv(enc_out, lp["cross"], cfg)
+        c = cross_attention(rms_norm(h, lp["cross_norm"], cfg.norm_eps),
+                            lp["cross"], cfg, ek, ev)
+        h = h + c
+    hn = rms_norm(h, lp["mlp_norm"], cfg.norm_eps)
+    if cfg.is_moe:
+        y, aux = moe_ffn(hn, lp["moe"], cfg)
+        if cfg.moe_dense_residual:
+            y = y + glu_mlp(hn, lp["dense_mlp"], cfg.mlp_type)
+    elif cfg.mlp_type != "none":
+        y = glu_mlp(hn, lp["mlp"], cfg.mlp_type)
+    else:
+        y = jnp.zeros_like(h)
+    return h + y, aux
+
+
+def _decoder_stack(h, params, cfg: ModelConfig, positions, enc_out=None):
+    """scan over stacked decoder layers.  Returns (h, aux_loss_sum)."""
+
+    def body(carry, lp):
+        hh, aux = carry
+        hh, a = _attn_layer(hh, lp, cfg, positions, causal=True, enc_out=enc_out)
+        return (hh, aux + a), None
+
+    body = _maybe_remat(body, cfg)
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), params["layers"])
+    return h, aux
+
+
+def _encoder_stack(enc_in, params, cfg: ModelConfig):
+    pos = jnp.broadcast_to(jnp.arange(enc_in.shape[1]), enc_in.shape[:2])
+
+    def body(h, lp):
+        h, _ = _attn_layer(h, lp, cfg, pos, causal=False)
+        return h, None
+
+    body = _maybe_remat(body, cfg)
+    h, _ = jax.lax.scan(body, enc_in, params["encoder"]["layers"])
+    return rms_norm(h, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _zamba_stack(h, params, cfg: ModelConfig, positions):
+    shared = params["shared"]
+
+    def group_body(carry, gp):
+        hh = carry
+        for i in range(cfg.shared_attn_every):
+            lp = jax.tree.map(lambda x: x[i], gp)
+            hh = hh + mamba_forward(hh, lp, cfg)
+        hh, _ = _attn_layer(hh, shared, cfg, positions, causal=True)
+        return hh, None
+
+    body = _maybe_remat(group_body, cfg)
+    h, _ = jax.lax.scan(body, h, params["mamba_groups"])
+    if "mamba_tail" in params:
+        tail = params["mamba_tail"]
+        n_tail = jax.tree.leaves(tail)[0].shape[0]
+        for i in range(n_tail):
+            lp = jax.tree.map(lambda x: x[i], tail)
+            h = h + mamba_forward(h, lp, cfg)
+    return h, jnp.zeros((), jnp.float32)
+
+
+def _xlstm_stack(h, params, cfg: ModelConfig):
+    for i in range(cfg.n_layers):
+        if (i % cfg.slstm_every) == cfg.slstm_every - 1:
+            h = h + xl.slstm_forward(h, params["layers"][f"slstm_{i}"], cfg)
+        else:
+            h = h + xl.mlstm_forward(h, params["layers"][f"mlstm_{i}"], cfg)
+    return h, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Forwards
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, cfg: ModelConfig, tokens):
+    e = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    return constrain(e, "batch", None, None)
+
+
+def _logits(params, cfg: ModelConfig, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ w.astype(h.dtype)
+    return constrain(logits, "batch", None, "vocab")
+
+
+def _cast(params, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    return jax.tree.map(lambda x: x.astype(dt) if x.dtype == jnp.float32 else x, params)
+
+
+def _forward_hidden(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    """Shared backbone: embeddings (+stub frontends) → block stack → final
+    norm.  Returns (h over text positions, aux loss)."""
+    tokens = batch["tokens"]
+    b, s_text = tokens.shape
+    h = _embed(params, cfg, tokens)
+
+    enc_out = None
+    if cfg.modality == "vision_stub":
+        prefix = batch["patch_embeds"].astype(h.dtype)
+        h = jnp.concatenate([constrain(prefix, "batch", None, None), h], axis=1)
+    if cfg.encoder_decoder:
+        enc_in = constrain(batch["frame_embeds"].astype(h.dtype), "batch", None, None)
+        enc_out = _encoder_stack(enc_in, params, cfg)
+
+    s_total = h.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s_total), (b, s_total))
+
+    if cfg.block_pattern == "attention":
+        h, aux = _decoder_stack(h, params, cfg, positions, enc_out=enc_out)
+    elif cfg.block_pattern == "zamba_hybrid":
+        h, aux = _zamba_stack(h, params, cfg, positions)
+    else:
+        h, aux = _xlstm_stack(h, params, cfg)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.modality == "vision_stub":  # text positions only
+        h = h[:, -s_text:]
+    return h, aux
+
+
+def forward_train(cfg: ModelConfig, params, batch: Dict[str, jax.Array]):
+    """Causal-LM (or seq2seq) loss.  batch keys per family:
+    tokens/labels (+patch_embeds | frame_embeds)."""
+    params = _cast(params, cfg)
+    h, aux = _forward_hidden(cfg, params, batch)
+    logits = _logits(params, cfg, h)
+    loss = cross_entropy_loss(logits, batch["labels"])
+    aux_total = AUX_LOSS_WEIGHT * aux
+    metrics = {"lm_loss": loss, "aux_loss": aux_total}
+    return loss + aux_total, metrics
+
+
+def forward_logits(
+    cfg: ModelConfig, params, batch: Dict[str, jax.Array], last_only: bool = True
+):
+    """Prefill-style forward: logits (last position by default), no loss."""
+    params = _cast(params, cfg)
+    h, _ = _forward_hidden(cfg, params, batch)
+    if last_only:
+        h = h[:, -1:]
+    return _logits(params, cfg, h)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serving): state containers + one-token step
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    length: jax.Array                                  # () int32
+    kv_k: Optional[jax.Array] = None                   # (L,B,S,G,hd)
+    kv_v: Optional[jax.Array] = None
+    #: per-layer cache layout (serving mode): tuples of L × (B,S,G,hd)
+    kv_layers_k: Optional[Tuple[jax.Array, ...]] = None
+    kv_layers_v: Optional[Tuple[jax.Array, ...]] = None
+    cross_k: Optional[jax.Array] = None                # (L,B,S_enc,G,hd)
+    cross_v: Optional[jax.Array] = None
+    mamba_groups: Optional[Any] = None                 # MambaState stacked (G,K,...)
+    mamba_tail: Optional[Any] = None
+    shared_k: Optional[jax.Array] = None               # (G,B,S,G_kv,hd)
+    shared_v: Optional[jax.Array] = None
+    xlstm: Optional[Tuple] = None
+
+
+def init_decode_state(
+    cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+    enc_len: int = 0,
+) -> DecodeState:
+    hd = cfg.resolved_head_dim
+    g = cfg.n_kv_heads
+    length = jnp.zeros((), jnp.int32)
+    if cfg.block_pattern == "attention":
+        if cfg.decode_cache_layout == "per_layer":
+            per = (batch, max_len, g, hd)
+            state = DecodeState(
+                length=length,
+                kv_layers_k=tuple(jnp.zeros(per, dtype) for _ in range(cfg.n_layers)),
+                kv_layers_v=tuple(jnp.zeros(per, dtype) for _ in range(cfg.n_layers)),
+            )
+            if cfg.encoder_decoder:
+                ck = (cfg.n_layers, batch, enc_len or max_len, g, hd)
+                state = state._replace(
+                    cross_k=jnp.zeros(ck, dtype), cross_v=jnp.zeros(ck, dtype)
+                )
+            return state
+        kv = (cfg.n_layers, batch, max_len, g, hd)
+        state = DecodeState(
+            length=length,
+            kv_k=jnp.zeros(kv, dtype),
+            kv_v=jnp.zeros(kv, dtype),
+        )
+        if cfg.encoder_decoder:
+            ck = (cfg.n_layers, batch, enc_len or max_len, g, hd)
+            state = state._replace(
+                cross_k=jnp.zeros(ck, dtype), cross_v=jnp.zeros(ck, dtype)
+            )
+        return state
+    if cfg.block_pattern == "zamba_hybrid":
+        groups, tail = divmod(cfg.n_layers, cfg.shared_attn_every)
+        one = mamba_init_state(cfg, batch)
+        stack_g = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (groups, cfg.shared_attn_every) + x.shape
+            ),
+            one,
+        )
+        stack_t = (
+            jax.tree.map(lambda x: jnp.broadcast_to(x, (tail,) + x.shape), one)
+            if tail
+            else None
+        )
+        sk = (groups, batch, max_len, g, hd)
+        return DecodeState(
+            length=length,
+            mamba_groups=stack_g,
+            mamba_tail=stack_t,
+            shared_k=jnp.zeros(sk, dtype),
+            shared_v=jnp.zeros(sk, dtype),
+        )
+    if cfg.block_pattern == "xlstm":
+        states = []
+        for i in range(cfg.n_layers):
+            if (i % cfg.slstm_every) == cfg.slstm_every - 1:
+                states.append(xl.slstm_init_state(cfg, batch))
+            else:
+                states.append(xl.mlstm_init_state(cfg, batch))
+        return DecodeState(length=length, xlstm=tuple(states))
+    raise ValueError(cfg.block_pattern)
+
+
+def _shared_attn_decode(h, shared, cfg, k_cache, v_cache, length):
+    a, k_cache, v_cache = attention_decode(
+        rms_norm(h, shared["attn_norm"], cfg.norm_eps), shared["attn"], cfg,
+        k_cache, v_cache, length,
+    )
+    h = h + a
+    hn = rms_norm(h, shared["mlp_norm"], cfg.norm_eps)
+    return h + glu_mlp(hn, shared["mlp"], cfg.mlp_type), k_cache, v_cache
+
+
+def decode_step(cfg: ModelConfig, params, token: jax.Array, state: DecodeState):
+    """token: (B, 1) int32 → (logits (B,1,V), new state)."""
+    params = _cast(params, cfg)
+    b = token.shape[0]
+    h = _embed(params, cfg, token)
+    length = state.length
+
+    if cfg.block_pattern == "attention":
+
+        def body(carry, xs):
+            hh = carry
+            lp, kc, vc, extra = xs
+            a, kc, vc = attention_decode(
+                rms_norm(hh, lp["attn_norm"], cfg.norm_eps), lp["attn"], cfg,
+                kc, vc, length,
+            )
+            hh = hh + a
+            if cfg.encoder_decoder:
+                c = cross_attention(
+                    rms_norm(hh, lp["cross_norm"], cfg.norm_eps), lp["cross"],
+                    cfg, extra[0], extra[1],
+                )
+                hh = hh + c
+            hn = rms_norm(hh, lp["mlp_norm"], cfg.norm_eps)
+            if cfg.is_moe:
+                y, _ = moe_ffn(hn, lp["moe"], cfg)
+                if cfg.moe_dense_residual:
+                    y = y + glu_mlp(hn, lp["dense_mlp"], cfg.mlp_type)
+            elif cfg.mlp_type != "none":
+                y = glu_mlp(hn, lp["mlp"], cfg.mlp_type)
+            else:
+                y = jnp.zeros_like(hh)
+            return hh + y, (kc, vc)
+
+        extra = (
+            (state.cross_k, state.cross_v)
+            if cfg.encoder_decoder
+            else (jnp.zeros((cfg.n_layers,)), jnp.zeros((cfg.n_layers,)))
+        )
+        if state.kv_layers_k is not None:
+            # per-layer cache buffers (serving mode): every DUS has its own
+            # donated buffer — in-place aliasing is structurally guaranteed.
+            new_ks, new_vs = [], []
+            for i in range(cfg.n_layers):
+                xs_i = (
+                    jax.tree.map(lambda t: t[i], params["layers"]),
+                    state.kv_layers_k[i],
+                    state.kv_layers_v[i],
+                    jax.tree.map(lambda t: t[i], extra),
+                )
+                h, (kc, vc) = body(h, xs_i)
+                new_ks.append(kc)
+                new_vs.append(vc)
+            state = state._replace(
+                kv_layers_k=tuple(new_ks), kv_layers_v=tuple(new_vs),
+                length=length + 1,
+            )
+        elif cfg.scan_layers:
+            h, (new_k, new_v) = jax.lax.scan(
+                body, h, (params["layers"], state.kv_k, state.kv_v, extra)
+            )
+        else:
+            # Unrolled decode: a scan-carried KV stack defeats XLA's in-place
+            # DUS aliasing under SPMD (full-cache copy per layer — §Perf E);
+            # straight-line decode graphs alias donated caches reliably.
+            # Decode HLO is small (S lives in the cache), so unrolling is
+            # the production norm for serving.
+            new_k, new_v = state.kv_k, state.kv_v
+            for i in range(cfg.n_layers):
+                xs_i = jax.tree.map(
+                    lambda t: t[i],
+                    (params["layers"], state.kv_k, state.kv_v, extra),
+                )
+                h, (kc, vc) = body(h, xs_i)
+                new_k = jax.lax.dynamic_update_slice_in_dim(new_k, kc[None], i, 0)
+                new_v = jax.lax.dynamic_update_slice_in_dim(new_v, vc[None], i, 0)
+        if state.kv_layers_k is None:
+            state = state._replace(kv_k=new_k, kv_v=new_v, length=length + 1)
+
+    elif cfg.block_pattern == "zamba_hybrid":
+        shared = params["shared"]
+
+        def gbody(carry, xs):
+            hh = carry
+            gp, mstate, kc, vc = xs
+            new_ms = []
+            for i in range(cfg.shared_attn_every):
+                lp = jax.tree.map(lambda x: x[i], gp)
+                ms = jax.tree.map(lambda x: x[i], mstate)
+                y, ms = mamba_decode_step(hh, lp, cfg, MambaState(*ms))
+                hh = hh + y
+                new_ms.append(ms)
+            stacked = jax.tree.map(lambda *xs_: jnp.stack(xs_), *new_ms)
+            hh, kc, vc = _shared_attn_decode(hh, shared, cfg, kc, vc, length)
+            return hh, (stacked, kc, vc)
+
+        h, (new_mg, new_sk, new_sv) = jax.lax.scan(
+            gbody, h,
+            (params["mamba_groups"], state.mamba_groups, state.shared_k, state.shared_v),
+        )
+        new_tail = state.mamba_tail
+        if "mamba_tail" in params:
+            n_tail = jax.tree.leaves(params["mamba_tail"])[0].shape[0]
+            outs = []
+            for i in range(n_tail):
+                lp = jax.tree.map(lambda x: x[i], params["mamba_tail"])
+                ms = jax.tree.map(lambda x: x[i], state.mamba_tail)
+                y, ms = mamba_decode_step(h, lp, cfg, MambaState(*ms))
+                h = h + y
+                outs.append(ms)
+            new_tail = jax.tree.map(lambda *xs_: jnp.stack(xs_), *outs)
+        state = state._replace(
+            mamba_groups=MambaState(*new_mg), mamba_tail=new_tail,
+            shared_k=new_sk, shared_v=new_sv, length=length + 1,
+        )
+
+    else:  # xlstm
+        new_states = []
+        for i in range(cfg.n_layers):
+            st = state.xlstm[i]
+            if (i % cfg.slstm_every) == cfg.slstm_every - 1:
+                y, st = xl.slstm_decode_step(h, params["layers"][f"slstm_{i}"], cfg, st)
+            else:
+                y, st = xl.mlstm_decode_step(h, params["layers"][f"mlstm_{i}"], cfg, st)
+            h = h + y
+            new_states.append(st)
+        state = state._replace(xlstm=tuple(new_states), length=length + 1)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = _logits(params, cfg, h)[..., : cfg.vocab_size]  # drop pad ids
+    return logits, state
+
+
+def prefill(cfg: ModelConfig, params, tokens: jax.Array, max_len: int,
+            extras: Optional[Dict[str, jax.Array]] = None):
+    """Full-sequence prefill returning logits and a primed DecodeState.
+    (Supported for the attention family — the serving engine's hot path.)"""
+    assert cfg.block_pattern == "attention" and not cfg.encoder_decoder
+    params_c = _cast(params, cfg)
+    b, s = tokens.shape
+    h = _embed(params_c, cfg, tokens)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    hd = cfg.resolved_head_dim
+
+    def body(carry, lp):
+        hh, aux = carry
+        x = rms_norm(hh, lp["attn_norm"], cfg.norm_eps)
+        from .attention import _project_qkv  # reuse projection to expose K/V
+
+        q, k, v = _project_qkv(x, lp["attn"], cfg, positions)
+        from .attention import _sdpa_reference
+
+        o = _sdpa_reference(q, k, v, causal=True)
+        hh = hh + o.reshape(b, s, -1) @ lp["attn"]["wo"]
+        hn = rms_norm(hh, lp["mlp_norm"], cfg.norm_eps)
+        if cfg.is_moe:
+            y, a = moe_ffn(hn, lp["moe"], cfg)
+            aux = aux + a
+            if cfg.moe_dense_residual:
+                y = y + glu_mlp(hn, lp["dense_mlp"], cfg.mlp_type)
+        elif cfg.mlp_type != "none":
+            y = glu_mlp(hn, lp["mlp"], cfg.mlp_type)
+        else:
+            y = jnp.zeros_like(hh)
+        pad = max_len - s
+        cache_dt = jnp.dtype(cfg.dtype)
+        kf = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dt)
+        vf = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dt)
+        return (hh + y, aux), (kf, vf)
+
+    (h, _aux), (ks, vs) = jax.lax.scan(
+        body, (h, jnp.zeros((), jnp.float32)), params_c["layers"]
+    )
+    h = rms_norm(h, params_c["final_norm"], cfg.norm_eps)
+    logits = _logits(params_c, cfg, h[:, -1:])[..., : cfg.vocab_size]
+    state = DecodeState(
+        length=jnp.asarray(s, jnp.int32), kv_k=ks, kv_v=vs,
+    )
+    return logits, state

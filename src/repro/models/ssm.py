@@ -1,0 +1,167 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)
+recurrent step for decode.  TPU adaptation notes:
+
+* the chunked SSD formulation turns the recurrence into MXU-shaped einsums
+  (intra-chunk quadratic + inter-chunk ``lax.scan`` over chunk states),
+  the TPU-native equivalent of the paper-codebase's fused CUDA scan;
+* d_inner (and heads) shard over the 'model' axis; states are head-local so
+  no collectives appear inside the block beyond the in/out projections.
+
+Shapes: x (B,S,D) → y (B,S,D).  H = d_inner/head_dim heads, state N.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from .layers import ParamDef, rms_norm
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, W-1, d_conv_in)  rolling conv window
+    ssd: jax.Array    # (B, H, P, N)         SSM state
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_inner, h, p, n = mamba_dims(cfg)
+    d_conv_in = d_inner + 2 * n           # x-path + B + C go through the conv
+    return {
+        "norm": ParamDef((d,), ("norm",), init="zeros"),
+        "in_proj": ParamDef((d, 2 * d_inner + 2 * n + h), ("embed", "ssm_inner")),
+        "conv_w": ParamDef((cfg.ssm_conv_width, d_conv_in), ("conv", "ssm_inner")),
+        "conv_b": ParamDef((d_conv_in,), ("ssm_inner",), init="zeros"),
+        "a_log": ParamDef((h,), (None,), init="ssm_alog"),
+        "dt_bias": ParamDef((h,), (None,), init="ssm_dt"),
+        "d_skip": ParamDef((h,), (None,), init="ones"),
+        "gate_norm": ParamDef((d_inner,), ("ssm_inner",), init="zeros"),
+        "out_proj": ParamDef((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(xz: jax.Array, cfg: ModelConfig):
+    d_inner, h, p, n = mamba_dims(cfg)
+    z, xbc_dt = jnp.split(xz, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * n], axis=-1)
+    return z, xbc, dt                       # (..., d_inner), (..., d_inner+2N), (..., H)
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W (pure jnp shift-and-add: W is 4)."""
+    width = w.shape[0]
+    out = xbc * w[-1]
+    for i in range(1, width):
+        shifted = jnp.pad(xbc, ((0, 0), (i, 0), (0, 0)))[:, : xbc.shape[1], :]
+        out = out + shifted * w[-1 - i]
+    return jax.nn.silu(out + b)
+
+
+def mamba_forward(
+    x: jax.Array, prm: Dict[str, jax.Array], cfg: ModelConfig
+) -> jax.Array:
+    """Full-sequence chunked SSD (train / prefill)."""
+    bsz, s, d = x.shape
+    d_inner, h, p, n = mamba_dims(cfg)
+    q = min(cfg.ssm_chunk, s)
+    assert s % q == 0, f"seq {s} must divide chunk {q}"
+    nc = s // q
+
+    hx = rms_norm(x, prm["norm"], cfg.norm_eps)
+    proj = hx @ prm["in_proj"]
+    proj = constrain(proj, "batch", None, "ssm_inner")
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc, prm["conv_w"], prm["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+
+    # chunk-major layout for the scan: (nc, B, Q, ·)
+    xh = xs.reshape(bsz, nc, q, h, p).transpose(1, 0, 2, 3, 4).astype(jnp.float32)
+    bm = bmat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    cm = cmat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + prm["dt_bias"])  # (B,S,H)
+    dt = dt.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+    a = -jnp.exp(prm["a_log"].astype(jnp.float32))                     # (H,)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+
+    def chunk_body(state, inp):
+        """One chunk: intra-chunk quadratic + cross-chunk state, so only
+        (B,Q,Q,H)-sized intermediates are ever live (scan over chunks keeps
+        the working set ~S/nc of the naive all-chunks form)."""
+        xh_c, bm_c, cm_c, dt_c = inp                                   # (B,Q,·)
+        da = dt_c * a                                                  # (B,Q,H)
+        cum = jnp.cumsum(da, axis=1)                                   # (B,Q,H)
+        # inter-chunk: contribution of the carried state
+        y_inter = jnp.einsum("btn,bhpn->bthp", cm_c, state) * jnp.exp(cum)[..., None]
+        # intra-chunk: masked decay attention.  Mask BEFORE exp (masked diffs
+        # are positive and overflow; exp(inf)·0 NaNs the backward pass).
+        diff = cum[:, :, None, :] - cum[:, None, :, :]                 # (B,Q,Q,H)
+        lmat = jnp.exp(jnp.where(mask[None, :, :, None], diff, -1e9))
+        cb = jnp.einsum("btn,bsn->bts", cm_c, bm_c)                    # (B,Q,Q)
+        w = cb[..., None] * lmat * dt_c[:, None, :, :]                 # (B,Q,Q,H)
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xh_c)
+        # new carried state
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)                   # (B,Q,H)
+        contrib = jnp.einsum("bqh,bqhp,bqn->bhpn", dt_c * decay_to_end, xh_c, bm_c)
+        new_state = jnp.exp(jnp.sum(da, axis=1))[..., None, None] * state + contrib
+        return new_state, y_inter + y_intra
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, y = jax.lax.scan(chunk_body, init, (xh, bm, cm, dt))            # (nc,B,Q,H,P)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    y = y + prm["d_skip"][None, None, :, None] * xh.transpose(1, 0, 2, 3, 4).reshape(
+        bsz, s, h, p
+    )
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), prm["gate_norm"], cfg.norm_eps)
+    out = y @ prm["out_proj"]
+    return constrain(out, "batch", None, None)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    d_inner, h, p, n = mamba_dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner + 2 * n), dtype),
+        ssd=jnp.zeros((batch, h, p, n), jnp.float32),
+    )
+
+
+def mamba_decode_step(
+    x: jax.Array,                 # (B, 1, D)
+    prm: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    state: MambaState,
+) -> Tuple[jax.Array, MambaState]:
+    bsz = x.shape[0]
+    d_inner, h, p, n = mamba_dims(cfg)
+    hx = rms_norm(x, prm["norm"], cfg.norm_eps)
+    proj = (hx @ prm["in_proj"])[:, 0]                                  # (B, ·)
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+
+    window = jnp.concatenate([state.conv, xbc[:, None, :]], axis=1)     # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, prm["conv_w"]) + prm["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(bsz, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + prm["dt_bias"])   # (B,H)
+    a = -jnp.exp(prm["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                             # (B,H)
+    upd = (dt[..., None, None] * xh[..., :, None]) * bm.astype(jnp.float32)[:, None, None, :]
+    new_ssd = decay[..., None, None] * state.ssd + upd                  # (B,H,P,N)
+    y = jnp.einsum("bn,bhpn->bhp", cm.astype(jnp.float32), new_ssd)
+    y = y + prm["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z)[:, None, :], prm["gate_norm"], cfg.norm_eps)
+    out = y @ prm["out_proj"]
+    return out, MambaState(conv=new_conv, ssd=new_ssd)

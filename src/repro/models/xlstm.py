@@ -1,0 +1,271 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel train / O(1) decode)
+and sLSTM (scalar memory, strictly recurrent), after arXiv:2405.04517.
+
+Stabilized exponential gating throughout (running max ``m``).  The mLSTM
+chunk form mirrors the SSD trick in models/ssm.py: intra-chunk quadratic on
+Q-token tiles + an inter-chunk carried matrix state C (B,H,P,P) — MXU-shaped
+and VMEM-sized, the TPU-native replacement for the paper's fused CUDA
+recurrence.  sLSTM is inherently sequential (its recurrence is
+non-associative), so it runs as ``lax.scan`` over time — the xLSTM paper
+makes the same observation for GPUs.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import constrain
+from .layers import ParamDef, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, P, P) matrix memory
+    n: jax.Array   # (B, H, P)    normalizer
+    m: jax.Array   # (B, H)       stabilizer
+
+
+def mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    heads = cfg.n_heads
+    return d_inner, heads, d_inner // heads
+
+
+def mlstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    d_inner, h, p = mlstm_dims(cfg)
+    return {
+        "norm": ParamDef((d,), ("norm",), init="zeros"),
+        "w_up": ParamDef((d, d_inner), ("embed", "ssm_inner")),
+        "w_z": ParamDef((d, d_inner), ("embed", "ssm_inner")),
+        "wq": ParamDef((d_inner, d_inner), ("ssm_inner", None)),
+        "wk": ParamDef((d_inner, d_inner), ("ssm_inner", None)),
+        "wv": ParamDef((d_inner, d_inner), ("ssm_inner", None)),
+        "w_i": ParamDef((d_inner, h), ("ssm_inner", None), init="zeros"),
+        "w_f": ParamDef((d_inner, h), ("ssm_inner", None), init="zeros"),
+        "b_i": ParamDef((h,), (None,), init="zeros"),
+        "b_f": ParamDef((h,), (None,), init="ones", scale=3.0),
+        "head_norm": ParamDef((d_inner,), ("ssm_inner",), init="zeros"),
+        "w_down": ParamDef((d_inner, d), ("ssm_inner", "embed")),
+    }
+
+
+def _mlstm_qkvif(x_up, prm, cfg):
+    d_inner, h, p = mlstm_dims(cfg)
+    lead = x_up.shape[:-1]
+    q = (x_up @ prm["wq"]).reshape(*lead, h, p) / jnp.sqrt(p)
+    k = (x_up @ prm["wk"]).reshape(*lead, h, p) / jnp.sqrt(p)
+    v = (x_up @ prm["wv"]).reshape(*lead, h, p)
+    i_raw = (x_up @ prm["w_i"] + prm["b_i"]).astype(jnp.float32)
+    f_raw = (x_up @ prm["w_f"] + 3.0 * prm["b_f"]).astype(jnp.float32)
+    return q, k, v, i_raw, f_raw
+
+
+def mlstm_forward(x, prm, cfg: ModelConfig):
+    """Full-sequence chunked mLSTM (train / prefill)."""
+    bsz, s, d = x.shape
+    d_inner, h, p = mlstm_dims(cfg)
+    q_len = min(cfg.ssm_chunk, s)
+    assert s % q_len == 0
+    nc = s // q_len
+
+    hx = rms_norm(x, prm["norm"], cfg.norm_eps)
+    x_up = hx @ prm["w_up"]
+    z = hx @ prm["w_z"]
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(x_up, prm, cfg)
+    logf = jax.nn.log_sigmoid(f_raw)                                    # (B,S,H)
+
+    def to_chunks(t):
+        return t.reshape(bsz, nc, q_len, *t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    qc, kc, vc = map(to_chunks, (q.astype(jnp.float32), k.astype(jnp.float32),
+                                 v.astype(jnp.float32)))                # (nc,B,Q,H,P)
+    ic, fc = map(to_chunks, (i_raw, logf))                              # (nc,B,Q,H)
+    mask = jnp.tril(jnp.ones((q_len, q_len), bool))
+
+    def chunk_body(carry, inp):
+        c_prev, n_prev, m_prev = carry
+        qq, kk, vv, ii, lf = inp
+        fcum = jnp.cumsum(lf, axis=1)                                   # (B,Q,H)
+        g = fcum + m_prev[:, None, :]                                   # total decay incl. carry
+        # intra-chunk log weights: F_t - F_s + i_s (s<=t)
+        logw = fcum[:, :, None, :] - fcum[:, None, :, :] + ii[:, None, :, :]
+        logw = jnp.where(mask[None, :, :, None], logw, -jnp.inf)        # (B,Q,Q,H)
+        m_loc = jnp.maximum(jnp.max(logw, axis=2), g)                   # (B,Q,H)
+        w = jnp.exp(logw - m_loc[:, :, None, :])                        # (B,Q,Q,H)
+        scores = jnp.einsum("bthp,bshp->btsh", qq, kk) * w
+        num = jnp.einsum("btsh,bshp->bthp", scores, vv)
+        num = num + jnp.exp(g - m_loc)[..., None] * jnp.einsum(
+            "bthp,bhpr->bthr", qq, c_prev
+        )
+        n_eff = jnp.einsum("btsh,bshp->bthp", w, kk) + jnp.exp(g - m_loc)[..., None] * n_prev[:, None]
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bthp,bthp->bth", qq, n_eff)), jnp.exp(-m_loc)
+        )
+        h_out = num / den[..., None]                                    # (B,Q,H,P)
+        # carry update (chunk end)
+        f_tot = fcum[:, -1, :]                                          # (B,H)
+        m_new = jnp.maximum(
+            f_tot + m_prev, jnp.max(f_tot[:, None, :] - fcum + ii, axis=1)
+        )
+        decay_s = jnp.exp(f_tot[:, None, :] - fcum + ii - m_new[:, None, :])  # (B,Q,H)
+        c_new = jnp.exp(f_tot + m_prev - m_new)[..., None, None] * c_prev + jnp.einsum(
+            "bqh,bqhp,bqhr->bhpr", decay_s, kk, vv
+        )
+        n_new = jnp.exp(f_tot + m_prev - m_new)[..., None] * n_prev + jnp.einsum(
+            "bqh,bqhp->bhp", decay_s, kk
+        )
+        return (c_new, n_new, m_new), h_out
+
+    init = (
+        jnp.zeros((bsz, h, p, p), jnp.float32),
+        jnp.zeros((bsz, h, p), jnp.float32),
+        jnp.full((bsz, h), -jnp.inf, jnp.float32),
+    )
+    _, hs = jax.lax.scan(chunk_body, init, (qc, kc, vc, ic, fc))        # (nc,B,Q,H,P)
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(bsz, s, d_inner).astype(x.dtype)
+    hs = rms_norm(hs, prm["head_norm"], cfg.norm_eps)
+    out = (hs * jax.nn.silu(z)) @ prm["w_down"]
+    return constrain(out, "batch", None, None)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    _, h, p = mlstm_dims(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, h, p, p), jnp.float32),
+        n=jnp.zeros((batch, h, p), jnp.float32),
+        m=jnp.full((batch, h), -jnp.inf, jnp.float32),
+    )
+
+
+def mlstm_decode_step(x, prm, cfg: ModelConfig, state: MLSTMState):
+    bsz = x.shape[0]
+    d_inner, h, p = mlstm_dims(cfg)
+    hx = rms_norm(x, prm["norm"], cfg.norm_eps)
+    x_up = (hx @ prm["w_up"])[:, 0]
+    z = (hx @ prm["w_z"])[:, 0]
+    q, k, v, i_raw, f_raw = _mlstm_qkvif(x_up, prm, cfg)                # (B,H,P)/(B,H)
+    logf = jax.nn.log_sigmoid(f_raw)
+    q, k, v = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+
+    m_new = jnp.maximum(logf + state.m, i_raw)                          # (B,H)
+    f_eff = jnp.exp(logf + state.m - m_new)
+    i_eff = jnp.exp(i_raw - m_new)
+    c_new = f_eff[..., None, None] * state.c + i_eff[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n_new = f_eff[..., None] * state.n + i_eff[..., None] * k
+    num = jnp.einsum("bhp,bhpr->bhr", q, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n_new)), jnp.exp(-m_new))
+    h_out = (num / den[..., None]).reshape(bsz, 1, d_inner).astype(x.dtype)
+    h_out = rms_norm(h_out, prm["head_norm"], cfg.norm_eps)
+    out = (h_out * jax.nn.silu(z)[:, None]) @ prm["w_down"]
+    return out, MLSTMState(c=c_new, n=n_new, m=m_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, P)
+    n: jax.Array   # (B, H, P)
+    m: jax.Array   # (B, H, P)
+    h: jax.Array   # (B, H, P)
+
+
+def slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    h = cfg.n_heads
+    return h, cfg.d_model // h
+
+
+def slstm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    h, p = slstm_dims(cfg)
+    d_up = (d * 4) // 3
+    defs = {"norm": ParamDef((d,), ("norm",), init="zeros")}
+    for g in ("z", "i", "f", "o"):
+        defs[f"w_{g}"] = ParamDef((d, d), ("embed", "ssm_inner"))
+        defs[f"r_{g}"] = ParamDef((h, p, p), (None, None, None), scale=0.3)
+        defs[f"b_{g}"] = ParamDef((d,), ("ssm_inner",), init="zeros")
+    defs["head_norm"] = ParamDef((d,), ("ssm_inner",), init="zeros")
+    # post-up/down GeGLU (factor 4/3, per the xLSTM paper's sLSTM block)
+    defs["mlp_norm"] = ParamDef((d,), ("norm",), init="zeros")
+    defs["w_gate"] = ParamDef((d, d_up), ("embed", "ff"))
+    defs["w_upp"] = ParamDef((d, d_up), ("embed", "ff"))
+    defs["w_down"] = ParamDef((d_up, d), ("ff", "embed"))
+    return defs
+
+
+def _slstm_step(prm, cfg, carry, gate_x):
+    """One recurrent step.  gate_x: dict of pre-computed W·x_t (B,H,P)."""
+    c, n, m, h_prev = carry
+    hmat = lambda g: jnp.einsum("bhp,hpq->bhq", h_prev, prm[f"r_{g}"])
+    z = jnp.tanh(gate_x["z"] + hmat("z"))
+    i_raw = (gate_x["i"] + hmat("i")).astype(jnp.float32)
+    f_raw = (gate_x["f"] + hmat("f")).astype(jnp.float32)
+    o = jax.nn.sigmoid(gate_x["o"] + hmat("o"))
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + m, i_raw)
+    i_eff = jnp.exp(i_raw - m_new)
+    f_eff = jnp.exp(logf + m - m_new)
+    c_new = f_eff * c + i_eff * z.astype(jnp.float32)
+    n_new = f_eff * n + i_eff
+    h_new = (o.astype(jnp.float32) * c_new / jnp.maximum(n_new, 1e-6)).astype(z.dtype)
+    return SLSTMState(c_new, n_new, m_new, h_new)
+
+
+def _slstm_gates_x(hx, prm, cfg):
+    h, p = slstm_dims(cfg)
+    lead = hx.shape[:-1]
+    return {
+        g: (hx @ prm[f"w_{g}"] + prm[f"b_{g}"]).reshape(*lead, h, p)
+        for g in ("z", "i", "f", "o")
+    }
+
+
+def slstm_forward(x, prm, cfg: ModelConfig):
+    bsz, s, d = x.shape
+    h, p = slstm_dims(cfg)
+    hx = rms_norm(x, prm["norm"], cfg.norm_eps)
+    gates = _slstm_gates_x(hx, prm, cfg)                                # (B,S,H,P) each
+
+    def body(carry, gx):
+        new = _slstm_step(prm, cfg, carry, gx)
+        return new, new.h
+
+    init = slstm_init_state(cfg, bsz, x.dtype)
+    xs = {g: gates[g].transpose(1, 0, 2, 3) for g in gates}
+    _, hs = jax.lax.scan(body, init, xs)                                # (S,B,H,P)
+    hs = hs.transpose(1, 0, 2, 3).reshape(bsz, s, d)
+    y = rms_norm(hs, prm["head_norm"], cfg.norm_eps)
+    # GeGLU post-MLP
+    hm = rms_norm(x + y, prm["mlp_norm"], cfg.norm_eps)
+    mlp = (jax.nn.gelu(hm @ prm["w_gate"]) * (hm @ prm["w_upp"])) @ prm["w_down"]
+    return y + mlp  # caller adds residual to x
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SLSTMState:
+    h, p = slstm_dims(cfg)
+    zero = jnp.zeros((batch, h, p), jnp.float32)
+    return SLSTMState(c=zero, n=zero, m=zero - jnp.inf, h=jnp.zeros((batch, h, p), dtype))
+
+
+def slstm_decode_step(x, prm, cfg: ModelConfig, state: SLSTMState):
+    bsz = x.shape[0]
+    h, p = slstm_dims(cfg)
+    hx = rms_norm(x, prm["norm"], cfg.norm_eps)
+    gates = {g: v[:, 0] for g, v in _slstm_gates_x(hx, prm, cfg).items()}
+    new = _slstm_step(prm, cfg, state, gates)
+    y = rms_norm(new.h.reshape(bsz, 1, -1), prm["head_norm"], cfg.norm_eps)
+    hm = rms_norm(x + y, prm["mlp_norm"], cfg.norm_eps)
+    mlp = (jax.nn.gelu(hm @ prm["w_gate"]) * (hm @ prm["w_upp"])) @ prm["w_down"]
+    return y + mlp, new

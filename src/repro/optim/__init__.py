@@ -1,0 +1,19 @@
+from .optimizers import (
+    OptState,
+    adafactor_init,
+    adamw_init,
+    apply_updates,
+    cosine_schedule,
+    global_norm,
+    make_optimizer,
+)
+
+__all__ = [
+    "OptState",
+    "adafactor_init",
+    "adamw_init",
+    "apply_updates",
+    "cosine_schedule",
+    "global_norm",
+    "make_optimizer",
+]

@@ -1,0 +1,208 @@
+"""Optimizers in pure JAX pytrees: AdamW (default) and Adafactor (factored
+second moment — the memory-frugal choice for the 480B MoE).
+
+State layout mirrors the param tree so parameter PartitionSpecs apply to the
+optimizer state unchanged (ZeRO-1 falls out of FSDP param sharding for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any            # AdamW: first moment | Adafactor: None
+    nu: Any            # AdamW: second moment | Adafactor: (row, col) factors
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jax.Array], Tuple[Any, OptState]]
+    #: PartitionSpec tree factory: given param specs, produce state specs.
+    state_specs: Callable[[Any], Any]
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+def cosine_schedule(
+    base_lr: float, warmup: int, total: int, min_frac: float = 0.1
+) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / max(1, warmup))
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Any) -> OptState:
+    zeros = lambda t: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), t)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def adamw_update(
+    grads: Any,
+    state: OptState,
+    params: Any,
+    lr: jax.Array,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        update = update + weight_decay * p.astype(jnp.float32)
+        return m, v, (-lr * update).astype(p.dtype)
+
+    flat = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    mu = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda x: isinstance(x, tuple))
+    nu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda x: isinstance(x, tuple))
+    delta = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda x: isinstance(x, tuple))
+    return delta, OptState(step=step, mu=mu, nu=nu)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; no first moment)
+# ---------------------------------------------------------------------------
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2
+
+
+def adafactor_init(params: Any) -> OptState:
+    def nu_init(p):
+        if _factored(p.shape):
+            row = jnp.zeros(p.shape[:-1], jnp.float32)
+            col = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return (row, col)
+        return jnp.zeros(p.shape, jnp.float32)
+
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=None,
+        nu=jax.tree.map(nu_init, params),
+    )
+
+
+def adafactor_update(
+    grads: Any,
+    state: OptState,
+    params: Any,
+    lr: jax.Array,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+    def upd(g, nu, p):
+        g = g.astype(jnp.float32)
+        g2 = jnp.square(g) + eps
+        if _factored(g.shape):
+            row, col = nu
+            row = beta * row + (1 - beta) * jnp.mean(g2, axis=-1)
+            col = beta * col + (1 - beta) * jnp.mean(g2, axis=-2)
+            row_mean = jnp.mean(row, axis=-1, keepdims=True)
+            vhat = (row / row_mean)[..., None] * col[..., None, :]
+            new_nu = (row, col)
+        else:
+            vhat = beta * nu + (1 - beta) * g2
+            new_nu = vhat
+        update = g * jax.lax.rsqrt(vhat + eps)
+        rms = jnp.sqrt(jnp.mean(jnp.square(update)) + 1e-12)
+        update = update / jnp.maximum(1.0, rms / clip_threshold)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return new_nu, (-lr * update).astype(p.dtype)
+
+    is_nu_leaf = lambda x: isinstance(x, tuple) and len(x) == 2 and not isinstance(x[0], tuple)
+    flat = jax.tree.map(upd, grads, state.nu, params, is_leaf=None)
+    # flat leaves are (nu, delta) tuples; nu may itself be a (row,col) tuple.
+    two = lambda x: isinstance(x, tuple) and len(x) == 2
+    nu = jax.tree.map(lambda t: t[0], flat, is_leaf=two)
+    delta = jax.tree.map(lambda t: t[1], flat, is_leaf=two)
+    return delta, OptState(step=step, mu=None, nu=nu)
+
+
+def apply_updates(params: Any, delta: Any) -> Any:
+    return jax.tree.map(lambda p, d: p + d.astype(p.dtype), params, delta)
+
+
+# ---------------------------------------------------------------------------
+# factory
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        def state_specs(pspecs):
+            from jax.sharding import PartitionSpec
+
+            return OptState(step=PartitionSpec(), mu=pspecs, nu=pspecs)
+
+        return Optimizer(
+            name="adamw",
+            init=adamw_init,
+            update=functools.partial(adamw_update, **kw),
+            state_specs=state_specs,
+        )
+    if name == "adafactor":
+        def state_specs(pspecs):
+            from jax.sharding import PartitionSpec as P
+
+            def nu_spec(spec):
+                # row factor drops the last axis, col factor the second-last.
+                parts = list(spec) if spec else []
+                if len(parts) >= 2:
+                    return (P(*parts[:-1]), P(*(parts[:-2] + parts[-1:])))
+                return spec
+
+            return OptState(
+                step=P(),
+                mu=None,
+                nu=jax.tree.map(nu_spec, pspecs,
+                                is_leaf=lambda s: isinstance(s, P)),
+            )
+
+        return Optimizer(
+            name="adafactor",
+            init=adafactor_init,
+            update=functools.partial(adafactor_update, **kw),
+            state_specs=state_specs,
+        )
+    raise ValueError(name)

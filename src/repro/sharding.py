@@ -1,0 +1,107 @@
+"""Logical-axis sharding: one place that maps model-logical axes onto the
+physical mesh, used both for activation constraints inside model code and for
+parameter/out shardings at jit boundaries.
+
+Physical mesh axes (launch/mesh.py):
+    single-pod  : ("data", "model")                 16 × 16
+    multi-pod   : ("pod", "data", "model")          2 × 16 × 16
+
+Logical → physical rules.  "fsdp" rides the data axis (ZeRO-style weight
+sharding); the pod axis joins the batch dimension (pure DP across pods).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+RULES = {
+    None: None,
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_shard": ("model",),      # SP for long-context KV caches
+    "embed_act": None,
+    # weights
+    "vocab": ("model",),
+    "embed": ("data",),           # fsdp dim
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "qkv_flat": ("model",),
+    "ff": ("model",),
+    # MoE: expert-parallel over the data axis, tensor-parallel d_ff over model
+    # (GShard/DeepSpeed-MoE layout — see models/moe.py).
+    "expert": ("data",),
+    "expert_ff": ("model",),
+    "conv": None,
+    "ssm_inner": ("model",),
+    "ssm_state": None,
+    "norm": None,
+}
+
+
+def mesh_axes() -> Tuple[str, ...]:
+    try:
+        return tuple(jax.sharding.get_abstract_mesh().axis_names)
+    except Exception:
+        return ()
+
+
+def resolve(logical: Sequence[Optional[str]]) -> P:
+    """Logical names → PartitionSpec, dropping axes absent from the mesh."""
+    present = set(mesh_axes())
+    spec = []
+    for name in logical:
+        phys = RULES.get(name, None) if not isinstance(name, tuple) else name
+        if phys is None:
+            spec.append(None)
+            continue
+        kept = tuple(a for a in phys if a in present)
+        spec.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*spec)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    if not mesh_axes():
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs logical {logical}")
+    return jax.lax.with_sharding_constraint(x, resolve(logical))
+
+
+def decode_kv_axes(n_kv_heads: int, head_dim: int):
+    """The ONE sharded axis of decode KV caches: heads if TP-divisible, else
+    head_dim, else nothing.  Used by BOTH the cache specs
+    (launch/sharding.py) and the in-graph constraints (models/attention.py):
+    any disagreement makes GSPMD reshard the cache per layer with a
+    last-resort full rematerialization (measured: 80% of decode traffic)."""
+    sizes = {}
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        sizes = dict(zip(mesh.axis_names, mesh.shape.values()))
+    except Exception:
+        pass
+    tp = sizes.get("model", 1)
+    if tp > 1 and n_kv_heads % tp == 0:
+        return "kv_heads", None
+    if tp > 1 and head_dim % tp == 0:
+        return None, "head_dim"
+    return None, None
+
+
+RULES["head_dim"] = ("model",)
+
+
+def spec_tree(logical_tree):
+    """Map a pytree of logical-axis tuples to PartitionSpecs."""
+    return jax.tree.map(
+        lambda names: resolve(names),
+        logical_tree,
+        is_leaf=lambda v: isinstance(v, tuple) and all(
+            n is None or isinstance(n, (str, tuple)) for n in v
+        ),
+    )

@@ -1,0 +1,126 @@
+"""Training step factory: microbatched grad accumulation, global-norm clip,
+optional cross-pod gradient compression, optimizer update.
+
+The returned function is pure and jit-able with donated (params, opt_state);
+sharding comes from ParamDef logical axes (launch/sharding.py assembles the
+in/out shardings at the jit boundary).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward_train
+from repro.optim.optimizers import (
+    Optimizer,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    clip_norm: float = 1.0
+    microbatches: int = 1
+    #: cast the fp32 master params to bf16 *per-shard at the step boundary*
+    #: (sharding-constrained), so FSDP all-gathers inside the layer scan move
+    #: bf16 — half the link bytes and half the gathered-buffer HBM traffic.
+    bf16_param_gathers: bool = False
+    #: dtype for the accumulated gradient (bf16 halves the accumulation
+    #: buffer for the 480B MoE at ~0 quality cost over ≤32 microbatches).
+    accum_dtype: str = "float32"
+    #: int8 error-feedback compression for the cross-pod gradient reduction.
+    grad_compression: str = "none"  # none | int8
+    weight_decay: float = 0.1
+
+
+def _compress_int8(g: jax.Array) -> jax.Array:
+    """Simulated int8 quantize→dequantize of a gradient tensor (the wire
+    format of the cross-pod all-reduce).  Error feedback is carried by the
+    caller; here we apply symmetric per-tensor scaling."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(g.dtype) * scale
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    settings: TrainSettings,
+    optimizer: Optional[Optimizer] = None,
+) -> Callable:
+    optimizer = optimizer or make_optimizer(
+        cfg.optimizer, weight_decay=settings.weight_decay
+    )
+    schedule = cosine_schedule(
+        settings.learning_rate, settings.warmup_steps, settings.total_steps
+    )
+    n_mb = settings.microbatches
+    accum_dtype = jnp.dtype(settings.accum_dtype)
+
+    def loss_fn(params, batch):
+        if settings.bf16_param_gathers:
+            from repro.models.layers import pspec_tree
+            from repro.models.model import _cast, model_defs
+            from repro.sharding import mesh_axes
+
+            params = _cast(params, cfg)          # bf16 per-shard...
+            if mesh_axes():                       # ...pinned to param sharding
+                params = jax.lax.with_sharding_constraint(
+                    params, pspec_tree(model_defs(cfg))
+                )
+        loss, metrics = forward_train(cfg, params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch: Dict[str, jax.Array]):
+        if n_mb == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = jax.tree.map(
+                lambda x: x.reshape((n_mb, x.shape[0] // n_mb) + x.shape[1:]), batch
+            )
+
+            def body(acc, one):
+                (l, m), g = grad_fn(params, one)
+                acc = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), acc, g
+                )
+                return acc, (l, m)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params
+            )
+            grads, (losses, ms) = jax.lax.scan(body, zeros, mb)
+            grads = jax.tree.map(lambda g: (g / n_mb).astype(jnp.float32), grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, ms)
+
+        if settings.grad_compression == "int8":
+            grads = jax.tree.map(_compress_int8, grads)
+        grads, gnorm = clip_by_global_norm(grads, settings.clip_norm)
+        lr = schedule(opt_state.step)
+        delta, opt_state = optimizer.update(grads, opt_state, params, lr)
+        params = jax.tree.map(lambda p, d: p + d.astype(p.dtype), params, delta)
+        metrics = dict(metrics)
+        metrics.update(loss=loss, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = forward_train(cfg, params, batch)
+        return metrics
+
+    return eval_step

@@ -1,0 +1,121 @@
+"""Trainer: the runnable job that the cluster scheduler places and preempts.
+
+Implements the ``PreemptibleJob`` protocol (core/preemption.py): on a
+PREEMPT signal it drains the in-flight step, writes a checkpoint inside the
+notice window, and can later resume — possibly elsewhere — bit-exactly
+(params, opt state, data cursor).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig
+from repro.core.preemption import PreemptAck
+from repro.data.pipeline import DataConfig, SyntheticLMDataset
+from repro.models.model import init_params
+from repro.optim.optimizers import make_optimizer
+from .train_step import TrainSettings, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    """Single-process trainer (multi-host launch shards the data feed)."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        settings: TrainSettings,
+        tcfg: TrainerConfig,
+        data: Optional[SyntheticLMDataset] = None,
+        job_id: str = "job0",
+    ):
+        self.cfg = cfg
+        self.settings = settings
+        self.tcfg = tcfg
+        self.job_id = job_id
+        self.optimizer = make_optimizer(cfg.optimizer, weight_decay=settings.weight_decay)
+        self.ckpt = Checkpointer(tcfg.ckpt_dir)
+        self.data = data or SyntheticLMDataset(
+            DataConfig(vocab_size=cfg.vocab_size, seq_len=256, global_batch=8,
+                       seed=tcfg.seed)
+        )
+        self._step_fn = jax.jit(make_train_step(cfg, settings, self.optimizer),
+                                donate_argnums=(0, 1))
+        self.params = None
+        self.opt_state = None
+        self.step = 0
+        self.history: list = []
+        self._preempted = False
+
+    # -- lifecycle ------------------------------------------------------------
+    def init_or_restore(self) -> None:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            self.params = init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+            self.opt_state = self.optimizer.init(self.params)
+            self.step = 0
+        else:
+            template = {
+                "params": init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed)),
+            }
+            template["opt"] = self.optimizer.init(template["params"])
+            restored, meta = self.ckpt.restore(template)
+            self.params = restored["params"]
+            self.opt_state = restored["opt"]
+            self.step = meta.step
+
+    def run(self, n_steps: Optional[int] = None,
+            until_step: Optional[int] = None) -> Dict[str, float]:
+        if self.params is None:
+            self.init_or_restore()
+        target = until_step if until_step is not None else self.step + (n_steps or 0)
+        last = {}
+        while self.step < target and not self._preempted:
+            batch = self.data.batch_at(self.step)
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch
+            )
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or self.step == target:
+                last = {k: float(v) for k, v in metrics.items()}
+                self.history.append({"step": self.step, **last})
+            if self.step % self.tcfg.ckpt_every == 0:
+                self.save_checkpoint()
+        return last
+
+    def save_checkpoint(self, blocking: bool = False) -> None:
+        self.ckpt.save(
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            extra={"job_id": self.job_id},
+            blocking=blocking,
+        )
+
+    # -- PreemptibleJob protocol -------------------------------------------------
+    def on_preempt(self, now: float, deadline: float) -> PreemptAck:
+        """Drain + checkpoint.  With real wall-clock semantics in tests the
+        deadline is generous; a hard kill corresponds to skipping this call."""
+        self._preempted = True
+        t0 = time.monotonic()
+        self.save_checkpoint(blocking=True)
+        return (
+            PreemptAck.DRAINED
+            if time.monotonic() - t0 <= max(0.0, deadline - now)
+            else PreemptAck.HARD_KILLED
+        )
+
+    def resume_marker(self) -> int:
+        return self.step

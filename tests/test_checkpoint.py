@@ -1,0 +1,72 @@
+"""Checkpointer: roundtrip exactness, async durability, atomicity, GC."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+
+
+def tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"w": jnp.ones((5,), jnp.bfloat16) * 1.5,
+              "s": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip_exact(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = tree()
+    ck.save(3, t, extra={"note": "x"}, blocking=True)
+    restored, meta = ck.restore(jax.tree.map(lambda x: x, t))
+    assert meta.step == 3 and meta.extra["note"] == "x"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_async_save_then_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree())
+    ck.wait()
+    assert ck.latest_step() == 1
+
+
+def test_latest_pointer_flips_only_on_complete_write(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, tree(), blocking=True)
+    ck.save(2, tree(), blocking=True)
+    assert ck.latest_step() == 2
+    # a torn step_3 directory must not be visible via LATEST
+    os.makedirs(tmp_path / "step_3.tmp", exist_ok=True)
+    assert ck.latest_step() == 2
+
+
+def test_gc_keeps_latest_k(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree(), blocking=True)
+    kept = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert kept == ["step_3", "step_4"]
+
+
+def test_restore_into_shape_structs(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = tree()
+    ck.save(5, t, blocking=True)
+    template = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), t)
+    restored, meta = ck.restore(template)
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"a": jnp.zeros((2, 2))}, blocking=True)
+    with pytest.raises(AssertionError):
+        ck.restore({"a": jnp.zeros((3, 3))})

@@ -1,0 +1,143 @@
+"""Decode-path consistency: token-by-token decoding with caches/states must
+reproduce the teacher-forced full-sequence forward — the strongest oracle
+for KV-cache indexing, Mamba2 SSD chunk algebra, and xLSTM recurrences.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.model import (
+    decode_step,
+    forward_logits,
+    init_decode_state,
+    init_params,
+)
+
+S = 12
+B = 2
+
+# moonshot: capacity_factor large so neither path drops tokens (dropping is
+# batch-dependent and would make the two paths legitimately differ).
+CASES = {
+    "qwen2-1.5b": {},                      # GQA + qkv bias + tied embeddings
+    "gemma-2b": {},                        # MQA + GeGLU + head_dim=256
+    "moonshot-v1-16b-a3b": {"capacity_factor": 16.0},   # MoE top-k
+    "zamba2-7b": {},                       # Mamba2 + shared attention
+    "xlstm-125m": {},                      # mLSTM + sLSTM
+}
+
+
+@pytest.mark.parametrize("arch", sorted(CASES))
+def test_decode_matches_teacher_forced_forward(arch):
+    cfg = reduced(get_config(arch), **CASES[arch])
+    if cfg.block_pattern == "zamba_hybrid":
+        cfg = dataclasses.replace(cfg, ssm_chunk=S)  # chunked path, 1 chunk
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 2, cfg.vocab_size)
+
+    # teacher-forced: logits at every position
+    full = forward_logits(cfg, params, {"tokens": tokens}, last_only=False)
+
+    # token-by-token decode
+    state = init_decode_state(cfg, batch=B, max_len=S + 1, dtype=jnp.float32)
+    step = jax.jit(lambda t, s: decode_step(cfg, params, t, s))
+    outs = []
+    for t in range(S):
+        logits, state = step(tokens[:, t: t + 1], state)
+        outs.append(logits[:, 0, :])
+    dec = jnp.stack(outs, axis=1)                      # (B, S, V)
+
+    np.testing.assert_allclose(
+        np.asarray(dec, np.float32),
+        np.asarray(full[..., : cfg.vocab_size], np.float32),
+        atol=2e-2, rtol=2e-2,
+    )
+    # the argmax (greedy) decisions must agree everywhere
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(dec, -1)),
+        np.asarray(jnp.argmax(full[..., : cfg.vocab_size], -1)),
+    )
+
+
+def test_blocked_attention_matches_reference_forward():
+    cfg = reduced(get_config("yi-9b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 16), 2, cfg.vocab_size)
+    ref = forward_logits(cfg, params, {"tokens": tokens}, last_only=False)
+    blk = forward_logits(
+        dataclasses.replace(cfg, attention_impl="blocked"),
+        params, {"tokens": tokens}, last_only=False,
+    )
+    np.testing.assert_allclose(
+        np.asarray(blk, np.float32), np.asarray(ref, np.float32),
+        atol=1e-3, rtol=1e-3,
+    )
+
+
+def test_blocked_attention_gradients_match_reference():
+    cfg = reduced(get_config("yi-9b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (B, 16), 2, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (B, 16), 2, cfg.vocab_size),
+    }
+    from repro.models.model import forward_train
+
+    def loss(cfg_, p):
+        return forward_train(cfg_, p, batch)[0]
+
+    g_ref = jax.grad(lambda p: loss(cfg, p))(params)
+    g_blk = jax.grad(
+        lambda p: loss(dataclasses.replace(cfg, attention_impl="blocked"), p)
+    )(params)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_blk)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-3, rtol=2e-3)
+
+
+def test_unrolled_decode_matches_scan_decode():
+    """The serving-mode unrolled decode graph (scan_layers=False) is
+    numerically identical to the scanned one (§Perf E)."""
+    cfg = reduced(get_config("qwen2-1.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 4), 2, cfg.vocab_size)
+    outs = {}
+    for scan in (True, False):
+        c = dataclasses.replace(cfg, scan_layers=scan)
+        state = init_decode_state(c, batch=B, max_len=8, dtype=jnp.float32)
+        step = jax.jit(lambda t, s, c=c: decode_step(c, params, t, s))
+        ls = []
+        for t in range(4):
+            logits, state = step(tokens[:, t: t + 1], state)
+            ls.append(logits)
+        outs[scan] = jnp.concatenate(ls, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(outs[True]), np.asarray(outs[False]), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_per_layer_cache_decode_matches_stacked():
+    """Serving-mode per-layer cache buffers (decode_cache_layout=per_layer)
+    decode identically to the stacked layout (§Perf E iter 5)."""
+    cfg = reduced(get_config("qwen2-1.5b"))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 4), 2, cfg.vocab_size)
+    outs = {}
+    for layout in ("stacked", "per_layer"):
+        c = dataclasses.replace(cfg, decode_cache_layout=layout)
+        state = init_decode_state(c, batch=B, max_len=8, dtype=jnp.float32)
+        step = jax.jit(lambda t, s, c=c: decode_step(c, params, t, s))
+        ls = []
+        for t in range(4):
+            logits, state = step(tokens[:, t: t + 1], state)
+            ls.append(logits)
+        outs[layout] = jnp.concatenate(ls, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(outs["stacked"]), np.asarray(outs["per_layer"]),
+        atol=1e-5, rtol=1e-5,
+    )

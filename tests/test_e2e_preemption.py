@@ -1,0 +1,84 @@
+"""End-to-end fault tolerance: preempt → checkpoint → resume is EXACT.
+
+The strongest guarantee the preemption protocol offers: a training job that
+is preempted mid-run and later resumed (fresh Trainer, as after an
+evacuation) produces bit-identical parameters to an uninterrupted run —
+params, optimizer state and data cursor all restore exactly.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced
+from repro.core.preemption import PreemptAck, PreemptionController
+from repro.data.pipeline import DataConfig, SyntheticLMDataset
+from repro.training import Trainer, TrainerConfig, TrainSettings
+
+
+def make_trainer(tmpdir, seed=0):
+    cfg = reduced(get_config("qwen2-1.5b"))
+    data = SyntheticLMDataset(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4, seed=seed)
+    )
+    return Trainer(
+        cfg,
+        TrainSettings(total_steps=50, warmup_steps=2, learning_rate=1e-3),
+        TrainerConfig(ckpt_dir=str(tmpdir), ckpt_every=1000, log_every=1),
+        data=data,
+    )
+
+
+def _params_vec(trainer):
+    return np.concatenate(
+        [np.asarray(x, np.float32).ravel() for x in jax.tree.leaves(trainer.params)]
+    )
+
+
+def test_preempt_resume_is_bit_exact(tmp_path):
+    # uninterrupted reference: 10 steps
+    ref = make_trainer(tmp_path / "ref")
+    ref.run(10)
+    ref_vec = _params_vec(ref)
+
+    # preempted run: 6 steps → preempt (checkpoint) → fresh trainer → 4 more
+    t1 = make_trainer(tmp_path / "pre")
+    t1.run(6)
+    ack = t1.on_preempt(now=0.0, deadline=60.0)
+    assert ack is PreemptAck.DRAINED
+
+    t2 = make_trainer(tmp_path / "pre")
+    t2.init_or_restore()
+    assert t2.step == 6
+    t2.run(until_step=10)
+    np.testing.assert_array_equal(ref_vec, _params_vec(t2))
+
+
+def test_hard_kill_loses_only_since_last_checkpoint(tmp_path):
+    t1 = make_trainer(tmp_path / "hk")
+    t1.tcfg.ckpt_every = 5
+    t1.run(8)          # periodic checkpoint at step 5; steps 6-8 volatile
+    t1.ckpt.wait()
+    # hard kill: no drain — simply start a fresh trainer from disk
+    t2 = make_trainer(tmp_path / "hk")
+    t2.init_or_restore()
+    assert t2.step == 5  # lost exactly steps 6-8, not the whole run
+    t2.run(until_step=10)
+    assert t2.step == 10
+
+
+def test_controller_records_lost_work(tmp_path):
+    from repro.core.types import TPU_SPEC, Instance
+
+    ctrl = PreemptionController(notice_s=60.0)
+    trainer = make_trainer(tmp_path / "rec")
+    trainer.run(3)
+    inst = Instance(
+        id="i0", resources=TPU_SPEC.make(chips=4, hbm_gb=32, host_ram_gb=16),
+        preemptible=True, host="h0", start_time=0.0,
+    )
+    ctrl.register("i0", trainer)
+    ctrl(inst, now=100.0)
+    assert ctrl.records[-1].ack is PreemptAck.DRAINED
+    assert ctrl.records[-1].lost_work_s == 0.0
+    assert ctrl.drain_rate == 1.0

@@ -1,0 +1,71 @@
+"""Unit tests for the loop-aware HLO cost parser (the roofline's foundation)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.launch.hlo_stats import HloCost
+
+HLO = """\
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %mm = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%mm), replica_groups=[16,16]<=[256], to_apply=%sum
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %init = (s32[], f32[8,16]) tuple(%a)
+  %w2 = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  %ag = f32[128,16]{1,0} all-gather(%a), replica_groups=[16,16]<=[256], dimensions={0}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_while_body_scaled_by_trip_count():
+    t = HloCost(HLO, 256).total()
+    # dot: 2 * 8*16 * 16 = 4096 flops, x10 trips
+    assert t.flops == pytest.approx(4096 * 10)
+
+
+def test_collective_conventions_and_scaling():
+    t = HloCost(HLO, 256).total()
+    # all-reduce in the loop: 2*(16-1)/16 * 8*16*4 bytes, x10
+    ar = 2 * 15 / 16 * 8 * 16 * 4 * 10
+    # all-gather outside: (16-1)/16 * result(128*16*4)
+    ag = 15 / 16 * 128 * 16 * 4
+    assert t.coll_by_kind["all-reduce"] == pytest.approx(ar)
+    assert t.coll_by_kind["all-gather"] == pytest.approx(ag)
+    assert t.coll_counts["all-reduce"] == 10
+    assert t.collective_bytes == pytest.approx(ar + ag)
+
+
+def test_replica_group_iota_parsing():
+    from repro.launch.hlo_stats import _group_size
+
+    assert _group_size("replica_groups=[16,16]<=[256]", 999) == 16
+    assert _group_size("replica_groups={{0,1,2,3}}", 999) == 4
+    assert _group_size("no groups here", 7) == 7
+
+
+def test_memory_traffic_counts_top_level_only():
+    t = HloCost(HLO, 256).total()
+    # loop body: dot (result 512B + operands 512+1024) + all-reduce result
+    # (512) per trip; entry: all-gather result + while init tuple is
+    # no-traffic (tuple), GTE/parameter skipped.
+    assert t.bytes > 0
+    per_trip = (512 + 512 + 1024) + 512
+    assert t.bytes >= per_trip * 10

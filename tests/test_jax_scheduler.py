@@ -1,0 +1,119 @@
+"""Vectorized (jnp + Pallas) scheduler vs the python reference oracle.
+
+The python ``PreemptibleScheduler`` is the paper-faithful implementation
+already validated against the paper's Tables 3-6; here we require the JAX
+reformulation to make identical decisions on randomized fleets.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.cost import PeriodCost
+from repro.core.jax_scheduler import (
+    JaxPreemptibleScheduler,
+    build_soa_state,
+    host_plan_terms,
+    subset_masks,
+)
+from repro.core.scheduler import PreemptibleScheduler
+from repro.core.types import VM_SPEC, Host, Instance, Request
+
+NOW = 500_000.0
+
+SIZES = {
+    "small": VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20),
+    "medium": VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40),
+    "large": VM_SPEC.make(vcpus=4, ram_mb=8000, disk_gb=80),
+}
+CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=160)
+
+
+def random_fleet(rng, n_hosts: int, fill: float = 0.8):
+    """Random hosts with mixed normal/preemptible instances; integer-minute
+    run times so float32 cost arithmetic is exact."""
+    hosts = []
+    names = list(SIZES)
+    iid = 0
+    for i in range(n_hosts):
+        h = Host(name=f"h{i}", capacity=CAP)
+        while h.used().vec[0] < fill * CAP.vec[0]:
+            size = SIZES[names[rng.integers(3)]]
+            if not size.fits_in(h.free_full):
+                break
+            h.place(
+                Instance(
+                    id=f"x{iid}",
+                    resources=size,
+                    preemptible=bool(rng.random() < 0.5),
+                    host=h.name,
+                    start_time=NOW - float(rng.integers(10, 500)) * 60.0,
+                )
+            )
+            iid += 1
+        hosts.append(h)
+    return hosts
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("preemptible", [False, True])
+def test_jax_matches_python_reference(seed, preemptible):
+    rng = np.random.default_rng(seed)
+    hosts = random_fleet(rng, n_hosts=13)
+    req = Request(
+        id="q", resources=SIZES[["small", "medium", "large"][seed % 3]],
+        preemptible=preemptible,
+    )
+    py = PreemptibleScheduler(cost_fn=PeriodCost())
+    py._rng = np.random.default_rng(0)  # ties broken by argmax-first anyway
+    jx = JaxPreemptibleScheduler(cost_fn=PeriodCost(), k_slots=8)
+
+    r_py = py.schedule(req, hosts, NOW)
+    r_jx = jx.schedule(req, hosts, NOW)
+
+    assert r_py.ok == r_jx.ok
+    if r_py.ok:
+        # Decisions must agree on cost; host may differ only on exact ties.
+        assert r_jx.plan.cost == pytest.approx(r_py.plan.cost, abs=1e-2)
+        if abs(r_py.plan.cost - r_jx.plan.cost) < 1e-6 and r_py.host != r_jx.host:
+            pass  # tie between hosts — both optimal
+        else:
+            assert set(r_jx.plan.ids) == set(r_py.plan.ids)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_pallas_kernel_matches_jnp_oracle(seed):
+    rng = np.random.default_rng(seed + 100)
+    hosts = random_fleet(rng, n_hosts=37)
+    state, _ = build_soa_state(hosts, NOW, PeriodCost(), k_slots=8)
+    masks = subset_masks(8)
+    req = np.asarray(SIZES["large"].vec, np.float32)
+
+    ref_cost, ref_mask, ref_feas = host_plan_terms(
+        state.free_f, state.inst_res, state.inst_cost, state.inst_valid,
+        req, masks,
+    )
+    from repro.kernels.sched_weigh import sched_weigh
+
+    k_cost, k_mask, k_feas = sched_weigh(
+        state.free_f, state.inst_res, state.inst_cost, state.inst_valid,
+        req, masks, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(ref_feas), np.asarray(k_feas))
+    # costs: exact where feasible (integer-minute inputs)
+    feas = np.asarray(ref_feas)
+    np.testing.assert_allclose(
+        np.asarray(k_cost)[feas], np.asarray(ref_cost)[feas], rtol=1e-6
+    )
+    np.testing.assert_array_equal(np.asarray(k_mask)[feas], np.asarray(ref_mask)[feas])
+
+
+def test_pallas_end_to_end_decision():
+    rng = np.random.default_rng(7)
+    hosts = random_fleet(rng, n_hosts=20)
+    req = Request(id="q", resources=SIZES["medium"], preemptible=False)
+    jx = JaxPreemptibleScheduler(cost_fn=PeriodCost(), k_slots=8, use_pallas=False)
+    jp = JaxPreemptibleScheduler(cost_fn=PeriodCost(), k_slots=8, use_pallas=True)
+    a = jx.schedule(req, hosts, NOW)
+    b = jp.schedule(req, hosts, NOW)
+    assert a.ok == b.ok and a.host == b.host and a.plan.ids == b.plan.ids

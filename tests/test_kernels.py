@@ -1,0 +1,94 @@
+"""Per-kernel interpret-mode validation against the pure-jnp oracles,
+swept over shapes and dtypes (deliverable (c))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_ref, rmsnorm_ref
+from repro.kernels.rmsnorm import rmsnorm
+
+
+def _qkv(key, b, s, h, g, hd, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, s, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (b, s, g, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (b, s, g, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+SHAPES = [
+    # b, s, h, g, hd
+    (1, 128, 1, 1, 64),
+    (2, 256, 4, 2, 64),     # GQA
+    (1, 256, 4, 1, 128),    # MQA
+    (2, 512, 2, 2, 32),
+]
+
+
+@pytest.mark.parametrize("shape", SHAPES, ids=str)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "full"])
+def test_flash_forward_matches_ref(shape, dtype, causal):
+    b, s, h, g, hd = shape
+    q, k, v = _qkv(jax.random.PRNGKey(0), b, s, h, g, hd, dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol,
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3], ids=str)
+def test_flash_backward_matches_ref(shape):
+    b, s, h, g, hd = shape
+    q, k, v = _qkv(jax.random.PRNGKey(1), b, s, h, g, hd, jnp.float32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True, interpret=True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, causal=True) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-3, rtol=2e-3)
+
+
+@pytest.mark.parametrize("block", [(64, 128), (128, 64)])
+def test_flash_block_shape_independence(block):
+    bq, bk = block
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 256, 2, 2, 64, jnp.float32)
+    a = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk, interpret=True)
+    b = flash_attention(q, k, v, causal=True, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("rows", [8, 100, 256, 1000])
+@pytest.mark.parametrize("d", [128, 384])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16], ids=["f32", "bf16"])
+def test_rmsnorm_matches_ref(rows, d, dtype):
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (rows, d), jnp.float32).astype(dtype)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d,), jnp.float32) * 0.1
+    out = rmsnorm(x, w, interpret=True)
+    ref = rmsnorm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_rmsnorm_3d_shape():
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 33, 128))
+    w = jnp.zeros((128,))
+    out = rmsnorm(x, w, interpret=True)
+    assert out.shape == x.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(rmsnorm_ref(x, w)),
+                               atol=1e-5, rtol=1e-5)

@@ -1,0 +1,100 @@
+"""MoE layer correctness: dispatch/combine vs a dense per-token reference,
+capacity dropping semantics, aux-loss sanity."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models.layers import materialize
+from repro.models.moe import _local_moe, moe_defs, moe_ffn
+
+
+def setup(e=8, k=2, d=32, f=64, cf=16.0):
+    cfg = dataclasses.replace(
+        reduced(get_config("moonshot-v1-16b-a3b"), d_model=d, d_ff=f),
+        n_experts=e, top_k=k, capacity_factor=cf,
+    )
+    params = materialize(moe_defs(cfg), jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d), jnp.float32)
+    return cfg, params, x
+
+
+def dense_reference(x, p, cfg):
+    """Per-token dense reference: run EVERY expert, combine top-k."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / top_p.sum(-1, keepdims=True)
+    gate = jnp.einsum("td,edf->tef", xf, p["wg"])
+    up = jnp.einsum("td,edf->tef", xf, p["wu"])
+    out_all = jnp.einsum("tef,efd->ted", jax.nn.silu(gate) * up, p["wd"])
+    y = jnp.zeros_like(xf)
+    for j in range(cfg.top_k):
+        y = y + jnp.take_along_axis(
+            out_all, top_e[:, j][:, None, None], axis=1
+        )[:, 0, :] * top_p[:, j][:, None]
+    return y.reshape(b, s, d)
+
+
+def test_dispatch_matches_dense_reference():
+    cfg, params, x = setup()
+    y, aux = moe_ffn(x, params, cfg)
+    ref = dense_reference(x, params, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=1e-4, rtol=1e-4)
+
+
+def test_capacity_drops_tokens_when_tight():
+    cfg, params, x = setup(cf=16.0)
+    y_full, _ = moe_ffn(x, params, cfg)
+    tight = dataclasses.replace(cfg, capacity_factor=0.25)
+    y_tight, _ = moe_ffn(x, params, tight)
+    # tight capacity must change (drop) some token outputs, not NaN them
+    assert np.isfinite(np.asarray(y_tight)).all()
+    assert not np.allclose(np.asarray(y_full), np.asarray(y_tight))
+    # dropped tokens produce zero contribution, never garbage
+    norms = np.linalg.norm(np.asarray(y_tight), axis=-1)
+    assert (norms <= np.linalg.norm(np.asarray(y_full), axis=-1).max() * 2).all()
+
+
+def test_aux_loss_positive_and_order_one():
+    cfg, params, x = setup()
+    _, aux = moe_ffn(x, params, cfg)
+    # Switch aux loss is ≥1 at balance (E * Σ f_e·p_e with Σf=Σp=1)
+    assert 0.5 <= float(aux) < float(cfg.n_experts)
+
+
+def test_moe_is_differentiable_through_dispatch():
+    cfg, params, x = setup()
+
+    def loss(p):
+        y, aux = moe_ffn(x, p, cfg)
+        return jnp.sum(jnp.square(y)) + 0.01 * aux
+
+    grads = jax.grad(loss)(params)
+    gnorm = float(
+        jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads)))
+    )
+    assert np.isfinite(gnorm) and gnorm > 0
+    # router receives gradient through the combine weights + aux loss
+    assert float(jnp.sum(jnp.abs(grads["router"]))) > 0
+
+
+def test_local_moe_peer_split_matches_single_peer():
+    """The a2a-sharded math (n_peers>1) must equal the single-shard math.
+    Simulated here by checking the n_peers=1 path against the dense ref and
+    relying on tests/test_jax_scheduler-style shard_map equivalence (the
+    shard_map path reuses _local_moe verbatim)."""
+    cfg, params, x = setup(e=8, k=2)
+    y1, _ = _local_moe(
+        x, params["router"], params["wg"], params["wu"], params["wd"],
+        cfg=cfg, n_peers=1, tp=1,
+    )
+    ref = dense_reference(x, params, cfg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(ref), atol=1e-4, rtol=1e-4)

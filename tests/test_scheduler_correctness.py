@@ -1,0 +1,166 @@
+"""Exact reproduction of the paper's correctness evaluation (§4.4).
+
+Tables 3–6 give concrete testbed snapshots (instances, their run times and
+sizes) and state which preemptible instance(s) the scheduler must select for
+termination.  These are the paper's own oracles; we reproduce all four.
+
+Testbed: 8 vCPU / 16000 MB RAM / 140 GB disk hosts (Table 1); VM sizes from
+Table 2.  Run times in the paper are minutes; we use seconds internally.
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.cluster import Cluster
+from repro.core.cost import PeriodCost
+from repro.core.scheduler import PreemptibleScheduler, RetryScheduler
+from repro.core.types import VM_SPEC, Host, Instance, Request
+
+NOW = 1_000_000.0  # arbitrary "now"
+
+SIZES = {
+    "small": VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20),
+    "medium": VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40),
+    "large": VM_SPEC.make(vcpus=4, ram_mb=8000, disk_gb=80),
+}
+# Table 1 lists 140 GB disks, yet Tables 3-6 host 4x40GB VMs per node: the
+# paper's deployment did not bind on disk (thin provisioning).  We reflect
+# that by making disk non-binding.
+NODE_CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=10_000)
+
+
+def mk_host(name: str, instances):
+    """instances: list of (id, size, minutes, preemptible)."""
+    h = Host(name=name, capacity=NODE_CAP)
+    for iid, size, minutes, pre in instances:
+        h.place(
+            Instance(
+                id=iid,
+                resources=SIZES[size],
+                preemptible=pre,
+                host=name,
+                start_time=NOW - minutes * 60.0,
+            )
+        )
+    return h
+
+
+def run_case(hosts, size: str, expect_host: str, expect_victims: set):
+    sched = PreemptibleScheduler(cost_fn=PeriodCost())
+    req = Request(id="new", resources=SIZES[size], preemptible=False)
+    res = sched.schedule(req, hosts, NOW)
+    assert res.ok, "paper scenario must be schedulable"
+    assert res.host == expect_host
+    assert set(res.plan.ids) == expect_victims
+    return res
+
+
+class TestTable3:
+    """Same-size (medium) — expected victim BP1 on host-B."""
+
+    def hosts(self):
+        return [
+            mk_host("host-A", [("A1", "medium", 272, False), ("A2", "medium", 172, False),
+                               ("AP1", "medium", 96, True), ("AP2", "medium", 207, True)]),
+            mk_host("host-B", [("B1", "medium", 136, False), ("B2", "medium", 200, False),
+                               ("BP1", "medium", 71, True), ("BP2", "medium", 91, True)]),
+            mk_host("host-C", [("C1", "medium", 97, False), ("C2", "medium", 275, False),
+                               ("CP1", "medium", 210, True), ("CP2", "medium", 215, True)]),
+            mk_host("host-D", [("D1", "medium", 16, False), ("DP1", "medium", 85, True),
+                               ("DP2", "medium", 199, True), ("DP3", "medium", 152, True)]),
+        ]
+
+    def test_selection(self):
+        run_case(self.hosts(), "medium", "host-B", {"BP1"})
+
+    def test_cost_is_partial_hour(self):
+        res = run_case(self.hosts(), "medium", "host-B", {"BP1"})
+        assert res.plan.cost == pytest.approx(11 * 60.0)  # 71 min → 11 min remainder
+
+    def test_single_pass(self):
+        res = run_case(self.hosts(), "medium", "host-B", {"BP1"})
+        assert res.passes == 1
+
+
+class TestTable4:
+    """Same-size (medium) — expected victim CP1 (remainder 1 min), which is
+    NOT the lowest-run-time preemptible instance (that is CP2)."""
+
+    def hosts(self):
+        return [
+            mk_host("host-A", [("AP1", "medium", 247, True), ("AP2", "medium", 463, True),
+                               ("AP3", "medium", 403, True), ("AP4", "medium", 410, True)]),
+            mk_host("host-B", [("B1", "medium", 388, False), ("B2", "medium", 103, False),
+                               ("BP1", "medium", 344, True), ("BP2", "medium", 476, True)]),
+            mk_host("host-C", [("C1", "medium", 481, False), ("C2", "medium", 177, False),
+                               ("CP1", "medium", 181, True), ("CP2", "medium", 160, True)]),
+            mk_host("host-D", [("D1", "medium", 173, False), ("DP1", "medium", 384, True),
+                               ("DP2", "medium", 168, True), ("DP3", "medium", 232, True)]),
+        ]
+
+    def test_selection(self):
+        res = run_case(self.hosts(), "medium", "host-C", {"CP1"})
+        assert res.plan.cost == pytest.approx(1 * 60.0)
+
+
+class TestTable5:
+    """Multi-size, large request — victims AP2+AP3+AP4 (sum of remainders 55)
+    beat single-instance options on B (58) and C (57)."""
+
+    def hosts(self):
+        return [
+            mk_host("host-A", [("AP1", "large", 298, True), ("AP2", "medium", 278, True),
+                               ("AP3", "small", 190, True), ("AP4", "small", 187, True)]),
+            mk_host("host-B", [("B1", "large", 494, False), ("BP1", "large", 178, True)]),
+            mk_host("host-C", [("CP1", "large", 297, True), ("CP2", "medium", 296, True),
+                               ("CP3", "small", 296, True)]),
+            mk_host("host-D", [("D1", "medium", 176, False), ("D2", "medium", 200, False),
+                               ("D3", "large", 116, False)]),
+        ]
+
+    def test_selection(self):
+        res = run_case(self.hosts(), "large", "host-A", {"AP2", "AP3", "AP4"})
+        assert res.plan.cost == pytest.approx(55 * 60.0)
+
+
+class TestTable6:
+    """Multi-size, medium request — single small victim BP3: host-B has one
+    small slot free already, so evacuating one small instance suffices."""
+
+    def hosts(self):
+        return [
+            mk_host("host-A", [("A1", "large", 234, False), ("A2", "medium", 122, False),
+                               ("AP1", "medium", 172, True)]),
+            mk_host("host-B", [("BP1", "large", 272, True), ("BP2", "medium", 212, True),
+                               ("BP3", "small", 380, True)]),
+            mk_host("host-C", [("C1", "small", 182, False), ("C2", "medium", 120, False),
+                               ("C3", "large", 116, False)]),
+            mk_host("host-D", [("DP1", "large", 232, True), ("DP2", "small", 213, True),
+                               ("DP3", "medium", 324, True), ("DP4", "small", 314, True)]),
+        ]
+
+    def test_selection(self):
+        res = run_case(self.hosts(), "medium", "host-B", {"BP3"})
+        assert res.plan.cost == pytest.approx(20 * 60.0)
+
+    def test_retry_scheduler_agrees_but_needs_two_passes(self):
+        sched = RetryScheduler(cost_fn=PeriodCost())
+        req = Request(id="new", resources=SIZES["medium"], preemptible=False)
+        res = sched.schedule(req, self.hosts(), NOW)
+        assert res.ok and res.host == "host-B" and set(res.plan.ids) == {"BP3"}
+        assert res.passes == 2  # the latency penalty Fig. 2 measures
+
+
+class TestClusterApply:
+    def test_apply_evacuates_and_places(self):
+        hosts = TestTable6().hosts()
+        cluster = Cluster(hosts)
+        sched = PreemptibleScheduler(cost_fn=PeriodCost())
+        req = Request(id="new", resources=SIZES["medium"], preemptible=False)
+        inst = cluster.schedule_and_place(sched, req, NOW)
+        assert inst is not None and inst.host == "host-B"
+        ids = {i.id for i in cluster.hosts["host-B"].instances.values()}
+        assert "BP3" not in ids and inst.id in ids
+        assert cluster.stats.preemptions == 1
+        # h_f accounting is consistent after the swap
+        assert not cluster.hosts["host-B"].free_full.any_negative()

@@ -1,0 +1,147 @@
+"""Property-based tests (hypothesis) for the scheduler's invariants."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cluster import Cluster
+from repro.core.cost import CountCost, PeriodCost
+from repro.core.scheduler import PreemptibleScheduler, RetryScheduler
+from repro.core.select_terminate import best_plan
+from repro.core.types import VM_SPEC, Host, Instance, Request
+
+NOW = 1_000_000.0
+CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=160)
+FLAVORS = [
+    VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20),
+    VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40),
+    VM_SPEC.make(vcpus=4, ram_mb=8000, disk_gb=80),
+]
+
+
+@st.composite
+def fleets(draw, max_hosts=8):
+    n = draw(st.integers(1, max_hosts))
+    hosts = []
+    iid = 0
+    for i in range(n):
+        h = Host(name=f"h{i}", capacity=CAP)
+        for _ in range(draw(st.integers(0, 5))):
+            fl = FLAVORS[draw(st.integers(0, 2))]
+            if not fl.fits_in(h.free_full):
+                break
+            h.place(Instance(
+                id=f"x{iid}",
+                resources=fl,
+                preemptible=draw(st.booleans()),
+                host=h.name,
+                start_time=NOW - draw(st.integers(1, 500)) * 60.0,
+            ))
+            iid += 1
+        hosts.append(h)
+    return hosts
+
+
+@st.composite
+def requests(draw):
+    return Request(
+        id="q", resources=FLAVORS[draw(st.integers(0, 2))],
+        preemptible=draw(st.booleans()),
+    )
+
+
+@given(fleets(), requests())
+@settings(max_examples=60, deadline=None)
+def test_success_iff_view_fits(hosts, req):
+    """The paper's dual-state guarantee: a request is schedulable exactly
+    when it fits the view-appropriate free resources of some host."""
+    sched = PreemptibleScheduler(cost_fn=PeriodCost())
+    res = sched.schedule(req, hosts, NOW)
+    view = (lambda h: h.free_full) if req.preemptible else (lambda h: h.free_normal)
+    expected = any(req.resources.fits_in(view(h)) for h in hosts)
+    assert res.ok == expected
+
+
+@given(fleets(), requests())
+@settings(max_examples=60, deadline=None)
+def test_plan_only_contains_preemptible_from_winner(hosts, req):
+    sched = PreemptibleScheduler(cost_fn=PeriodCost())
+    res = sched.schedule(req, hosts, NOW)
+    if not res.ok:
+        return
+    winner = next(h for h in hosts if h.name == res.host)
+    for inst in res.plan.instances:
+        assert inst.preemptible
+        assert inst.id in winner.instances
+
+
+@given(fleets(), requests())
+@settings(max_examples=60, deadline=None)
+def test_apply_never_overcommits(hosts, req):
+    """After evacuation + placement, no host has negative free resources."""
+    cluster = Cluster(hosts)
+    sched = PreemptibleScheduler(cost_fn=PeriodCost())
+    cluster.schedule_and_place(sched, req, NOW)
+    for h in cluster.hosts.values():
+        assert not h.free_full.any_negative()
+
+
+@given(fleets(), requests())
+@settings(max_examples=40, deadline=None)
+def test_retry_agrees_with_single_pass_on_feasibility(hosts, req):
+    """The retry design reaches the same feasibility verdict — it just pays
+    a second cycle for it (the paper's Fig. 2 point)."""
+    a = PreemptibleScheduler(cost_fn=PeriodCost()).schedule(req, hosts, NOW)
+    b = RetryScheduler(cost_fn=PeriodCost()).schedule(req, hosts, NOW)
+    assert a.ok == b.ok
+
+
+@given(fleets())
+@settings(max_examples=40, deadline=None)
+def test_dual_state_dominance(hosts):
+    """h_n free resources always dominate h_f (preemptible usage ≥ 0)."""
+    for h in hosts:
+        assert h.free_full <= h.free_normal
+
+
+@given(fleets(), requests())
+@settings(max_examples=40, deadline=None)
+def test_best_plan_is_cost_minimal(hosts, req):
+    """Alg. 5 exact enumeration returns THE minimum-cost feasible subset
+    (verified against an independent brute force)."""
+    import itertools
+
+    cost_fn = PeriodCost()
+    for h in hosts:
+        plan = best_plan(h, req, cost_fn, NOW)
+        pre = h.preemptible_instances()
+        # brute force
+        best = None
+        free = h.free_full
+        if req.resources.fits_in(free):
+            best = 0.0
+        else:
+            need = np.maximum((req.resources - free).vec, 0.0)
+            for r in range(1, len(pre) + 1):
+                for combo in itertools.combinations(pre, r):
+                    freed = np.sum([i.resources.vec for i in combo], axis=0)
+                    if np.all(freed >= need - 1e-9):
+                        c = cost_fn.cost(combo, NOW)
+                        if best is None or c < best - 1e-9:
+                            best = c
+        if best is None:
+            assert not plan.feasible
+        else:
+            assert plan.feasible
+            assert plan.cost == pytest.approx(best, abs=1e-6)
+
+
+@given(fleets(), requests())
+@settings(max_examples=30, deadline=None)
+def test_count_cost_minimizes_cardinality(hosts, req):
+    """With CountCost, the plan terminates the fewest possible instances."""
+    for h in hosts:
+        plan = best_plan(h, req, CountCost(), NOW)
+        if plan.feasible and plan.instances:
+            assert plan.cost == len(plan.instances)

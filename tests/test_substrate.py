@@ -1,0 +1,206 @@
+"""Substrate layers: optimizers, schedules, data pipeline, sharding specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.pipeline import DataConfig, SyntheticLMDataset
+from repro.optim.optimizers import (
+    adamw_init,
+    adamw_update,
+    adafactor_init,
+    adafactor_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    make_optimizer,
+)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def quadratic_params():
+    return {"w": jnp.asarray([3.0, -2.0, 1.0]), "b": jnp.ones((2, 4)) * 5}
+
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_minimizes_quadratic(name):
+    opt = make_optimizer(name, weight_decay=0.0)
+    params = quadratic_params()
+    state = opt.init(params)
+
+    def loss(p):
+        return sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(p))
+
+    l0 = float(loss(params))
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        delta, state = opt.update(grads, state, params, jnp.asarray(0.05))
+        params = jax.tree.map(lambda p, d: p + d, params, delta)
+    assert float(loss(params)) < 0.05 * l0
+
+
+def test_adafactor_state_is_factored():
+    params = {"big": jnp.zeros((64, 32)), "vec": jnp.zeros((7,))}
+    state = adafactor_init(params)
+    row, col = state.nu["big"]
+    assert row.shape == (64,) and col.shape == (32,)
+    assert state.nu["vec"].shape == (7,)
+    assert state.mu is None  # no first moment → 1/3 the AdamW state
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((10,)) * 100.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(10) * 100, rel=1e-5)
+    assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100, min_frac=0.1)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1e-3)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(1e-4, rel=1e-2)
+    assert float(lr(jnp.asarray(5))) == pytest.approx(5e-4)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic_and_seekable():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=4, seed=9)
+    d1, d2 = SyntheticLMDataset(cfg), SyntheticLMDataset(cfg)
+    b1, b2 = d1.batch_at(17), d2.batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch_at(17)["tokens"], d1.batch_at(18)["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=50, seq_len=8, global_batch=2)
+    b = SyntheticLMDataset(cfg).batch_at(0)
+    assert b["tokens"].shape == b["labels"].shape == (2, 8)
+    assert (b["tokens"] < 50).all() and (b["labels"] < 50).all()
+
+
+def test_data_host_shards_differ():
+    k = dict(vocab_size=100, seq_len=16, global_batch=8, seed=1)
+    a = SyntheticLMDataset(DataConfig(host_shard=(0, 2), **k)).batch_at(0)
+    b = SyntheticLMDataset(DataConfig(host_shard=(1, 2), **k)).batch_at(0)
+    assert a["tokens"].shape == (4, 16)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_data_prefetch_thread():
+    cfg = DataConfig(vocab_size=100, seq_len=16, global_batch=2)
+    ds = SyntheticLMDataset(cfg)
+    ds.start(from_step=5)
+    step, batch = next(ds)
+    assert step == 5
+    step2, _ = next(ds)
+    assert step2 == 6
+    ds.stop()
+    np.testing.assert_array_equal(batch["tokens"], ds.batch_at(5)["tokens"])
+
+
+# ---------------------------------------------------------------------------
+# param/pspec coherence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "arctic-480b", "zamba2-7b", "xlstm-125m"])
+def test_param_defs_match_params_structure(arch):
+    from repro.configs import get_config, reduced
+    from repro.models.layers import pspec_tree, shape_tree
+    from repro.models.model import init_params, model_defs
+
+    cfg = reduced(get_config(arch))
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    shapes = shape_tree(model_defs(cfg))
+    specs = pspec_tree(model_defs(cfg))
+    assert jax.tree.structure(params) == jax.tree.structure(shapes)
+    assert jax.tree.structure(params) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    )
+    for p, s in zip(jax.tree.leaves(params), jax.tree.leaves(shapes)):
+        assert p.shape == s.shape
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (cross-pod wire format)
+# ---------------------------------------------------------------------------
+
+
+def test_int8_compression_bounded_error():
+    from repro.training.train_step import _compress_int8
+
+    g = jax.random.normal(jax.random.PRNGKey(0), (256, 64)) * 3.0
+    q = _compress_int8(g)
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(q - g))) <= scale * 0.5 + 1e-6
+    # int8 payload is 4x smaller on the wire than f32
+    assert q.dtype == g.dtype  # dequantized in-graph; wire format is int8
+
+
+def test_training_with_compression_tracks_uncompressed():
+    """int8 wire compression must not derail optimization: the loss
+    trajectory stays within noise of the uncompressed run and gradients
+    stay finite (the convergence contract at this scale)."""
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import DataConfig, SyntheticLMDataset
+    from repro.models.model import init_params
+    from repro.optim.optimizers import make_optimizer
+    from repro.training.train_step import TrainSettings, make_train_step
+
+    cfg = reduced(get_config("qwen2-1.5b"))
+    data = SyntheticLMDataset(DataConfig(vocab_size=cfg.vocab_size,
+                                         seq_len=32, global_batch=4))
+    trajs = {}
+    for comp in ("none", "int8"):
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        opt = make_optimizer("adamw")
+        state = opt.init(params)
+        step = jax.jit(make_train_step(
+            cfg, TrainSettings(learning_rate=1e-3, warmup_steps=2,
+                               grad_compression=comp), opt))
+        losses = []
+        for i in range(15):
+            params, state, m = step(params, state, data.batch_at(i))
+            losses.append(float(m["loss"]))
+            assert np.isfinite(losses[-1])
+        trajs[comp] = losses
+    diff = np.abs(np.array(trajs["int8"]) - np.array(trajs["none"]))
+    # trajectories drift as quantization noise compounds; the contract is
+    # "stays in the same loss regime": small mean gap, no blow-up.
+    assert diff.mean() < 0.05 and diff.max() < 0.3
+
+
+def test_microbatched_step_matches_single_batch_grads():
+    """Gradient accumulation over microbatches equals the full-batch step
+    (same data, fp32 accumulation)."""
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import DataConfig, SyntheticLMDataset
+    from repro.models.model import init_params
+    from repro.optim.optimizers import make_optimizer
+    from repro.training.train_step import TrainSettings, make_train_step
+
+    cfg = reduced(get_config("qwen2-1.5b"))
+    data = SyntheticLMDataset(DataConfig(vocab_size=cfg.vocab_size,
+                                         seq_len=16, global_batch=8))
+    batch = data.batch_at(0)
+    p0 = init_params(cfg, jax.random.PRNGKey(0))
+    outs = []
+    for mb in (1, 4):
+        opt = make_optimizer("adamw")
+        step = jax.jit(make_train_step(cfg, TrainSettings(microbatches=mb), opt))
+        p, _, m = step(p0, opt.init(p0), batch)
+        outs.append((jax.tree.leaves(p), float(m["loss"])))
+    # losses are means over microbatches of per-mb means — equal batch sizes
+    assert outs[0][1] == pytest.approx(outs[1][1], rel=2e-2)
+    for a, b in zip(outs[0][0], outs[1][0]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-2)
