@@ -17,14 +17,14 @@ from repro.core.jax_scheduler import JaxPreemptibleScheduler, build_soa_state
 from repro.core.scheduler import PreemptibleScheduler
 from repro.core.types import Request
 
-from .common import NOW, SIZES, emit, saturated_fleet, time_call
+from .common import NOW, SIZES, TINY, emit, saturated_fleet, time_call
 
 
 def run() -> None:
     req = Request(id="r", resources=SIZES["medium"], preemptible=False)
     req_vec = jnp.asarray(req.resources.vec, jnp.float32)
     py = PreemptibleScheduler(cost_fn=PeriodCost())
-    for n_hosts in (100, 1000, 10_000):
+    for n_hosts in (100,) if TINY else (100, 1000, 10_000):
         hosts = saturated_fleet(n_hosts)
         us_py, _ = time_call(lambda: py.schedule(req, hosts, NOW),
                              repeats=5 if n_hosts >= 10_000 else 10)

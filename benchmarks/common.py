@@ -1,12 +1,17 @@
 """Shared benchmark fixtures: the paper's testbed geometry + fleet builders."""
 from __future__ import annotations
 
+import os
 import time
 from typing import Callable, List, Tuple
 
 import numpy as np
 
 from repro.core.types import VM_SPEC, Host, Instance, Request
+
+#: CI smoke mode: shrink every fleet/duration so ``python -m benchmarks.run``
+#: exercises all entrypoints in seconds rather than minutes.
+TINY = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
 
 SIZES = {
     "small": VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20),

@@ -26,7 +26,11 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:  # optional: zstd shard compression (install the `compression` extra)
+    import zstandard
+except ImportError:  # graceful fallback: write uncompressed .npz shards
+    zstandard = None
 
 SHARD_BYTES = 256 * 1024 * 1024
 
@@ -91,11 +95,19 @@ class Checkpointer:
         d = os.path.join(self.dir, f"step_{step}")
         with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
             manifest = msgpack.unpackb(f.read(), raw=False)
-        dctx = zstandard.ZstdDecompressor()
         arrays: Dict[str, np.ndarray] = {}
         for shard in manifest["shards"]:
             with open(os.path.join(d, shard), "rb") as f:
-                buf = dctx.decompress(f.read())
+                buf = f.read()
+            if shard.endswith(".zst"):
+                if zstandard is None:
+                    raise RuntimeError(
+                        f"checkpoint shard {shard} is zstd-compressed but the "
+                        "'zstandard' package is not installed "
+                        "(pip install 'repro-preemptible-scheduler[compression]' "
+                        "or, from a checkout, pip install -e '.[compression]')"
+                    )
+                buf = zstandard.ZstdDecompressor().decompress(buf)
             with np.load(io.BytesIO(buf)) as z:
                 for k in z.files:
                     arrays[k] = z[k]
@@ -123,7 +135,7 @@ class Checkpointer:
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        cctx = zstandard.ZstdCompressor(level=1)
+        cctx = zstandard.ZstdCompressor(level=1) if zstandard is not None else None
 
         shards, current, size, idx = [], {}, 0, 0
 
@@ -133,9 +145,13 @@ class Checkpointer:
                 return
             buf = io.BytesIO()
             np.savez(buf, **current)
-            name = f"shard_{idx}.npz.zst"
+            payload = buf.getvalue()
+            name = f"shard_{idx}.npz"
+            if cctx is not None:
+                payload = cctx.compress(payload)
+                name += ".zst"
             with open(os.path.join(tmp, name), "wb") as f:
-                f.write(cctx.compress(buf.getvalue()))
+                f.write(payload)
             shards.append(name)
             current, size = {}, 0
             idx += 1

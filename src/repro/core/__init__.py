@@ -14,7 +14,8 @@ from .scheduler import (
     RetryScheduler,
     SCHEDULER_REGISTRY,
 )
-from .simulator import Simulator, WorkloadSpec
+from .simulator import Simulator, SoASimulator, WorkloadSpec
+from .soa_fleet import SoAFleet, SoAOutcome
 from .types import (
     Flavor,
     Host,
@@ -33,7 +34,8 @@ __all__ = [
     "CountCost", "PeriodCost", "RecomputeCost", "RevenueCost",
     "PreemptAck", "PreemptionController",
     "FilterScheduler", "PreemptibleScheduler", "RetryScheduler", "SCHEDULER_REGISTRY",
-    "Simulator", "WorkloadSpec",
+    "Simulator", "SoASimulator", "WorkloadSpec",
+    "SoAFleet", "SoAOutcome",
     "Flavor", "Host", "Instance", "Request", "ResourceSpec", "Resources",
     "ScheduleResult", "TerminationPlan", "TPU_SPEC", "VM_SPEC",
 ]

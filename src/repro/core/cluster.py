@@ -109,6 +109,15 @@ class Cluster:
         result = scheduler.schedule(req, self.host_list(), now)
         return self.apply(result, now)
 
+    @classmethod
+    def from_fleet(cls, fleet) -> "Cluster":
+        """Materialize a python ``Cluster`` from an incremental ``SoAFleet``
+        (fast-path → python-tooling bridge; placement re-validates capacity)."""
+        cluster = cls(fleet.sync_hosts())
+        cluster.preempted = list(fleet.preempted)
+        cluster.stats.preemptions = len(fleet.preempted)
+        return cluster
+
 
 def make_uniform_fleet(
     n_hosts: int,

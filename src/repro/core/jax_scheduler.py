@@ -19,6 +19,15 @@ scheduler wrapper used by benchmarks.
 Capacity model: each host carries up to ``K`` preemptible instances (padded,
 masked).  2^K subset masks are enumerated exactly — K≤12 covers every
 practical oversubscription level (the paper's testbed peaked at 4).
+
+Two state flavors:
+
+* ``SoAHostState`` + ``build_soa_state`` — rebuilt from python ``Host``
+  objects per call (the correctness oracle; O(N·K) python work per request);
+* ``SoAFleetState`` + ``build_fleet_state`` — built once, then updated
+  incrementally on device via the pure transitions below (``schedule_step``,
+  ``schedule_many``, ``apply_*``) — the fleet-scale fast path driven by
+  ``core.soa_fleet.SoAFleet`` / ``core.simulator.SoASimulator``.
 """
 from __future__ import annotations
 
@@ -30,7 +39,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cost import BILL_PERIOD_S, CostFunction, PeriodCost
+from .cost import (
+    BILL_PERIOD_S,
+    CostFunction,
+    CountCost,
+    PeriodCost,
+    RevenueCost,
+)
 from .types import (
     EMPTY_PLAN,
     Host,
@@ -72,6 +87,44 @@ class SoAHostState:
         return self.inst_res.shape[1]
 
 
+def _hosts_to_arrays(
+    hosts: Sequence[Host],
+    k_slots: int,
+    domain_ids: Optional[Dict[str, int]],
+):
+    """Shared host→array conversion for both state flavors: the common
+    per-host columns plus the per-host preemptible lists (sorted by id),
+    with the ``k_slots`` overflow check applied.
+
+    Returns ``(d, free_f, free_n, schedulable, domain, slow, pre_lists)``.
+    """
+    n = len(hosts)
+    d = len(hosts[0].capacity.spec.dims) if hosts else 0
+    if domain_ids is None:
+        domain_ids = {}
+        for h in hosts:
+            domain_ids.setdefault(h.domain, len(domain_ids))
+    free_f = np.zeros((n, d), np.float32)
+    free_n = np.zeros((n, d), np.float32)
+    schedulable = np.zeros((n,), bool)
+    domain = np.zeros((n,), np.int32)
+    slow = np.ones((n,), np.float32)
+    pre_lists: List[List[Instance]] = []
+    for i, h in enumerate(hosts):
+        free_f[i] = h.free_full.vec
+        free_n[i] = h.free_normal.vec
+        schedulable[i] = h.schedulable
+        domain[i] = domain_ids[h.domain]
+        slow[i] = h.slow_factor
+        pre = sorted(h.preemptible_instances(), key=lambda x: x.id)
+        if len(pre) > k_slots:
+            raise ValueError(
+                f"host {h.name} has {len(pre)} preemptible instances > k_slots={k_slots}"
+            )
+        pre_lists.append(pre)
+    return d, free_f, free_n, schedulable, domain, slow, pre_lists
+
+
 def build_soa_state(
     hosts: Sequence[Host],
     now: float,
@@ -86,31 +139,14 @@ def build_soa_state(
     """
     cost_fn = cost_fn or PeriodCost()
     n = len(hosts)
-    d = len(hosts[0].capacity.spec.dims) if hosts else 0
-    if domain_ids is None:
-        domain_ids = {}
-        for h in hosts:
-            domain_ids.setdefault(h.domain, len(domain_ids))
-    free_f = np.zeros((n, d), np.float32)
-    free_n = np.zeros((n, d), np.float32)
-    schedulable = np.zeros((n,), bool)
-    domain = np.zeros((n,), np.int32)
-    slow = np.ones((n,), np.float32)
+    d, free_f, free_n, schedulable, domain, slow, pre_lists = _hosts_to_arrays(
+        hosts, k_slots, domain_ids
+    )
     inst_res = np.zeros((n, k_slots, d), np.float32)
     inst_cost = np.zeros((n, k_slots), np.float32)
     inst_valid = np.zeros((n, k_slots), bool)
     slots: List[List[Instance]] = []
-    for i, h in enumerate(hosts):
-        free_f[i] = h.free_full.vec
-        free_n[i] = h.free_normal.vec
-        schedulable[i] = h.schedulable
-        domain[i] = domain_ids[h.domain]
-        slow[i] = h.slow_factor
-        pre = sorted(h.preemptible_instances(), key=lambda x: x.id)
-        if len(pre) > k_slots:
-            raise ValueError(
-                f"host {h.name} has {len(pre)} preemptible instances > k_slots={k_slots}"
-            )
+    for i, pre in enumerate(pre_lists):
         slots.append(pre)
         for k, inst in enumerate(pre):
             inst_res[i, k] = inst.resources.vec
@@ -159,11 +195,16 @@ def host_plan_terms(
     # Invalid slots contribute nothing and cost +inf if ever selected.
     res = jnp.where(inst_valid[..., None], inst_res, 0.0)            # (N,K,D)
     cost = jnp.where(inst_valid, inst_cost, POS_INF)                 # (N,K)
-    freed = jnp.einsum("mk,nkd->nmd", masks, res)                    # (N,M,D)
-    ok = jnp.all(free_f[:, None, :] + freed >= req_res[None, None, :] - 1e-6, axis=-1)
+    # One (N,K)@(K,M) matmul per resource dimension (D small, static →
+    # unrolled) instead of materializing the (N,M,D) freed tensor — the same
+    # MXU-shaped formulation as the Pallas kernel, and ~1.5x faster on CPU.
+    mT = masks.T                                                     # (K,M)
+    ok = None
+    for d in range(res.shape[-1]):
+        cond = free_f[:, d][:, None] + res[:, :, d] @ mT >= req_res[d] - 1e-6
+        ok = cond if ok is None else (ok & cond)                     # (N,M)
     # Subsets touching an invalid slot are excluded via +inf cost.
-    sub_cost = jnp.einsum("mk,nk->nm", masks, cost)                  # (N,M)
-    sub_cost = jnp.where(ok, sub_cost, POS_INF)
+    sub_cost = jnp.where(ok, cost @ mT, POS_INF)                     # (N,M)
     # Tie-break: cheaper cost first, then fewer instances, then first index
     # (matches the python reference).  Two-stage to stay exact in f32.
     best_cost = jnp.min(sub_cost, axis=-1)                           # (N,)
@@ -181,6 +222,74 @@ def _normalize(w: jax.Array, valid: jax.Array) -> jax.Array:
     hi = jnp.max(jnp.where(valid, w, NEG_INF))
     span = hi - lo
     return jnp.where(span > 1e-12, (w - lo) / jnp.where(span > 1e-12, span, 1.0), 0.0)
+
+
+def _decision_core(
+    free_f: jax.Array,
+    free_n: jax.Array,
+    schedulable: jax.Array,
+    domain: jax.Array,
+    slow: jax.Array,
+    inst_res: jax.Array,
+    inst_cost: jax.Array,
+    inst_valid: jax.Array,
+    req_res: jax.Array,
+    req_preemptible: jax.Array,
+    req_domain: jax.Array,
+    masks: jax.Array,
+    use_pallas: bool,
+    weigher_multipliers: Tuple[float, float, float, float],
+    require_free_slot: bool,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The decision pipeline on raw SoA arrays (shared by the rebuild path,
+    the persistent fast path, and the batched ``lax.scan`` path)."""
+    n_hosts = free_f.shape[0]
+    # ---- phase 1: dual-view filtering (the paper's trick) -------------------
+    view = jnp.where(req_preemptible, free_f, free_n)                # (N,D)
+    fits = jnp.all(view >= req_res[None, :] - 1e-6, axis=-1)
+    fits &= schedulable
+    fits &= (req_domain < 0) | (domain == req_domain)
+    if require_free_slot:
+        # Persistent state carries K slots per host: a preemptible request
+        # needs an empty slot (the rebuild path instead raises on overflow).
+        fits &= jnp.where(req_preemptible, jnp.any(~inst_valid, axis=-1), True)
+
+    # ---- phase 2+3 terms: Alg.5 enumeration (skipped for preemptible reqs) --
+    if use_pallas:
+        from repro.kernels.sched_weigh import sched_weigh as _sched_weigh
+
+        best_cost, best_mask, any_feasible = _sched_weigh(
+            free_f, inst_res, inst_cost, inst_valid, req_res, masks,
+        )
+    else:
+        best_cost, best_mask, any_feasible = host_plan_terms(
+            free_f, inst_res, inst_cost, inst_valid, req_res, masks,
+        )
+    # Preemptible requests never terminate others: empty plan, zero cost.
+    best_cost = jnp.where(req_preemptible, 0.0, best_cost)
+    best_mask = jnp.where(req_preemptible, 0, best_mask)
+    feasible = jnp.where(req_preemptible, fits, any_feasible)
+
+    valid = fits & feasible
+    overcommitted = ~jnp.all(free_f >= req_res[None, :] - 1e-6, axis=-1)
+
+    # ---- phase 2: normalized weighing on h_f --------------------------------
+    m_over, m_term, m_pack, m_strag = weigher_multipliers
+    omega = jnp.zeros(n_hosts)
+    if m_over:
+        omega += m_over * _normalize(jnp.where(overcommitted, -1.0, 0.0), valid)
+    if m_term:
+        omega += m_term * _normalize(-jnp.minimum(best_cost, POS_INF), valid)
+    if m_pack:
+        omega += m_pack * _normalize(-free_f.sum(-1), valid)
+    if m_strag:
+        omega += m_strag * _normalize(-slow, valid)
+    omega = jnp.where(valid, omega, NEG_INF)
+
+    # ---- argmax (first-index tie-break) --------------------------------------
+    host_idx = jnp.argmax(omega).astype(jnp.int32)
+    ok = omega[host_idx] > NEG_INF / 2
+    return host_idx, best_mask[host_idx], ok
 
 
 @functools.partial(
@@ -201,50 +310,400 @@ def schedule_decision(
     ``weigher_multipliers`` = (overcommit, termination_cost, packing,
     straggler) — the first two reproduce the paper's evaluation policy.
     """
-    # ---- phase 1: dual-view filtering (the paper's trick) -------------------
-    view = jnp.where(req_preemptible, state.free_f, state.free_n)    # (N,D)
-    fits = jnp.all(view >= req_res[None, :] - 1e-6, axis=-1)
-    fits &= state.schedulable
-    fits &= (req_domain < 0) | (state.domain == req_domain)
+    return _decision_core(
+        state.free_f, state.free_n, state.schedulable, state.domain,
+        state.slow, state.inst_res, state.inst_cost, state.inst_valid,
+        req_res, req_preemptible, req_domain, masks,
+        use_pallas, weigher_multipliers, require_free_slot=False,
+    )
 
-    # ---- phase 2+3 terms: Alg.5 enumeration (skipped for preemptible reqs) --
-    if use_pallas:
-        from repro.kernels.sched_weigh import sched_weigh as _sched_weigh
 
-        best_cost, best_mask, any_feasible = _sched_weigh(
-            state.free_f, state.inst_res, state.inst_cost,
-            state.inst_valid, req_res, masks,
+# ---------------------------------------------------------------------------
+# Persistent device-resident fleet state + incremental transitions
+# ---------------------------------------------------------------------------
+#
+# ``build_soa_state`` rebuilds every array from python ``Host`` objects on
+# every call — O(N·K) python work that dominates latency at fleet scale.  The
+# persistent view below is built ONCE and then mutated purely on device:
+# termination costs are derived from per-slot start times at decision time
+# (so the state never goes stale), placements allocate a free slot, and a
+# ``lax.scan`` runs whole request batches with each decision seeing the
+# previous ones' placements.  The rebuild path stays as the correctness
+# oracle (see tests/test_soa_incremental.py).
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SoAFleetState:
+    """Persistent struct-of-arrays fleet view (device-resident).
+
+    Unlike ``SoAHostState`` (whose ``inst_cost`` is frozen at build time),
+    slots carry ``inst_start``/``inst_price`` so the termination cost is a
+    pure function of (state, now) — the prerequisite for incremental reuse.
+    """
+
+    free_f: jax.Array       # (N, D) h_f free resources
+    free_n: jax.Array       # (N, D) h_n free resources
+    schedulable: jax.Array  # (N,)   bool
+    domain: jax.Array       # (N,)   int32
+    slow: jax.Array         # (N,)   float32 straggler factor
+    inst_res: jax.Array     # (N, K, D) preemptible slot resources (padded)
+    inst_start: jax.Array   # (N, K)    slot start times
+    inst_price: jax.Array   # (N, K)    slot price rates
+    inst_valid: jax.Array   # (N, K)    bool
+
+    @property
+    def n_hosts(self) -> int:
+        return self.free_f.shape[0]
+
+    @property
+    def k_slots(self) -> int:
+        return self.inst_res.shape[1]
+
+
+def jax_cost_params(cost_fn: CostFunction) -> Tuple[str, float]:
+    """Map a python cost module onto the jnp slot-cost kinds.
+
+    Returns ``(kind, period_s)``.  Only per-instance additive costs that are
+    pure functions of (start_time, price, now) are expressible on device;
+    anything else must use the rebuild path (``build_soa_state``).
+    """
+    if isinstance(cost_fn, PeriodCost):
+        return "period", cost_fn.period_s
+    if isinstance(cost_fn, CountCost):
+        return "count", BILL_PERIOD_S
+    if isinstance(cost_fn, RevenueCost):
+        return "revenue", cost_fn.period_s
+    raise ValueError(
+        f"cost function {cost_fn.name!r} has no device-resident equivalent; "
+        "use the rebuild path (build_soa_state + schedule_decision)"
+    )
+
+
+def slot_costs(
+    cost_kind: str,
+    inst_start: jax.Array,
+    inst_price: jax.Array,
+    now: jax.Array,
+    period: jax.Array,
+) -> jax.Array:
+    """Per-slot termination cost at time ``now`` (invalid slots are masked
+    downstream, so garbage values on them are harmless)."""
+    if cost_kind == "period":
+        return (now - inst_start) % period
+    if cost_kind == "count":
+        return jnp.ones_like(inst_start)
+    if cost_kind == "revenue":
+        return ((now - inst_start) % period) / period * inst_price
+    raise ValueError(f"unknown cost kind {cost_kind!r}")
+
+
+def build_fleet_state(
+    hosts: Sequence[Host],
+    k_slots: int = 8,
+    domain_ids: Optional[Dict[str, int]] = None,
+    slot_assignment: Optional[Sequence[Dict[str, int]]] = None,
+) -> Tuple[SoAFleetState, List[List[Optional[Instance]]]]:
+    """Convert python ``Host`` objects to a persistent ``SoAFleetState``.
+
+    ``slot_assignment`` optionally fixes the slot index of each preemptible
+    instance per host (id → slot); the default packs them sorted by id.  The
+    parity tests use it to rebuild with the exact slot layout the incremental
+    path produced, making the comparison bit-exact.
+    """
+    n = len(hosts)
+    d, free_f, free_n, schedulable, domain, slow, pre_lists = _hosts_to_arrays(
+        hosts, k_slots, domain_ids
+    )
+    inst_res = np.zeros((n, k_slots, d), np.float32)
+    inst_start = np.zeros((n, k_slots), np.float32)
+    inst_price = np.ones((n, k_slots), np.float32)
+    inst_valid = np.zeros((n, k_slots), bool)
+    slots: List[List[Optional[Instance]]] = []
+    for i, pre in enumerate(pre_lists):
+        row: List[Optional[Instance]] = [None] * k_slots
+        for k, inst in enumerate(pre):
+            if slot_assignment is not None:
+                k = slot_assignment[i][inst.id]
+            if row[k] is not None:
+                raise ValueError(
+                    f"slot collision on host {hosts[i].name} slot {k}"
+                )
+            row[k] = inst
+            inst_res[i, k] = inst.resources.vec
+            inst_start[i, k] = inst.start_time
+            inst_price[i, k] = inst.price_rate
+            inst_valid[i, k] = True
+        slots.append(row)
+    state = SoAFleetState(
+        free_f=jnp.asarray(free_f),
+        free_n=jnp.asarray(free_n),
+        schedulable=jnp.asarray(schedulable),
+        domain=jnp.asarray(domain),
+        slow=jnp.asarray(slow),
+        inst_res=jnp.asarray(inst_res),
+        inst_start=jnp.asarray(inst_start),
+        inst_price=jnp.asarray(inst_price),
+        inst_valid=jnp.asarray(inst_valid),
+    )
+    return state, slots
+
+
+# -- pure transitions (all O(K·D) scatter updates; fully jit-able) -----------
+
+
+def _apply_decision(
+    state: SoAFleetState,
+    host_idx: jax.Array,      # () int32
+    mask_idx: jax.Array,      # () int32 into ``masks``
+    ok: jax.Array,            # () bool — no-op when False
+    req_res: jax.Array,       # (D,)
+    preemptible: jax.Array,   # () bool
+    now: jax.Array,           # () float
+    price: jax.Array,         # () float
+    masks: jax.Array,         # (M, K)
+) -> Tuple[SoAFleetState, jax.Array, jax.Array]:
+    """Apply one decision: evacuate the winning subset, place the request.
+
+    Returns ``(state', slot, kill)`` where ``slot`` is the slot index a
+    preemptible placement landed in (undefined for normal/failed requests)
+    and ``kill`` the (K,) bool mask of terminated slots on ``host_idx``.
+    """
+    k = state.k_slots
+    row_valid = state.inst_valid[host_idx]                       # (K,)
+    mask_bits = masks[mask_idx] > 0.5                            # (K,)
+    kill = mask_bits & row_valid & ok & ~preemptible
+    freed = jnp.sum(
+        jnp.where(kill[:, None], state.inst_res[host_idx], 0.0), axis=0
+    )                                                            # (D,)
+    take = jnp.where(ok, req_res, 0.0)
+    free_f = state.free_f.at[host_idx].add(freed - take)
+    free_n = state.free_n.at[host_idx].add(
+        -jnp.where(ok & ~preemptible, req_res, 0.0)
+    )
+    valid_after = row_valid & ~kill
+    slot = jnp.argmin(valid_after).astype(jnp.int32)             # first free
+    place = ok & preemptible
+    onehot = (jnp.arange(k) == slot) & place                     # (K,)
+    new_state = dataclasses.replace(
+        state,
+        free_f=free_f,
+        free_n=free_n,
+        inst_valid=state.inst_valid.at[host_idx].set(valid_after | onehot),
+        inst_res=state.inst_res.at[host_idx].set(
+            jnp.where(onehot[:, None], req_res[None, :], state.inst_res[host_idx])
+        ),
+        inst_start=state.inst_start.at[host_idx].set(
+            jnp.where(onehot, now, state.inst_start[host_idx])
+        ),
+        inst_price=state.inst_price.at[host_idx].set(
+            jnp.where(onehot, price, state.inst_price[host_idx])
+        ),
+    )
+    return new_state, slot, kill
+
+
+def _step_core(
+    state: SoAFleetState,
+    req_res, req_preemptible, req_domain, now, price, masks,
+    cost_kind, period, use_pallas, weigher_multipliers,
+):
+    inst_cost = slot_costs(cost_kind, state.inst_start, state.inst_price, now, period)
+    host_idx, mask_idx, ok = _decision_core(
+        state.free_f, state.free_n, state.schedulable, state.domain,
+        state.slow, state.inst_res, inst_cost, state.inst_valid,
+        req_res, req_preemptible, req_domain, masks,
+        use_pallas, weigher_multipliers, require_free_slot=True,
+    )
+    state, slot, kill = _apply_decision(
+        state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price, masks
+    )
+    return state, (host_idx, slot, ok, kill)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cost_kind", "use_pallas", "weigher_multipliers"),
+)
+def schedule_step(
+    state: SoAFleetState,
+    req_res: jax.Array,          # (D,)
+    req_preemptible: jax.Array,  # () bool
+    req_domain: jax.Array,       # () int32; -1 = any
+    now: jax.Array,              # () float
+    price: jax.Array,            # () float
+    masks: jax.Array,            # (M, K)
+    cost_kind: str = "period",
+    period: float = BILL_PERIOD_S,
+    use_pallas: bool = False,
+    weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+) -> Tuple[SoAFleetState, Tuple[jax.Array, jax.Array, jax.Array, jax.Array]]:
+    """Fused decide-and-apply on the persistent state (one dispatch/event).
+
+    Returns ``(state', (host_idx, slot, ok, kill))``.
+    """
+    return _step_core(
+        state, req_res, req_preemptible, req_domain,
+        jnp.asarray(now, jnp.float32), jnp.asarray(price, jnp.float32), masks,
+        cost_kind, period, use_pallas, weigher_multipliers,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cost_kind", "use_pallas", "weigher_multipliers"),
+)
+def schedule_many(
+    state: SoAFleetState,
+    req_res: jax.Array,          # (B, D)
+    req_preemptible: jax.Array,  # (B,) bool
+    req_domain: jax.Array,       # (B,) int32; -1 = any
+    req_now: jax.Array,          # (B,) float — each request's arrival time
+    req_price: jax.Array,        # (B,) float
+    masks: jax.Array,            # (M, K)
+    cost_kind: str = "period",
+    period: float = BILL_PERIOD_S,
+    use_pallas: bool = False,
+    weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+) -> Tuple[SoAFleetState, Tuple[jax.Array, jax.Array, jax.Array, jax.Array]]:
+    """Run a request batch through ``lax.scan`` carrying the fleet state, so
+    each decision sees every earlier placement/termination in the batch —
+    bit-identical to ``schedule_step`` in a loop, at one dispatch per batch.
+
+    Returns ``(state', (host_idx (B,), slot (B,), ok (B,), kill (B, K)))``.
+    """
+
+    def body(st, xs):
+        res, pre, dom, now, price = xs
+        return _step_core(
+            st, res, pre, dom, now, price, masks,
+            cost_kind, period, use_pallas, weigher_multipliers,
         )
-    else:
-        best_cost, best_mask, any_feasible = host_plan_terms(
-            state.free_f, state.inst_res, state.inst_cost,
-            state.inst_valid, req_res, masks,
-        )
-    # Preemptible requests never terminate others: empty plan, zero cost.
-    best_cost = jnp.where(req_preemptible, 0.0, best_cost)
-    best_mask = jnp.where(req_preemptible, 0, best_mask)
-    feasible = jnp.where(req_preemptible, fits, any_feasible)
 
-    valid = fits & feasible
-    overcommitted = ~jnp.all(state.free_f >= req_res[None, :] - 1e-6, axis=-1)
+    return jax.lax.scan(
+        body, state,
+        (req_res, req_preemptible, req_domain,
+         req_now.astype(jnp.float32), req_price.astype(jnp.float32)),
+    )
 
-    # ---- phase 2: normalized weighing on h_f --------------------------------
-    m_over, m_term, m_pack, m_strag = weigher_multipliers
-    omega = jnp.zeros(state.n_hosts)
-    if m_over:
-        omega += m_over * _normalize(jnp.where(overcommitted, -1.0, 0.0), valid)
-    if m_term:
-        omega += m_term * _normalize(-jnp.minimum(best_cost, POS_INF), valid)
-    if m_pack:
-        omega += m_pack * _normalize(-state.free_f.sum(-1), valid)
-    if m_strag:
-        omega += m_strag * _normalize(-state.slow, valid)
-    omega = jnp.where(valid, omega, NEG_INF)
 
-    # ---- argmax (first-index tie-break) --------------------------------------
-    host_idx = jnp.argmax(omega).astype(jnp.int32)
-    ok = omega[host_idx] > NEG_INF / 2
-    return host_idx, best_mask[host_idx], ok
+@jax.jit
+def apply_placement(
+    state: SoAFleetState,
+    host_idx: jax.Array,
+    req_res: jax.Array,
+    preemptible: jax.Array,
+    now: jax.Array,
+    price: jax.Array = 1.0,
+) -> Tuple[SoAFleetState, jax.Array]:
+    """Unconditionally place a request on ``host_idx`` (caller checked
+    feasibility — e.g. re-applying a recorded decision, or initializing
+    state without a rebuild).  Returns (state', slot).
+
+    Precondition for preemptible placements: the host has a free slot
+    (``~inst_valid[host_idx].all()``) — with all K slots valid, slot 0
+    would be overwritten.  The decision paths (``schedule_step``)
+    enforce this via ``require_free_slot``; direct callers must too."""
+    take = req_res
+    free_f = state.free_f.at[host_idx].add(-take)
+    free_n = state.free_n.at[host_idx].add(
+        -jnp.where(preemptible, jnp.zeros_like(take), take)
+    )
+    k = state.k_slots
+    slot = jnp.argmin(state.inst_valid[host_idx]).astype(jnp.int32)
+    onehot = (jnp.arange(k) == slot) & preemptible
+    state = dataclasses.replace(
+        state,
+        free_f=free_f,
+        free_n=free_n,
+        inst_valid=state.inst_valid.at[host_idx].set(
+            state.inst_valid[host_idx] | onehot
+        ),
+        inst_res=state.inst_res.at[host_idx].set(
+            jnp.where(onehot[:, None], req_res[None, :], state.inst_res[host_idx])
+        ),
+        inst_start=state.inst_start.at[host_idx].set(
+            jnp.where(onehot, jnp.asarray(now, jnp.float32), state.inst_start[host_idx])
+        ),
+        inst_price=state.inst_price.at[host_idx].set(
+            jnp.where(onehot, jnp.asarray(price, jnp.float32), state.inst_price[host_idx])
+        ),
+    )
+    return state, slot
+
+
+@jax.jit
+def apply_termination(
+    state: SoAFleetState,
+    host_idx: jax.Array,
+    slot_mask: jax.Array,  # (K,) bool — slots to evacuate (preempt/depart)
+) -> SoAFleetState:
+    """Free the given preemptible slots on ``host_idx`` (h_n untouched —
+    preemptible instances never counted there)."""
+    row_valid = state.inst_valid[host_idx]
+    kill = slot_mask & row_valid
+    freed = jnp.sum(
+        jnp.where(kill[:, None], state.inst_res[host_idx], 0.0), axis=0
+    )
+    return dataclasses.replace(
+        state,
+        free_f=state.free_f.at[host_idx].add(freed),
+        inst_valid=state.inst_valid.at[host_idx].set(row_valid & ~kill),
+    )
+
+
+@jax.jit
+def apply_departure(
+    state: SoAFleetState,
+    host_idx: jax.Array,
+    res: jax.Array,  # (D,) resources of the departing NORMAL instance
+) -> SoAFleetState:
+    """Voluntary departure of a normal instance (both views regain ``res``).
+    Preemptible departures go through ``apply_termination`` with the slot."""
+    return dataclasses.replace(
+        state,
+        free_f=state.free_f.at[host_idx].add(res),
+        free_n=state.free_n.at[host_idx].add(res),
+    )
+
+
+@jax.jit
+def set_schedulable(
+    state: SoAFleetState, host_idx: jax.Array, value: jax.Array
+) -> SoAFleetState:
+    return dataclasses.replace(
+        state, schedulable=state.schedulable.at[host_idx].set(value)
+    )
+
+
+@jax.jit
+def set_slow_factor(
+    state: SoAFleetState, host_idx: jax.Array, value: jax.Array
+) -> SoAFleetState:
+    return dataclasses.replace(state, slow=state.slow.at[host_idx].set(value))
+
+
+@jax.jit
+def apply_host_failure(
+    state: SoAFleetState,
+    host_idx: jax.Array,
+    normal_res: jax.Array,  # (D,) total resources of the host's NORMAL instances
+) -> SoAFleetState:
+    """Hard host failure: mark unschedulable, evacuate every slot, release
+    the normal aggregate (the python mirror terminates the Instance records)."""
+    row_valid = state.inst_valid[host_idx]
+    freed = jnp.sum(
+        jnp.where(row_valid[:, None], state.inst_res[host_idx], 0.0), axis=0
+    )
+    return dataclasses.replace(
+        state,
+        schedulable=state.schedulable.at[host_idx].set(False),
+        free_f=state.free_f.at[host_idx].add(freed + normal_res),
+        free_n=state.free_n.at[host_idx].add(normal_res),
+        inst_valid=state.inst_valid.at[host_idx].set(
+            jnp.zeros_like(row_valid)
+        ),
+    )
 
 
 # ---------------------------------------------------------------------------

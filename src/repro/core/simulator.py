@@ -23,7 +23,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .cluster import Cluster
+from .cost import CostFunction
 from .scheduler import BaseScheduler
+from .soa_fleet import SoAFleet
 from .types import Host, Instance, Request, Resources
 
 
@@ -202,3 +204,157 @@ class Simulator:
         self.metrics.t.append(self.now)
         self.metrics.utilization.append(self.cluster.utilization())
         self.metrics.utilization_normal.append(self.cluster.utilization_normal())
+
+
+class SoASimulator:
+    """Fast-path event loop on the incremental device-resident fleet state.
+
+    Same dynamics as ``Simulator`` but instead of handing the scheduler a
+    python ``Host`` list per arrival (which triggers an O(N·K) array rebuild),
+    it drives the persistent ``SoAFleet``: each event is an O(K·D) on-device
+    transition, and runs of consecutive arrivals are batched through one
+    jit-compiled ``lax.scan`` (``schedule_many``) so consecutive decisions
+    still see each other's placements exactly.  Python ``Host`` objects are
+    materialized only on demand (``fleet.sync_hosts()``).
+
+    Behavioral deltas vs ``Simulator`` (documented, both benign):
+      * lifetimes are drawn at arrival time (not on placement success), so
+        the rng streams differ once a request fails;
+      * with ``stop_on_normal_failure`` the loop stops at the end of the
+        batch containing the failure, not mid-batch.
+    """
+
+    def __init__(
+        self,
+        hosts,
+        workload: WorkloadSpec,
+        seed: int = 0,
+        cost_fn: Optional[CostFunction] = None,
+        k_slots: int = 8,
+        batch_max: int = 64,
+        use_pallas: bool = False,
+        weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+    ):
+        self.fleet = (
+            hosts
+            if isinstance(hosts, SoAFleet)
+            else SoAFleet(
+                hosts,
+                cost_fn=cost_fn,
+                k_slots=k_slots,
+                use_pallas=use_pallas,
+                weigher_multipliers=weigher_multipliers,
+            )
+        )
+        self.workload = workload
+        self.batch_max = batch_max
+        self.rng = np.random.default_rng(seed)
+        self.metrics = SimMetrics()
+        self._heap: List[_Event] = []
+        self._seq = itertools.count()
+        self._req_ids = itertools.count()
+        self.now = 0.0
+        #: buffered (arrival_time, request, lifetime) awaiting one scan flush
+        self._pending: List[Tuple[float, Request, float]] = []
+        self._min_dep = float("inf")
+
+    # -- event helpers (identical draws to Simulator) -------------------------
+    _push = Simulator._push
+    _draw_lifetime = Simulator._draw_lifetime
+    _draw_request = Simulator._draw_request
+
+    # -- main loop ------------------------------------------------------------
+    def run(
+        self,
+        duration_s: float,
+        stop_on_normal_failure: bool = False,
+        sample_every_s: float = 300.0,
+    ) -> SimMetrics:
+        self._push(self.rng.exponential(1.0 / self.workload.arrival_rate_per_s), "arrival")
+        next_sample = 0.0
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            # The buffer must drain before anything that observes or mutates
+            # fleet state out of arrival order: a departure/failure event, a
+            # departure *generated by a buffered arrival* (min_dep), a sample
+            # point, end-of-run, or a full batch.
+            if self._pending and (
+                ev.kind != "arrival"
+                or ev.time > duration_s
+                or ev.time >= self._min_dep
+                or ev.time >= next_sample
+                or len(self._pending) >= self.batch_max
+            ):
+                heapq.heappush(self._heap, _Event(ev.time, ev.seq, ev.kind, ev.payload))
+                failed_normal = self._flush()
+                if failed_normal and stop_on_normal_failure:
+                    break
+                continue
+            if ev.time > duration_s:
+                break
+            self.now = ev.time
+            if self.now >= next_sample:
+                self._sample()
+                next_sample = self.now + sample_every_s
+            if ev.kind == "arrival":
+                req = self._draw_request()
+                lifetime = self._draw_lifetime()
+                self._pending.append((self.now, req, lifetime))
+                self._min_dep = min(self._min_dep, self.now + lifetime)
+                self._push(
+                    self.now + self.rng.exponential(1.0 / self.workload.arrival_rate_per_s),
+                    "arrival",
+                )
+            elif ev.kind == "departure":
+                self.fleet.depart(ev.payload)
+            elif ev.kind == "fail_host":
+                self.fleet.fail_host(ev.payload)
+            elif ev.kind == "heal_host":
+                self.fleet.heal_host(ev.payload)
+        if self._pending:
+            self._flush()
+        self._sample()
+        return self.metrics
+
+    def _flush(self) -> bool:
+        """Run the buffered arrivals through one scan.  Returns True when a
+        normal request failed (the paper's stop signal)."""
+        items = [(req, t, 1.0) for t, req, _ in self._pending]
+        t0 = _time.perf_counter()
+        outcomes = self.fleet.schedule_batch(items)
+        per_req = (_time.perf_counter() - t0) / len(items)
+        failed_normal = False
+        for (t, req, lifetime), out in zip(self._pending, outcomes):
+            self.metrics.sched_latency_s.append(per_req)
+            self.metrics.preemptions += len(out.victims)
+            if not out.ok:
+                if req.preemptible:
+                    self.metrics.failures_preemptible += 1
+                else:
+                    self.metrics.failures_normal += 1
+                    failed_normal = True
+                continue
+            if req.preemptible:
+                self.metrics.placed_preemptible += 1
+            else:
+                self.metrics.placed_normal += 1
+            self._push(t + lifetime, "departure", out.instance.id)
+        self._pending.clear()
+        self._min_dep = float("inf")
+        return failed_normal
+
+    # -- fault injection -------------------------------------------------------
+    def inject_host_failure(self, host_name: str, at_s: float, heal_after_s: float = 0.0):
+        self._push(at_s, "fail_host", host_name)
+        if heal_after_s:
+            self._push(at_s + heal_after_s, "heal_host", host_name)
+
+    def inject_stragglers(self, fraction: float, slow_factor: float = 3.0):
+        n = max(1, int(self.fleet.n_hosts * fraction))
+        for h in self.rng.choice(self.fleet.n_hosts, size=n, replace=False):
+            self.fleet.set_slow(self.fleet.names[int(h)], slow_factor)
+
+    def _sample(self) -> None:
+        self.metrics.t.append(self.now)
+        self.metrics.utilization.append(self.fleet.utilization())
+        self.metrics.utilization_normal.append(self.fleet.utilization_normal())

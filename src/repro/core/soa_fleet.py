@@ -1,0 +1,310 @@
+"""Python-side mirror of the persistent device-resident fleet state.
+
+``SoAFleet`` owns a ``SoAFleetState`` (the arrays the jit'd scheduler reads
+and writes incrementally) plus the minimal python bookkeeping the arrays
+cannot carry: instance identities, the slot ↔ instance-id map, and the
+records needed to materialize ``Host`` objects again.  Every mutation goes
+through the pure jnp transitions in ``jax_scheduler`` — the arrays are never
+rebuilt from python objects on the hot path (that rebuild, ``build_fleet_state``,
+remains the correctness oracle; see tests/test_soa_incremental.py).
+
+Sync discipline: per-event work touches only O(K) scalars (the decision
+outputs); full python ``Host`` objects are materialized only on demand
+(``sync_hosts`` — e.g. at simulator sample points or for verification).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .cost import CostFunction, PeriodCost
+from .jax_scheduler import (
+    SoAFleetState,
+    apply_departure,
+    apply_host_failure,
+    apply_termination,
+    build_fleet_state,
+    jax_cost_params,
+    schedule_many,
+    schedule_step,
+    set_schedulable,
+    set_slow_factor,
+    subset_masks,
+)
+from .types import Host, Instance, Request, Resources
+
+#: Padding sentinel for batched scheduling: a request no host can fit.
+_PAD_RES = 1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SoAOutcome:
+    """One decision of the fast path, translated back to python identities."""
+
+    request: Request
+    host: Optional[str]                  # None = failed
+    instance: Optional[Instance]         # the placed record
+    victims: Tuple[Instance, ...] = ()   # evacuated preemptible instances
+
+    @property
+    def ok(self) -> bool:
+        return self.host is not None
+
+
+class SoAFleet:
+    """Incremental fleet view: device arrays + id bookkeeping."""
+
+    def __init__(
+        self,
+        hosts: Sequence[Host],
+        cost_fn: Optional[CostFunction] = None,
+        k_slots: int = 8,
+        use_pallas: bool = False,
+        weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+    ):
+        self.cost_fn = cost_fn or PeriodCost()
+        self.cost_kind, self.period = jax_cost_params(self.cost_fn)
+        self.k_slots = k_slots
+        self.use_pallas = use_pallas
+        self.weigher_multipliers = tuple(weigher_multipliers)
+        self.masks = jnp.asarray(subset_masks(k_slots))
+
+        self.names: List[str] = [h.name for h in hosts]
+        self.index: Dict[str, int] = {n: i for i, n in enumerate(self.names)}
+        self.capacity: List[Resources] = [h.capacity for h in hosts]
+        self.spec = hosts[0].capacity.spec if hosts else None
+        self.domains: List[str] = [h.domain for h in hosts]
+        self.domain_ids: Dict[str, int] = {}
+        for h in hosts:
+            self.domain_ids.setdefault(h.domain, len(self.domain_ids))
+
+        self.state, slot_rows = build_fleet_state(
+            hosts, k_slots=k_slots, domain_ids=self.domain_ids
+        )
+        #: slot → live preemptible instance id (None = free slot)
+        self.slot_ids: List[List[Optional[str]]] = [
+            [inst.id if inst is not None else None for inst in row]
+            for row in slot_rows
+        ]
+        #: all live instances, including normal ones
+        self.instances: Dict[str, Instance] = {}
+        #: id → (host_idx, slot) — slot None for normal instances
+        self.locator: Dict[str, Tuple[int, Optional[int]]] = {}
+        for i, h in enumerate(hosts):
+            for inst in h.instances.values():
+                self.instances[inst.id] = inst
+                slot = (
+                    self.slot_ids[i].index(inst.id) if inst.preemptible else None
+                )
+                self.locator[inst.id] = (i, slot)
+
+        self.preempted: List[Instance] = []
+        self._ids = itertools.count()
+        cap = np.stack([c.vec for c in self.capacity]) if hosts else np.zeros((0, 1))
+        self._cap0_total = float(cap[:, 0].sum())
+
+    # -- derived metrics (device reductions; no python Host objects) ---------
+    @property
+    def n_hosts(self) -> int:
+        return len(self.names)
+
+    def utilization(self) -> float:
+        if not self._cap0_total:
+            return 0.0
+        free0 = float(self.state.free_f[:, 0].sum())
+        return (self._cap0_total - free0) / self._cap0_total
+
+    def utilization_normal(self) -> float:
+        if not self._cap0_total:
+            return 0.0
+        free0 = float(self.state.free_n[:, 0].sum())
+        return (self._cap0_total - free0) / self._cap0_total
+
+    # -- scheduling ----------------------------------------------------------
+    def _req_arrays(self, req: Request):
+        dom = -1 if req.domain is None else self.domain_ids.get(req.domain, -1)
+        return (
+            req.resources.vec32,
+            bool(req.preemptible),
+            np.int32(dom),
+        )
+
+    def schedule_request(
+        self, req: Request, now: float, price: float = 1.0
+    ) -> SoAOutcome:
+        """One decide-and-apply step on the persistent state."""
+        res, pre, dom = self._req_arrays(req)
+        self.state, (host_idx, slot, ok, kill) = schedule_step(
+            self.state, res, pre, dom, now, price, self.masks,
+            cost_kind=self.cost_kind, period=self.period,
+            use_pallas=self.use_pallas,
+            weigher_multipliers=self.weigher_multipliers,
+        )
+        return self._absorb(
+            req, now, price, int(host_idx), int(slot), bool(ok), np.asarray(kill)
+        )
+
+    def schedule_batch(
+        self, items: Sequence[Tuple[Request, float, float]]
+    ) -> List[SoAOutcome]:
+        """Run ``(request, now, price)`` triples through one ``lax.scan``.
+
+        The batch is padded to the next power of two with unsatisfiable
+        sentinel requests so jit recompiles only O(log B) distinct shapes.
+        """
+        if not items:
+            return []
+        if len(items) == 1:  # fused single step — no scan compile for B=1
+            req, t, p = items[0]
+            return [self.schedule_request(req, t, price=p)]
+        b = len(items)
+        # floor of 4 keeps the number of distinct compiled scan lengths small
+        padded = max(4, 1 << (b - 1).bit_length())
+        d = len(self.spec.dims)
+        res = np.full((padded, d), _PAD_RES, np.float32)
+        pre = np.zeros((padded,), bool)
+        dom = np.full((padded,), -1, np.int32)
+        now = np.full((padded,), items[-1][1], np.float32)
+        price = np.ones((padded,), np.float32)
+        for i, (req, t, p) in enumerate(items):
+            res[i], pre[i], dom[i] = self._req_arrays(req)
+            now[i] = t
+            price[i] = p
+        self.state, (host_idx, slot, ok, kill) = schedule_many(
+            self.state, res, pre, dom, now, price, self.masks,
+            cost_kind=self.cost_kind, period=self.period,
+            use_pallas=self.use_pallas,
+            weigher_multipliers=self.weigher_multipliers,
+        )
+        host_idx, slot = np.asarray(host_idx), np.asarray(slot)
+        ok, kill = np.asarray(ok), np.asarray(kill)
+        return [
+            self._absorb(
+                req, t, p, int(host_idx[i]), int(slot[i]), bool(ok[i]), kill[i]
+            )
+            for i, (req, t, p) in enumerate(items)
+        ]
+
+    def _absorb(
+        self,
+        req: Request,
+        now: float,
+        price: float,
+        host_idx: int,
+        slot: int,
+        ok: bool,
+        kill_row: np.ndarray,
+    ) -> SoAOutcome:
+        """Fold one decision's outputs back into the python bookkeeping."""
+        if not ok:
+            return SoAOutcome(request=req, host=None, instance=None)
+        name = self.names[host_idx]
+        victims: List[Instance] = []
+        if not req.preemptible:
+            for k in np.flatnonzero(kill_row):
+                vid = self.slot_ids[host_idx][k]
+                assert vid is not None, "terminated an empty slot"
+                victim = self.instances.pop(vid)
+                del self.locator[vid]
+                self.slot_ids[host_idx][k] = None
+                self.preempted.append(victim)
+                victims.append(victim)
+        inst = Instance(
+            id=f"i{next(self._ids)}-{req.id}",
+            resources=req.resources,
+            preemptible=req.preemptible,
+            host=name,
+            start_time=now,
+            user=req.user,
+            price_rate=price,
+        )
+        self.instances[inst.id] = inst
+        if req.preemptible:
+            assert self.slot_ids[host_idx][slot] is None, "slot collision"
+            self.slot_ids[host_idx][slot] = inst.id
+            self.locator[inst.id] = (host_idx, slot)
+        else:
+            self.locator[inst.id] = (host_idx, None)
+        return SoAOutcome(
+            request=req, host=name, instance=inst, victims=tuple(victims)
+        )
+
+    # -- lifecycle transitions ----------------------------------------------
+    def depart(self, instance_id: str) -> bool:
+        """Voluntary departure.  Returns False if the instance is already
+        gone (preempted / host failure) — departures are idempotent."""
+        inst = self.instances.pop(instance_id, None)
+        if inst is None:
+            return False
+        host_idx, slot = self.locator.pop(instance_id)
+        if slot is not None:
+            mask = np.zeros((self.k_slots,), bool)
+            mask[slot] = True
+            self.state = apply_termination(self.state, host_idx, mask)
+            self.slot_ids[host_idx][slot] = None
+        else:
+            self.state = apply_departure(
+                self.state, host_idx, inst.resources.vec32
+            )
+        return True
+
+    def fail_host(self, name: str) -> Tuple[int, int]:
+        """Hard failure: every instance dies (preemptible ones are recorded
+        as preempted for re-queueing).  Returns (n_preempted, n_terminated)."""
+        host_idx = self.index[name]
+        n_pre = n_norm = 0
+        normal_res = np.zeros((len(self.spec.dims),), np.float32)
+        for iid in [
+            i for i, (h, _) in self.locator.items() if h == host_idx
+        ]:
+            inst = self.instances.pop(iid)
+            _, slot = self.locator.pop(iid)
+            if slot is not None:
+                self.slot_ids[host_idx][slot] = None
+                self.preempted.append(inst)
+                n_pre += 1
+            else:
+                normal_res += inst.resources.vec32
+                n_norm += 1
+        self.state = apply_host_failure(self.state, host_idx, normal_res)
+        return n_pre, n_norm
+
+    def heal_host(self, name: str) -> None:
+        self.state = set_schedulable(self.state, self.index[name], True)
+
+    def set_slow(self, name: str, slow_factor: float) -> None:
+        self.state = set_slow_factor(self.state, self.index[name], slow_factor)
+
+    # -- python-object sync (sample points / verification only) --------------
+    def slot_assignment(self) -> List[Dict[str, int]]:
+        """Per-host id → slot map, for bit-exact oracle rebuilds."""
+        return [
+            {iid: k for k, iid in enumerate(row) if iid is not None}
+            for row in self.slot_ids
+        ]
+
+    def sync_hosts(self) -> List[Host]:
+        """Materialize python ``Host`` objects from the mirror records.
+
+        Placement goes through ``Host.place`` so capacity violations in the
+        incremental state surface here as hard errors."""
+        schedulable = np.asarray(self.state.schedulable)
+        slow = np.asarray(self.state.slow)
+        hosts = [
+            Host(
+                name=self.names[i],
+                capacity=self.capacity[i],
+                domain=self.domains[i],
+                schedulable=bool(schedulable[i]),
+                slow_factor=float(slow[i]),
+            )
+            for i in range(self.n_hosts)
+        ]
+        for inst in self.instances.values():
+            host_idx, _ = self.locator[inst.id]
+            hosts[host_idx].place(inst)
+        return hosts

@@ -69,6 +69,12 @@ class Resources:
         """True when this request fits inside ``free`` on every dimension."""
         return self <= free
 
+    @property
+    def vec32(self) -> np.ndarray:
+        """float32 view for the device-resident SoA paths (resource values
+        are small integers in practice, so the cast is exact)."""
+        return np.asarray(self.vec, dtype=np.float32)
+
     def any_negative(self) -> bool:
         return bool(np.any(self.vec < -1e-9))
 

@@ -1,0 +1,360 @@
+"""Incremental-state parity: the persistent device-resident fleet vs the
+rebuild-from-python oracle.
+
+The contract under test: after ANY interleaving of placements, preemptions,
+voluntary departures, host failures/heals, and straggler updates, the
+incrementally-maintained ``SoAFleetState`` is bit-identical to the state
+rebuilt from the python ``Host`` objects (``build_fleet_state`` with the
+mirror's slot layout), and scheduling decisions taken on either state are
+bit-identical too.  Event times and resources are integer-valued so float32
+arithmetic is exact and equality can be strict.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.cost import PeriodCost, RevenueCost
+from repro.core.jax_scheduler import (
+    build_fleet_state,
+    schedule_many,
+    schedule_step,
+)
+from repro.core.simulator import Simulator, SoASimulator, WorkloadSpec
+from repro.core.soa_fleet import SoAFleet
+from repro.core.cluster import Cluster, make_uniform_fleet
+from repro.core.jax_scheduler import JaxPreemptibleScheduler
+from repro.core.types import VM_SPEC, Host, Instance, Request
+
+CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=160)
+SIZES = [
+    VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20),
+    VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40),
+    VM_SPEC.make(vcpus=4, ram_mb=8000, disk_gb=80),
+]
+K = 8
+
+
+def _assert_states_equal(state, oracle, msg=""):
+    """Strict equality; slot payloads compared only where a slot is valid."""
+    valid = np.asarray(state.inst_valid)
+    np.testing.assert_array_equal(valid, np.asarray(oracle.inst_valid), err_msg=msg)
+    for field in ("free_f", "free_n", "schedulable", "domain", "slow"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(state, field)),
+            np.asarray(getattr(oracle, field)),
+            err_msg=f"{msg}: {field}",
+        )
+    for field in ("inst_start", "inst_price"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(state, field)) * valid,
+            np.asarray(getattr(oracle, field)) * valid,
+            err_msg=f"{msg}: {field}",
+        )
+    np.testing.assert_array_equal(
+        np.asarray(state.inst_res) * valid[..., None],
+        np.asarray(oracle.inst_res) * valid[..., None],
+        err_msg=f"{msg}: inst_res",
+    )
+
+
+class _PyMirror:
+    """Plain python ``Host`` objects mutated in lockstep with the fast path —
+    the ground truth the oracle state is rebuilt from."""
+
+    def __init__(self, n_hosts: int):
+        self.hosts = [
+            Host(name=f"h{i}", capacity=CAP, domain=f"dom{i % 2}")
+            for i in range(n_hosts)
+        ]
+        self.by_name = {h.name: h for h in self.hosts}
+
+    def apply(self, outcome):
+        if not outcome.ok:
+            return
+        host = self.by_name[outcome.host]
+        for victim in outcome.victims:
+            host.remove(victim.id)
+        host.place(
+            Instance(
+                id=outcome.instance.id,
+                resources=outcome.instance.resources,
+                preemptible=outcome.instance.preemptible,
+                host=host.name,
+                start_time=outcome.instance.start_time,
+                price_rate=outcome.instance.price_rate,
+            )
+        )
+
+
+@pytest.mark.parametrize(
+    "seed,cost_fn", [(0, PeriodCost()), (1, PeriodCost()), (2, RevenueCost())]
+)
+def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
+    """≥1k randomized events; after every event the arrays must equal the
+    oracle rebuild, and every arrival's decision must be bit-identical when
+    taken on the incremental state vs the rebuilt state."""
+    rng = np.random.default_rng(seed)
+    n_hosts, n_events = 24, 1100
+    py = _PyMirror(n_hosts)
+    fleet = SoAFleet(py.hosts, cost_fn=cost_fn, k_slots=K)
+    now = 0.0
+    live_departable = []  # ids we may voluntarily depart
+
+    for step in range(n_events):
+        now += float(rng.integers(1, 90))
+        roll = rng.random()
+        if roll < 0.70:  # -------------------------------------------- arrival
+            req = Request(
+                id=f"r{step}",
+                resources=SIZES[int(rng.integers(3))],
+                preemptible=bool(rng.random() < 0.6),
+                domain=f"dom{rng.integers(2)}" if rng.random() < 0.3 else None,
+            )
+            price = float(rng.integers(1, 5))
+            # oracle decision on the rebuilt state must match bit-for-bit
+            oracle, _ = build_fleet_state(
+                py.hosts, k_slots=K, domain_ids=fleet.domain_ids,
+                slot_assignment=fleet.slot_assignment(),
+            )
+            res, pre, dom = fleet._req_arrays(req)
+            _, (oh, oslot, ook, okill) = schedule_step(
+                oracle, res, pre, dom, now, price, fleet.masks,
+                cost_kind=fleet.cost_kind, period=fleet.period,
+            )
+            # victims the oracle decision implies, read from the slot map
+            # BEFORE the fast path mutates it
+            expect_victims = set()
+            if bool(ook) and not req.preemptible:
+                expect_victims = {
+                    fleet.slot_ids[int(oh)][k]
+                    for k in np.flatnonzero(np.asarray(okill))
+                } - {None}
+            out = fleet.schedule_request(req, now, price=price)
+            assert bool(ook) == out.ok, f"event {step}: ok mismatch"
+            if out.ok:
+                assert fleet.names[int(oh)] == out.host, f"event {step}"
+                assert {v.id for v in out.victims} == expect_victims, f"event {step}"
+                py.apply(out)
+                live_departable.append(out.instance.id)
+        elif roll < 0.90 and live_departable:  # -------------------- departure
+            iid = live_departable.pop(int(rng.integers(len(live_departable))))
+            was_live = fleet.depart(iid)
+            if was_live:
+                host = py.by_name[fleet_host_of(py, iid)]
+                host.remove(iid)
+        elif roll < 0.95:  # -------------------------------------- fail / heal
+            name = f"h{rng.integers(n_hosts)}"
+            host = py.by_name[name]
+            if host.schedulable:
+                fleet.fail_host(name)
+                host.schedulable = False
+                host.instances.clear()
+            else:
+                fleet.heal_host(name)
+                host.schedulable = True
+        else:  # ------------------------------------------------- straggler
+            name = f"h{rng.integers(n_hosts)}"
+            factor = float(rng.integers(1, 6))
+            fleet.set_slow(name, factor)
+            py.by_name[name].slow_factor = factor
+
+        oracle, _ = build_fleet_state(
+            py.hosts, k_slots=K, domain_ids=fleet.domain_ids,
+            slot_assignment=fleet.slot_assignment(),
+        )
+        _assert_states_equal(fleet.state, oracle, msg=f"event {step}")
+
+    # the mirror's own Host materialization agrees with the ground truth
+    synced = {h.name: h for h in fleet.sync_hosts()}
+    for h in py.hosts:
+        assert set(synced[h.name].instances) == set(h.instances)
+
+
+def fleet_host_of(py: _PyMirror, iid: str) -> str:
+    for h in py.hosts:
+        if iid in h.instances:
+            return h.name
+    raise KeyError(iid)
+
+
+def test_schedule_many_bit_identical_to_sequential_steps():
+    """One lax.scan over a batch == the same requests through schedule_step
+    one by one: identical outputs AND identical final state."""
+    rng = np.random.default_rng(7)
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(16)]
+    fleet = SoAFleet(hosts, cost_fn=PeriodCost(), k_slots=4)
+    b, d = 32, len(CAP.spec.dims)
+    res = np.stack(
+        [SIZES[int(rng.integers(3))].vec for _ in range(b)]
+    ).astype(np.float32)
+    pre = rng.random(b) < 0.5
+    dom = np.full((b,), -1, np.int32)
+    now = np.cumsum(rng.integers(1, 60, size=b)).astype(np.float32)
+    price = np.ones((b,), np.float32)
+
+    state_seq = fleet.state
+    outs = []
+    for i in range(b):
+        state_seq, o = schedule_step(
+            state_seq, res[i], bool(pre[i]), dom[i], float(now[i]),
+            float(price[i]), fleet.masks,
+            cost_kind=fleet.cost_kind, period=fleet.period,
+        )
+        outs.append([np.asarray(x) for x in o])
+
+    state_scan, (h, s, ok, kill) = schedule_many(
+        fleet.state, res, pre, dom, now, price, fleet.masks,
+        cost_kind=fleet.cost_kind, period=fleet.period,
+    )
+    np.testing.assert_array_equal(np.asarray(h), [o[0] for o in outs])
+    np.testing.assert_array_equal(np.asarray(ok), [o[2] for o in outs])
+    np.testing.assert_array_equal(np.asarray(kill), [o[3] for o in outs])
+    # slots only meaningful for successful preemptible placements
+    slot_scan, slot_seq = np.asarray(s), np.asarray([o[1] for o in outs])
+    sel = np.asarray(ok) & pre
+    np.testing.assert_array_equal(slot_scan[sel], slot_seq[sel])
+    _assert_states_equal(state_scan, state_seq, msg="scan vs sequential")
+
+
+def test_preemptible_requires_free_slot():
+    """A host whose K slots are all occupied rejects further preemptible
+    requests even though raw capacity is free (the rebuild path would
+    overflow ``k_slots`` instead)."""
+    small = SIZES[0]
+    host = Host(name="h0", capacity=CAP)
+    for i in range(2):
+        host.place(
+            Instance(id=f"p{i}", resources=small, preemptible=True,
+                     host="h0", start_time=0.0)
+        )
+    fleet = SoAFleet([host], cost_fn=PeriodCost(), k_slots=2)
+    out = fleet.schedule_request(
+        Request(id="q", resources=small, preemptible=True), now=100.0
+    )
+    assert not out.ok
+    # a normal request still lands (dual view sees through the spot slots)
+    out = fleet.schedule_request(
+        Request(id="q2", resources=small, preemptible=False), now=101.0
+    )
+    assert out.ok
+
+
+def test_soa_simulator_matches_rebuild_simulator_metrics():
+    """End-to-end: the fast-path simulator and the per-call-rebuild simulator
+    under the same workload land in the same utilization regime."""
+    node = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=10_000)
+    medium = VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40)
+    spec = WorkloadSpec(
+        arrival_rate_per_s=1 / 40.0,
+        preemptible_fraction=0.5,
+        flavors=(("medium", medium),),
+    )
+    fast = SoASimulator(
+        make_uniform_fleet(16, node), spec, seed=5, cost_fn=PeriodCost(),
+        k_slots=4,
+    )
+    m_fast = fast.run(24 * 3600.0)
+    slow = Simulator(
+        Cluster(make_uniform_fleet(16, node)),
+        JaxPreemptibleScheduler(cost_fn=PeriodCost(), k_slots=4),
+        spec, seed=5,
+    )
+    m_slow = slow.run(24 * 3600.0)
+    assert m_fast.placed_normal + m_fast.placed_preemptible > 100
+    assert np.isclose(
+        np.mean(m_fast.utilization), np.mean(m_slow.utilization), atol=0.1
+    )
+    # the fleet state at the end is internally consistent
+    hosts = fast.fleet.sync_hosts()
+    assert sum(len(h.instances) for h in hosts) == len(fast.fleet.instances)
+
+
+def test_soa_simulator_is_deterministic():
+    node = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=10_000)
+    medium = VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40)
+    spec = WorkloadSpec(
+        arrival_rate_per_s=1 / 20.0,
+        preemptible_fraction=0.5,
+        flavors=(("medium", medium),),
+    )
+
+    def go():
+        sim = SoASimulator(
+            make_uniform_fleet(12, node), spec, seed=11, cost_fn=PeriodCost(),
+            k_slots=4,
+        )
+        sim.inject_host_failure("host-2", at_s=3600.0, heal_after_s=3600.0)
+        m = sim.run(12 * 3600.0)
+        return m
+
+    a, b = go(), go()
+    assert a.placed_normal == b.placed_normal
+    assert a.placed_preemptible == b.placed_preemptible
+    assert a.preemptions == b.preemptions
+    assert a.utilization == b.utilization
+
+
+def test_apply_placement_matches_rebuild():
+    """The standalone placement transition (used to re-apply recorded
+    decisions) produces the same state as placing on the python Host and
+    rebuilding."""
+    from repro.core.jax_scheduler import apply_placement
+
+    hosts = [Host(name="h0", capacity=CAP), Host(name="h1", capacity=CAP)]
+    fleet = SoAFleet(hosts, cost_fn=PeriodCost(), k_slots=4)
+    state = fleet.state
+    placements = [
+        ("n0", 0, SIZES[1], False, 100.0, 1.0),
+        ("p0", 0, SIZES[0], True, 160.0, 2.0),
+        ("p1", 1, SIZES[2], True, 220.0, 3.0),
+    ]
+    for iid, hi, res, pre, t, price in placements:
+        state, slot = apply_placement(
+            state, hi, res.vec32, pre, t, price
+        )
+        hosts[hi].place(
+            Instance(id=iid, resources=res, preemptible=pre, host=hosts[hi].name,
+                     start_time=t, price_rate=price)
+        )
+        if pre:  # slot table must track the placement for the oracle rebuild
+            fleet.slot_ids[hi][int(slot)] = iid
+    oracle, _ = build_fleet_state(
+        hosts, k_slots=4, domain_ids=fleet.domain_ids,
+        slot_assignment=fleet.slot_assignment(),
+    )
+    _assert_states_equal(state, oracle, msg="apply_placement")
+
+
+def test_host_failure_frees_everything_and_heals():
+    rng = np.random.default_rng(3)
+    py = _PyMirror(4)
+    fleet = SoAFleet(py.hosts, cost_fn=PeriodCost(), k_slots=K)
+    for i in range(20):
+        out = fleet.schedule_request(
+            Request(
+                id=f"r{i}", resources=SIZES[int(rng.integers(3))],
+                preemptible=bool(i % 2),
+            ),
+            now=float(10 + i),
+        )
+        py.apply(out)
+    n_pre, n_norm = fleet.fail_host("h1")
+    assert n_pre + n_norm == len(py.by_name["h1"].instances)
+    py.by_name["h1"].schedulable = False
+    py.by_name["h1"].instances.clear()
+    oracle, _ = build_fleet_state(
+        py.hosts, k_slots=K, domain_ids=fleet.domain_ids,
+        slot_assignment=fleet.slot_assignment(),
+    )
+    _assert_states_equal(fleet.state, oracle, msg="after failure")
+    free = np.asarray(fleet.state.free_f)[1]
+    np.testing.assert_array_equal(free, CAP.vec.astype(np.float32))
+
+    fleet.heal_host("h1")
+    py.by_name["h1"].schedulable = True
+    oracle, _ = build_fleet_state(
+        py.hosts, k_slots=K, domain_ids=fleet.domain_ids,
+        slot_assignment=fleet.slot_assignment(),
+    )
+    _assert_states_equal(fleet.state, oracle, msg="after heal")
