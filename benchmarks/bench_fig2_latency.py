@@ -1,4 +1,5 @@
-"""Paper Fig. 2: scheduling-call latency, three schedulers × scenarios.
+"""Paper Fig. 2: scheduling-call latency, three schedulers × scenarios —
+plus the beyond-paper K-sweep of the two-stage shortlist pipeline.
 
 Scenarios (paper §4.5):
   * empty        — normal request, empty infrastructure;
@@ -9,18 +10,31 @@ Scenarios (paper §4.5):
 The paper's testbed is 24 compute nodes; we additionally run 240 and 2400 to
 show the scaling trend the paper anticipates ("numbers are expected to become
 larger as the infrastructure grows in size").
+
+K-sweep: decision latency at K ∈ {4, 8, 10, 12} slots/host with the stage-2
+shortlist on (M=64) and off (full 2^K × N enumeration), on an every-host-
+oversubscribed fleet where each decision must terminate 2 of K slots.  The
+shortlist path is bit-exact with the full one (tests/test_shortlist_parity),
+so these rows measure pure speedup — and make K=12 at 10^5 hosts affordable,
+which the full enumeration cannot reach (its (N, 2^K) feasibility tensor
+alone is ~1.6 GB).
 """
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.cost import PeriodCost
-from repro.core.jax_scheduler import schedule_step
+from repro.core.jax_scheduler import SoAFleetState, schedule_step
 from repro.core.scheduler import FilterScheduler, PreemptibleScheduler, RetryScheduler
 from repro.core.soa_fleet import SoAFleet
-from repro.core.types import Request
+from repro.core.types import VM_SPEC, Request
 
-from .common import SIZES, NOW, TINY, empty_fleet, emit, saturated_fleet, time_call
+from .common import (
+    BIG_NODE_CAP, NOW, SIZES, TINY, emit, empty_fleet, saturated_fleet,
+    time_call, write_bench_json,
+)
 
 SCHEDULERS = {
     "default": FilterScheduler,
@@ -33,9 +47,8 @@ def _bench_incremental(n_hosts: int) -> None:
     """The fast path on the same scenarios: the fleet state is persistent and
     device-resident, so a scheduling call is one fused jit dispatch — no
     python→device rebuild.  The decision is applied to a throwaway state copy
-    each call (the transition is pure), keeping repeats identical."""
-    import numpy as np
-
+    each call (``donate=False`` keeps the input alive), so repeats are
+    identical."""
     req_vec = np.asarray(SIZES["medium"].vec, np.float32)
     for scenario, fleet_fn in (("empty", empty_fleet), ("saturated", saturated_fleet)):
         fleet = SoAFleet(fleet_fn(n_hosts), cost_fn=PeriodCost(), k_slots=4)
@@ -45,13 +58,78 @@ def _bench_incremental(n_hosts: int) -> None:
 
             def call():
                 _, (h, _, ok, _) = schedule_step(
-                    fleet.state, req_vec, pre, -1, NOW, 1.0, fleet.masks,
+                    fleet.state, req_vec, pre, -1, NOW, 1.0,
                     cost_kind=fleet.cost_kind, period=fleet.period,
+                    donate=False,
                 )
                 jax.block_until_ready(h)
 
-            us, sd = time_call(call, repeats=15)
-            emit(f"fig2_jax_incr_{kind}_{scenario}_n{n_hosts}", us, f"std={sd:.1f}")
+            t = time_call(call, repeats=15)
+            emit(f"fig2_jax_incr_{kind}_{scenario}_n{n_hosts}", t.mean_us,
+                 f"std={t.std_us:.1f}", p50_us=t.p50_us)
+
+
+def _packed_state(n: int, k: int, seed: int = 0):
+    """Synthetic ``SoAFleetState`` for the K-sweep, built directly as arrays
+    (a python-``Host`` build of 10^5 hosts × 12 instances would dwarf the
+    measurement): double-size nodes, k preemptible small slots each,
+    randomized integer-minute start times.  Returns (state, request_vec) with
+    the request sized so every decision evacuates exactly 2 of the k slots."""
+    cap = np.asarray(BIG_NODE_CAP.vec, np.float32)
+    small = np.asarray(SIZES["small"].vec, np.float32)
+    rng = np.random.default_rng(seed)
+    free_f = np.broadcast_to(cap - k * small, (n, 3)).copy()
+    state = SoAFleetState(
+        free_f=jnp.asarray(free_f),
+        free_n=jnp.asarray(np.broadcast_to(cap, (n, 3)).copy()),
+        schedulable=jnp.ones((n,), bool),
+        domain=jnp.zeros((n,), jnp.int32),
+        slow=jnp.ones((n,), jnp.float32),
+        inst_res=jnp.asarray(np.broadcast_to(small, (n, k, 3)).copy()),
+        inst_start=jnp.asarray(
+            NOW - rng.integers(10, 500, (n, k)).astype(np.float32) * 60.0
+        ),
+        inst_price=jnp.ones((n, k), jnp.float32),
+        inst_ckpt=jnp.zeros((n, k), jnp.float32),
+        inst_valid=jnp.ones((n, k), bool),
+    )
+    free_vcpus = int(cap[0]) - k * int(small[0])
+    req = VM_SPEC.make(
+        vcpus=free_vcpus + 2 * int(small[0]),
+        ram_mb=int(free_f[0, 1]) + 2 * int(small[1]),
+        disk_gb=40,
+    )
+    return state, np.asarray(req.vec, np.float32)
+
+
+def _bench_k_sweep() -> None:
+    """K × shortlist grid.  ``shortlist=0`` = single-stage full enumeration
+    (the pre-shortlist baseline); ``shortlist=64`` = the two-stage pipeline."""
+    if TINY:
+        grid = [(k, 512, (0, 64)) for k in (4, 8, 10, 12)]
+        repeats = 3
+    else:
+        grid = [
+            (4, 65536, (0, 64)),
+            (8, 65536, (0, 64)),      # acceptance baseline: ≥5x at K=8
+            (10, 100_000, (64,)),
+            (12, 100_000, (64,)),     # full enumeration infeasible here
+        ]
+        repeats = 5
+    for k, n, shortlists in grid:
+        state, req_vec = _packed_state(n, k)
+        for m in shortlists:
+            def call():
+                _, (h, _, ok, _) = schedule_step(
+                    state, req_vec, False, -1, NOW, 1.0,
+                    cost_kind="period", shortlist=m, donate=False,
+                )
+                jax.block_until_ready(h)
+
+            t = time_call(call, repeats=repeats, warmup=2)
+            tag = f"shortlist{m}" if m else "full"
+            emit(f"fig2_ksweep_k{k}_n{n}_{tag}", t.mean_us,
+                 f"std={t.std_us:.1f};masks={1 << k}", p50_us=t.p50_us)
 
 
 def run() -> None:
@@ -67,19 +145,23 @@ def run() -> None:
                 if sname == "default" and pre:
                     continue  # baseline scheduler has no spot notion
                 req = Request(id="r", resources=SIZES["medium"], preemptible=pre)
-                us, sd = time_call(
+                t = time_call(
                     lambda: sched.schedule(req, fleets["empty"], NOW), repeats=15
                 )
-                emit(f"fig2_{sname}_{kind}_empty_n{n_hosts}", us, f"std={sd:.1f}")
+                emit(f"fig2_{sname}_{kind}_empty_n{n_hosts}", t.mean_us,
+                     f"std={t.std_us:.1f}", p50_us=t.p50_us)
             # --- saturated fleet: the termination-triggering path
             req = Request(id="r", resources=SIZES["medium"], preemptible=False)
             res = sched.schedule(req, fleets["saturated"], NOW)
-            us, sd = time_call(
+            t = time_call(
                 lambda: sched.schedule(req, fleets["saturated"], NOW), repeats=15
             )
-            derived = f"std={sd:.1f};ok={res.ok};passes={res.passes};victims={len(res.plan.ids)}"
-            emit(f"fig2_{sname}_normal_saturated_n{n_hosts}", us, derived)
+            derived = f"std={t.std_us:.1f};ok={res.ok};passes={res.passes};victims={len(res.plan.ids)}"
+            emit(f"fig2_{sname}_normal_saturated_n{n_hosts}", t.mean_us, derived,
+                 p50_us=t.p50_us)
         _bench_incremental(n_hosts)
+    _bench_k_sweep()
+    write_bench_json("fig2_latency")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ from repro.core.jax_scheduler import JaxPreemptibleScheduler, build_soa_state
 from repro.core.scheduler import PreemptibleScheduler
 from repro.core.types import Request
 
-from .common import NOW, SIZES, TINY, emit, saturated_fleet, time_call
+from .common import NOW, SIZES, TINY, emit, saturated_fleet, time_call, write_bench_json
 
 
 def run() -> None:
@@ -26,23 +26,33 @@ def run() -> None:
     py = PreemptibleScheduler(cost_fn=PeriodCost())
     for n_hosts in (100,) if TINY else (100, 1000, 10_000):
         hosts = saturated_fleet(n_hosts)
-        us_py, _ = time_call(lambda: py.schedule(req, hosts, NOW),
-                             repeats=5 if n_hosts >= 10_000 else 10)
-        emit(f"sched_python_n{n_hosts}", us_py, "reference")
+        t_py = time_call(lambda: py.schedule(req, hosts, NOW),
+                         repeats=5 if n_hosts >= 10_000 else 10)
+        emit(f"sched_python_n{n_hosts}", t_py.mean_us, "reference",
+             p50_us=t_py.p50_us)
 
-        for use_pallas, tag in ((False, "jnp"), (True, "pallas_interpret")):
+        variants = (
+            (False, 0, "jnp"),
+            (False, 64, "jnp_shortlist"),
+            (True, 0, "pallas_interpret"),
+        )
+        for use_pallas, shortlist, tag in variants:
             if use_pallas and n_hosts > 1000:
                 continue  # interpret mode is a correctness harness, not speed
-            jx = JaxPreemptibleScheduler(cost_fn=PeriodCost(), use_pallas=use_pallas)
+            jx = JaxPreemptibleScheduler(
+                cost_fn=PeriodCost(), use_pallas=use_pallas, shortlist=shortlist
+            )
             state, _ = build_soa_state(hosts, NOW, jx.cost_fn, k_slots=jx.k_slots)
 
             def call():
                 h, m, ok = jx.schedule_soa(state, req_vec, False, -1)
                 jax.block_until_ready(h)
 
-            us_jx, _ = time_call(call, repeats=10)
-            emit(f"sched_jax_{tag}_n{n_hosts}", us_jx,
-                 f"speedup_vs_python={us_py / us_jx:.1f}x")
+            t_jx = time_call(call, repeats=10)
+            emit(f"sched_jax_{tag}_n{n_hosts}", t_jx.mean_us,
+                 f"speedup_vs_python={t_py.mean_us / t_jx.mean_us:.1f}x",
+                 p50_us=t_jx.p50_us)
+    write_bench_json("jax_vs_python")
 
 
 if __name__ == "__main__":

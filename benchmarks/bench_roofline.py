@@ -7,7 +7,7 @@ import glob
 import json
 import os
 
-from .common import emit
+from .common import emit, write_bench_json
 
 ART_DIRS = ("artifacts/dryrun",)
 
@@ -34,6 +34,7 @@ def run() -> None:
             f"tc={r['t_compute_s']:.3f};tm={r['t_memory_s']:.3f};"
             f"tx={r['t_collective_s']:.3f}",
         )
+    write_bench_json("roofline")
 
 
 if __name__ == "__main__":

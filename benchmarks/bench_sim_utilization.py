@@ -23,7 +23,7 @@ from repro.core.jax_scheduler import JaxPreemptibleScheduler
 from repro.core.scheduler import FilterScheduler, PreemptibleScheduler
 from repro.core.simulator import Simulator, SoASimulator, WorkloadSpec
 
-from .common import NODE_CAP, SIZES, TINY, emit
+from .common import NODE_CAP, SIZES, TINY, emit, write_bench_json
 
 
 def _spec(preemptible_fraction: float) -> WorkloadSpec:
@@ -98,6 +98,7 @@ def run() -> None:
         f"wall_s={t_slow:.2f};placed={placed_slow};"
         f"speedup_fastpath={t_slow / t_fast:.1f}x",
     )
+    write_bench_json("sim_utilization")
 
 
 if __name__ == "__main__":

@@ -9,7 +9,7 @@ from repro.core.cost import PeriodCost
 from repro.core.scheduler import PreemptibleScheduler
 from repro.core.types import Host, Instance, Request
 
-from .common import NODE_CAP, NOW, SIZES, emit, time_call
+from .common import NODE_CAP, NOW, SIZES, emit, time_call, write_bench_json
 
 
 def _host(name, instances):
@@ -83,10 +83,11 @@ def run() -> None:
         res = sched.schedule(req, hosts, NOW)
         assert res.host == want_host and set(res.plan.ids) == want_victims, (
             name, res.host, res.plan.ids)
-        us, _ = time_call(lambda: sched.schedule(req, mk(), NOW), repeats=20)
-        emit(f"paper_{name}", us,
+        t = time_call(lambda: sched.schedule(req, mk(), NOW), repeats=20)
+        emit(f"paper_{name}", t.mean_us,
              f"host={res.host};victims={'+'.join(sorted(res.plan.ids))};"
-             f"cost_min={res.plan.cost/60:.0f}")
+             f"cost_min={res.plan.cost/60:.0f}", p50_us=t.p50_us)
+    write_bench_json("tables")
 
 
 if __name__ == "__main__":

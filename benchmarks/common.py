@@ -1,17 +1,29 @@
-"""Shared benchmark fixtures: the paper's testbed geometry + fleet builders."""
+"""Shared benchmark fixtures: the paper's testbed geometry, fleet builders,
+timing helpers, and the machine-readable results sink.
+
+Every ``emit()`` row is printed as the historical ``name,us,derived`` CSV AND
+recorded in-process; each benchmark module flushes its rows to
+``$REPRO_BENCH_OUT/BENCH_<module>.json`` (default ``bench_out/``) with
+per-config mean/p50 latency, so CI can archive results as artifacts and
+regressions are diffable without parsing stdout.
+"""
 from __future__ import annotations
 
+import json
 import os
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, NamedTuple, Optional
 
 import numpy as np
 
-from repro.core.types import VM_SPEC, Host, Instance, Request
+from repro.core.types import VM_SPEC, Host, Instance
 
 #: CI smoke mode: shrink every fleet/duration so ``python -m benchmarks.run``
 #: exercises all entrypoints in seconds rather than minutes.
 TINY = os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+
+#: Where BENCH_*.json files land (created on demand).
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "bench_out")
 
 SIZES = {
     "small": VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20),
@@ -20,6 +32,8 @@ SIZES = {
 }
 #: paper Table 1 nodes (disk non-binding; see tests/test_scheduler_correctness)
 NODE_CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=10_000)
+#: double-size nodes for the K>8 oversubscription sweep (up to 16 small slots)
+BIG_NODE_CAP = VM_SPEC.make(vcpus=16, ram_mb=32000, disk_gb=10_000)
 NOW = 1_000_000.0
 
 
@@ -52,8 +66,14 @@ def saturated_fleet(n: int, seed: int = 0, preemptible_frac: float = 0.5,
     return hosts
 
 
-def time_call(fn: Callable, repeats: int = 30, warmup: int = 3) -> Tuple[float, float]:
-    """(mean_us, std_us) of fn()."""
+class Timing(NamedTuple):
+    mean_us: float
+    std_us: float
+    p50_us: float
+
+
+def time_call(fn: Callable, repeats: int = 30, warmup: int = 3) -> Timing:
+    """Mean/std/median latency of fn() in microseconds."""
     for _ in range(warmup):
         fn()
     ts = []
@@ -61,8 +81,33 @@ def time_call(fn: Callable, repeats: int = 30, warmup: int = 3) -> Tuple[float, 
         t0 = time.perf_counter()
         fn()
         ts.append((time.perf_counter() - t0) * 1e6)
-    return float(np.mean(ts)), float(np.std(ts))
+    return Timing(float(np.mean(ts)), float(np.std(ts)), float(np.median(ts)))
 
 
-def emit(name: str, us: float, derived: str) -> None:
+#: rows emitted since the last ``write_bench_json`` flush
+_RECORDS: List[dict] = []
+
+
+def emit(name: str, us: float, derived: str, p50_us: Optional[float] = None) -> None:
+    """Print the historical CSV row and record it for the JSON sink."""
     print(f"{name},{us:.1f},{derived}")
+    row = {"name": name, "mean_us": round(float(us), 3), "derived": derived}
+    if p50_us is not None:
+        row["p50_us"] = round(float(p50_us), 3)
+    _RECORDS.append(row)
+
+
+def write_bench_json(module: str) -> Optional[str]:
+    """Flush rows recorded since the previous call to BENCH_<module>.json.
+
+    Returns the path written (None when nothing was recorded — e.g. the
+    roofline table with no dry-run artifacts present)."""
+    global _RECORDS
+    rows, _RECORDS = _RECORDS, []
+    if not rows:
+        return None
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"BENCH_{module}.json")
+    with open(path, "w") as f:
+        json.dump({"module": module, "tiny": TINY, "rows": rows}, f, indent=1)
+    return path

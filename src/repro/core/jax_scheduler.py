@@ -3,18 +3,34 @@
 The paper's single-pass design (Alg. 2+5+6) has a property the retry design
 lacks: *the whole decision is a pure function of the host-state arrays* — no
 data-dependent second cycle.  We exploit that to turn scheduling into one
-jit-compiled array program over struct-of-arrays host state:
+jit-compiled array program over struct-of-arrays host state, organized as a
+**two-stage shortlist-pruned pipeline**:
 
-    filter (dual-view)  →  subset enumeration (2^K masks)  →
-    weigh (normalized)  →  argmax  →  termination mask
+    stage 1 (O(N·K))  screen:    dual-view fit mask, exact feasibility
+                                 (full-subset test), termination-cost bounds
+                                 from the sorted per-slot costs, and an
+                                 optimistic weigher score ``omega_ub``;
+    stage 2 (O(M·2^K)) decide:   ``lax.top_k`` shortlist of M candidates,
+                                 gather their (M, K, D) slot rows, exact
+                                 Alg. 5 subset enumeration + exact weighing
+                                 on the shortlist only.
+
+Only the argmax host's termination plan is ever applied, so pruning is
+*exact*: an admissibility check compares the winner's exact score against the
+optimistic bound of every non-shortlisted host and falls back to the full
+O(N·2^K) enumeration (``lax.cond``) in the rare case the shortlist could have
+excluded the true winner.  Decisions are therefore bit-identical with the
+unpruned path (pinned by tests/test_shortlist_parity.py), while the complexity
+drops from O(N·2^K) to O(N·K + M·2^K) — K=12 (4096 masks) becomes affordable
+at 10^5 hosts.
 
 Cost functions must be *per-instance additive* (all of the paper's are:
 period, count, revenue, recompute), so a subset's cost is ``mask @ inst_cost``
 and Alg. 5 becomes a masked matmul + argmin — MXU-shaped work.  The Pallas
-kernel in ``repro.kernels.sched_weigh`` fuses the hot part (filter + subset
-feasibility/cost + per-host reduction) over VMEM tiles; this module provides
-the pure-jnp equivalent (also the kernel's oracle) and the end-to-end
-scheduler wrapper used by benchmarks.
+kernel in ``repro.kernels.sched_weigh`` fuses the stage-2 enumeration over
+VMEM tiles (both the full fleet and the gathered shortlist); this module
+provides the pure-jnp equivalent (also the kernel's oracle) and the
+end-to-end scheduler wrapper used by benchmarks.
 
 Capacity model: each host carries up to ``K`` preemptible instances (padded,
 masked).  2^K subset masks are enumerated exactly — K≤12 covers every
@@ -27,7 +43,20 @@ Two state flavors:
 * ``SoAFleetState`` + ``build_fleet_state`` — built once, then updated
   incrementally on device via the pure transitions below (``schedule_step``,
   ``schedule_many``, ``apply_*``) — the fleet-scale fast path driven by
-  ``core.soa_fleet.SoAFleet`` / ``core.simulator.SoASimulator``.
+  ``core.soa_fleet.SoAFleet`` / ``core.simulator.SoASimulator``.  The
+  decision/transition entry points donate the input state's buffers
+  (``donate_argnums``) so per-event updates happen in place; pass
+  ``donate=False`` when the caller needs the input state afterwards.
+
+Exactness note: with integer-valued resources and slot costs (the paper's
+workload regime, and what every parity test generates) all the screen's sums
+are exact in f32, its bounds hold bitwise, and shortlist decisions are
+unconditionally identical to the full enumeration.  With arbitrary float
+costs (e.g. the "revenue" kind's ``/period``), the bound sums can differ
+from the enumeration's subset sums by f32 reassociation ulps; the
+admissibility check pads its strict branch by that margin, leaving one
+residual caveat: two hosts whose *exact* scores collide to the same f32
+omega may resolve their tie differently between the two paths.
 """
 from __future__ import annotations
 
@@ -44,6 +73,7 @@ from .cost import (
     CostFunction,
     CountCost,
     PeriodCost,
+    RecomputeCost,
     RevenueCost,
 )
 from .types import (
@@ -57,6 +87,10 @@ from .types import (
 
 NEG_INF = -1e30
 POS_INF = 1e30
+
+#: Default stage-2 shortlist size when ``shortlist=None`` (auto).  Fleets not
+#: meaningfully larger than this keep the single-stage full enumeration.
+DEFAULT_SHORTLIST = 64
 
 
 # ---------------------------------------------------------------------------
@@ -171,6 +205,14 @@ def subset_masks(k: int) -> np.ndarray:
     return ((m[:, None] >> np.arange(k)[None, :]) & 1).astype(np.float32)
 
 
+def _masks_const(k: int) -> jax.Array:
+    """The (2^k, k) mask matrix as a trace-time constant.
+
+    Built from the *static* slot count inside jit, so it is folded into the
+    compiled executable once instead of being transferred per call."""
+    return jnp.asarray(subset_masks(k))
+
+
 # ---------------------------------------------------------------------------
 # The jit'd decision (pure jnp; also the Pallas kernel's oracle)
 # ---------------------------------------------------------------------------
@@ -216,12 +258,102 @@ def host_plan_terms(
     return best_cost, best_mask, feasible
 
 
+@functools.lru_cache(maxsize=None)
+def _oem_pairs(n: int) -> Tuple[Tuple[int, int], ...]:
+    """Compare-exchange pairs of Batcher's odd-even mergesort for n lanes."""
+    pairs = []
+    p = 1
+    while p < n:
+        k = p
+        while k >= 1:
+            for j in range(k % p, n - k, 2 * k):
+                for i in range(min(k, n - j - k)):
+                    if (i + j) // (2 * p) == (i + j + k) // (2 * p):
+                        pairs.append((i + j, i + j + k))
+            k //= 2
+        p *= 2
+    return tuple(pairs)
+
+
+def _net_sort_cols(cols: List[jax.Array], descending: bool = False) -> List[jax.Array]:
+    """Sort K column arrays elementwise with a Batcher network: O(K log² K)
+    fused min/max stages.  XLA CPU's generic ``sort`` is ~10x slower on these
+    short (K ≤ 16) rows at fleet-scale N, and the screen must stay O(N·K)
+    cheap for the shortlist pipeline to pay off."""
+    cols = list(cols)
+    for i, j in _oem_pairs(len(cols)):
+        lo = jnp.minimum(cols[i], cols[j])
+        hi = jnp.maximum(cols[i], cols[j])
+        cols[i], cols[j] = (hi, lo) if descending else (lo, hi)
+    return cols
+
+
+def screen_terms(
+    free_f: jax.Array,
+    inst_res: jax.Array,
+    inst_cost: jax.Array,
+    inst_valid: jax.Array,
+    req_res: jax.Array,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Stage-1 per-host screening terms, O(N·K) — no subset enumeration.
+
+    Returns ``(feasible, overcommitted, cost_lb, cost_ub)``:
+      feasible      (N,) EXACT Alg. 5 feasibility: the full valid-slot subset
+                    frees the per-dim maximum, so ``free_f + Σ res ≥ req``
+                    decides feasibility of *some* subset;
+      overcommitted (N,) the request does not fit ``free_f`` as-is;
+      cost_lb       (N,) lower bound on the optimal termination cost: any
+                    feasible subset needs ≥ m* slots (per-dim sorted-resource
+                    prefix argument), and slot costs are non-negative, so it
+                    pays at least the m* cheapest slot costs;
+      cost_ub       (N,) upper bound: cost of evacuating every valid slot
+                    (a feasible plan whenever any plan is).
+    Hosts that fit directly have ``cost_lb == cost_ub == 0`` (exact).
+    """
+    k = inst_res.shape[1]
+    res = jnp.where(inst_valid[..., None], inst_res, 0.0)            # (N,K,D)
+    costv = jnp.where(inst_valid, inst_cost, POS_INF)                # (N,K)
+    need = req_res[None, :] - free_f                                 # (N,D)
+    feasible = jnp.all(jnp.sum(res, axis=1) >= need - 1e-6, axis=-1)
+    overcommitted = jnp.any(need > 1e-6, axis=-1)
+    # Fewest slots that could cover dim d: descending per-dim resource prefix
+    # sums (any m-subset frees at most the top-m sum on every dim).  Each dim
+    # sorts independently — the bound only needs per-dim maxima coverage.
+    res_desc = _net_sort_cols([res[:, i, :] for i in range(k)], descending=True)
+    lacking = jnp.zeros(need.shape, jnp.int32)                       # (N,D)
+    prefix = jnp.zeros_like(need)
+    for col in res_desc:
+        prefix = prefix + col
+        lacking = lacking + (prefix < need - 1e-6).astype(jnp.int32)
+    m_d = jnp.where(need > 1e-6, lacking + 1, 0)                     # (N,D)
+    m_star = jnp.minimum(jnp.max(m_d, axis=-1), k)                   # (N,)
+    cost_asc = _net_sort_cols([costv[:, i] for i in range(k)])
+    cpre = [jnp.zeros_like(cost_asc[0])]
+    for col in cost_asc:
+        cpre.append(cpre[-1] + col)
+    lb = jnp.take_along_axis(jnp.stack(cpre, axis=1), m_star[:, None], axis=1)[:, 0]
+    cost_lb = jnp.where(overcommitted, lb, 0.0)
+    total = jnp.sum(jnp.where(inst_valid, inst_cost, 0.0), axis=1)
+    cost_ub = jnp.where(overcommitted, total, 0.0)
+    return feasible, overcommitted, cost_lb, cost_ub
+
+
 def _normalize(w: jax.Array, valid: jax.Array) -> jax.Array:
     """OpenStack weight normalization over the valid candidate set."""
     lo = jnp.min(jnp.where(valid, w, POS_INF))
     hi = jnp.max(jnp.where(valid, w, NEG_INF))
     span = hi - lo
     return jnp.where(span > 1e-12, (w - lo) / jnp.where(span > 1e-12, span, 1.0), 0.0)
+
+
+def _plan_terms(use_pallas: bool, gathered: bool = False):
+    """Enumeration backend: Pallas kernel (full-fleet or gathered-shortlist
+    tiling) or the pure-jnp oracle."""
+    if use_pallas:
+        from repro.kernels.sched_weigh import sched_weigh, sched_weigh_gathered
+
+        return sched_weigh_gathered if gathered else sched_weigh
+    return host_plan_terms
 
 
 def _decision_core(
@@ -236,14 +368,28 @@ def _decision_core(
     req_res: jax.Array,
     req_preemptible: jax.Array,
     req_domain: jax.Array,
-    masks: jax.Array,
     use_pallas: bool,
     weigher_multipliers: Tuple[float, float, float, float],
     require_free_slot: bool,
+    shortlist: Optional[int],
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """The decision pipeline on raw SoA arrays (shared by the rebuild path,
-    the persistent fast path, and the batched ``lax.scan`` path)."""
-    n_hosts = free_f.shape[0]
+    """The two-stage decision pipeline on raw SoA arrays (shared by the
+    rebuild path, the persistent fast path, and the batched ``lax.scan``
+    path).
+
+    ``shortlist``: stage-2 candidate count M.  ``None`` = auto (64 at fleet
+    scale, full enumeration for small fleets); ``0`` disables pruning.  Any
+    value yields decisions bit-identical to the full enumeration — when the
+    admissibility check cannot certify the shortlist, the full path runs via
+    ``lax.cond``.
+    """
+    n_hosts, k = inst_res.shape[0], inst_res.shape[1]
+    masks = _masks_const(k)
+    if shortlist is None:
+        shortlist = DEFAULT_SHORTLIST if n_hosts > 4 * DEFAULT_SHORTLIST else 0
+    m_cand = min(int(shortlist), n_hosts)
+    m_over, m_term, m_pack, m_strag = weigher_multipliers
+
     # ---- phase 1: dual-view filtering (the paper's trick) -------------------
     view = jnp.where(req_preemptible, free_f, free_n)                # (N,D)
     fits = jnp.all(view >= req_res[None, :] - 1e-6, axis=-1)
@@ -254,67 +400,139 @@ def _decision_core(
         # needs an empty slot (the rebuild path instead raises on overflow).
         fits &= jnp.where(req_preemptible, jnp.any(~inst_valid, axis=-1), True)
 
-    # ---- phase 2+3 terms: Alg.5 enumeration (skipped for preemptible reqs) --
-    if use_pallas:
-        from repro.kernels.sched_weigh import sched_weigh as _sched_weigh
+    # ---- stage 1: O(N·K) screen ---------------------------------------------
+    any_feasible, overcommitted, cost_lb, cost_ub = screen_terms(
+        free_f, inst_res, inst_cost, inst_valid, req_res
+    )
+    # Preemptible requests never terminate others: zero cost everywhere.
+    cost_lb = jnp.where(req_preemptible, 0.0, cost_lb)
+    cost_ub = jnp.where(req_preemptible, 0.0, cost_ub)
+    feasible = jnp.where(req_preemptible, fits, any_feasible)
+    valid = fits & feasible
 
-        best_cost, best_mask, any_feasible = _sched_weigh(
-            free_f, inst_res, inst_cost, inst_valid, req_res, masks,
+    # Weigher terms that need no enumeration, summed in a fixed order shared
+    # by every path (bit-exact shortlist parity requires identical float ops).
+    base = jnp.zeros(n_hosts)
+    if m_over:
+        base = base + m_over * _normalize(jnp.where(overcommitted, -1.0, 0.0), valid)
+    if m_pack:
+        base = base + m_pack * _normalize(-free_f.sum(-1), valid)
+    if m_strag:
+        base = base + m_strag * _normalize(-slow, valid)
+
+    # The termination-cost weigher is normalized with *bound-derived*
+    # constants (min/max of the stage-1 cost envelope over the valid set)
+    # instead of the enumerated costs' min/max: same [0,1]-ish scaling, but
+    # computable in O(N·K) — which is what lets stage 2 skip the enumeration
+    # for every non-shortlisted host while staying bit-exact.
+    c_lo = jnp.min(jnp.where(valid, cost_lb, POS_INF))
+    c_hi = jnp.max(jnp.where(valid, cost_ub, NEG_INF))
+    span = c_hi - c_lo
+    good_span = span > 1e-12
+    inv_span = jnp.where(good_span, 1.0 / jnp.where(good_span, span, 1.0), 0.0)
+
+    def omega_of(best_cost: jax.Array, base_terms: jax.Array, valid_mask: jax.Array):
+        w = base_terms
+        if m_term:
+            w = w + m_term * ((c_hi - jnp.minimum(best_cost, POS_INF)) * inv_span)
+        return jnp.where(valid_mask, w, NEG_INF)
+
+    plan_terms = _plan_terms(use_pallas)
+
+    def full_decision(_):
+        """Single-stage path: exact enumeration over every host."""
+        best_cost, best_mask, _ = plan_terms(
+            free_f, inst_res, inst_cost, inst_valid, req_res, masks
+        )
+        best_cost = jnp.where(req_preemptible, 0.0, best_cost)
+        best_mask = jnp.where(req_preemptible, 0, best_mask)
+        omega = omega_of(best_cost, base, valid)
+        host_idx = jnp.argmax(omega).astype(jnp.int32)
+        return host_idx, best_mask[host_idx], omega[host_idx] > NEG_INF / 2
+
+    if m_cand <= 0 or m_cand >= n_hosts:
+        return full_decision(None)
+
+    # ---- stage 2: top-M shortlist, exact enumeration on the gather ----------
+    # omega_ub ≥ omega at float level: cost_lb ≤ best_cost and every op in
+    # omega_of is monotone (shared constants, shared add order).
+    opt_cost = cost_lb if m_term >= 0 else cost_ub
+    omega_ub = omega_of(opt_cost, base, valid)
+    _, cand = jax.lax.top_k(omega_ub, m_cand)                        # ties → low idx
+    bc_s, bm_s, _ = _plan_terms(use_pallas, gathered=True)(
+        free_f[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
+        req_res, masks,
+    )
+    bc_s = jnp.where(req_preemptible, 0.0, bc_s)
+    bm_s = jnp.where(req_preemptible, 0, bm_s)
+    omega_s = omega_of(bc_s, base[cand], valid[cand])                # (M,)
+    best_val = jnp.max(omega_s)
+    # Winner = lowest ORIGINAL index among exact-score ties (what the full
+    # path's argmax-first-hit does over the whole fleet).
+    tie_idx = jnp.where(omega_s == best_val, cand, n_hosts)
+    winner_pos = jnp.argmin(tie_idx).astype(jnp.int32)
+    w_star = tie_idx[winner_pos].astype(jnp.int32)
+    ok_s = best_val > NEG_INF / 2
+
+    # ---- admissibility: can any non-shortlisted host still win? -------------
+    in_short = jnp.zeros((n_hosts,), bool).at[cand].set(True)
+    out_ub = jnp.where(in_short, NEG_INF, omega_ub)
+    u = jnp.max(out_ub)
+    j_u = jnp.argmax(out_ub).astype(jnp.int32)
+    # An outside host beats w* only with omega > best_val, or omega == best_val
+    # and a lower index; its omega_ub caps both.  ~ok_s ⇒ no valid host exists
+    # anywhere (top_k would have surfaced one), so the shortlist result (host
+    # 0, ok=False) already matches the full path.
+    #
+    # With integer-valued costs (the paper regime; all sums are exact in f32)
+    # ``cost_lb ≤ best_cost`` holds bitwise and ``u < best_val`` is already
+    # safe.  With arbitrary float costs the bound's ≤K-term sums may overshoot
+    # the enumeration's subset sums by a few ulp of reassociation error, so
+    # pad the strict branch by that margin; the exact-tie branch keeps the
+    # fast path for mass-tied fleets (see module docstring for the residual
+    # ulp-tie caveat on non-integer inputs).
+    if m_term:
+        tol = abs(m_term) * inv_span * (3.0 * k * 1.2e-7) * jnp.maximum(
+            jnp.abs(c_hi), jnp.abs(c_lo)
         )
     else:
-        best_cost, best_mask, any_feasible = host_plan_terms(
-            free_f, inst_res, inst_cost, inst_valid, req_res, masks,
-        )
-    # Preemptible requests never terminate others: empty plan, zero cost.
-    best_cost = jnp.where(req_preemptible, 0.0, best_cost)
-    best_mask = jnp.where(req_preemptible, 0, best_mask)
-    feasible = jnp.where(req_preemptible, fits, any_feasible)
+        tol = 0.0
+    admissible = (u < best_val - tol) | ((u == best_val) & (j_u > w_star)) | ~ok_s
 
-    valid = fits & feasible
-    overcommitted = ~jnp.all(free_f >= req_res[None, :] - 1e-6, axis=-1)
-
-    # ---- phase 2: normalized weighing on h_f --------------------------------
-    m_over, m_term, m_pack, m_strag = weigher_multipliers
-    omega = jnp.zeros(n_hosts)
-    if m_over:
-        omega += m_over * _normalize(jnp.where(overcommitted, -1.0, 0.0), valid)
-    if m_term:
-        omega += m_term * _normalize(-jnp.minimum(best_cost, POS_INF), valid)
-    if m_pack:
-        omega += m_pack * _normalize(-free_f.sum(-1), valid)
-    if m_strag:
-        omega += m_strag * _normalize(-slow, valid)
-    omega = jnp.where(valid, omega, NEG_INF)
-
-    # ---- argmax (first-index tie-break) --------------------------------------
-    host_idx = jnp.argmax(omega).astype(jnp.int32)
-    ok = omega[host_idx] > NEG_INF / 2
-    return host_idx, best_mask[host_idx], ok
+    return jax.lax.cond(
+        admissible,
+        lambda _: (w_star, bm_s[winner_pos], ok_s),
+        full_decision,
+        operand=None,
+    )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("use_pallas", "weigher_multipliers"),
+    static_argnames=("use_pallas", "weigher_multipliers", "shortlist"),
 )
 def schedule_decision(
     state: SoAHostState,
     req_res: jax.Array,          # (D,)
     req_preemptible: jax.Array,  # () bool
     req_domain: jax.Array,       # () int32; -1 = any
-    masks: jax.Array,            # (M, K)
     use_pallas: bool = False,
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+    shortlist: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One scheduling decision.  Returns (host_idx, term_mask_idx, ok).
 
     ``weigher_multipliers`` = (overcommit, termination_cost, packing,
     straggler) — the first two reproduce the paper's evaluation policy.
+    ``shortlist`` = stage-2 candidate count (None = auto, 0 = off); any
+    setting returns the same decision (see ``_decision_core``).
     """
     return _decision_core(
         state.free_f, state.free_n, state.schedulable, state.domain,
         state.slow, state.inst_res, state.inst_cost, state.inst_valid,
-        req_res, req_preemptible, req_domain, masks,
+        req_res, req_preemptible, req_domain,
         use_pallas, weigher_multipliers, require_free_slot=False,
+        shortlist=shortlist,
     )
 
 
@@ -338,8 +556,9 @@ class SoAFleetState:
     """Persistent struct-of-arrays fleet view (device-resident).
 
     Unlike ``SoAHostState`` (whose ``inst_cost`` is frozen at build time),
-    slots carry ``inst_start``/``inst_price`` so the termination cost is a
-    pure function of (state, now) — the prerequisite for incremental reuse.
+    slots carry ``inst_start``/``inst_price``/``inst_ckpt`` so the
+    termination cost is a pure function of (state, now) — the prerequisite
+    for incremental reuse.
     """
 
     free_f: jax.Array       # (N, D) h_f free resources
@@ -350,6 +569,7 @@ class SoAFleetState:
     inst_res: jax.Array     # (N, K, D) preemptible slot resources (padded)
     inst_start: jax.Array   # (N, K)    slot start times
     inst_price: jax.Array   # (N, K)    slot price rates
+    inst_ckpt: jax.Array    # (N, K)    last durable-checkpoint times
     inst_valid: jax.Array   # (N, K)    bool
 
     @property
@@ -365,8 +585,9 @@ def jax_cost_params(cost_fn: CostFunction) -> Tuple[str, float]:
     """Map a python cost module onto the jnp slot-cost kinds.
 
     Returns ``(kind, period_s)``.  Only per-instance additive costs that are
-    pure functions of (start_time, price, now) are expressible on device;
-    anything else must use the rebuild path (``build_soa_state``).
+    pure functions of (start_time, price, last_checkpoint, resources, now)
+    are expressible on device; anything else must use the rebuild path
+    (``build_soa_state``).
     """
     if isinstance(cost_fn, PeriodCost):
         return "period", cost_fn.period_s
@@ -374,6 +595,8 @@ def jax_cost_params(cost_fn: CostFunction) -> Tuple[str, float]:
         return "count", BILL_PERIOD_S
     if isinstance(cost_fn, RevenueCost):
         return "revenue", cost_fn.period_s
+    if isinstance(cost_fn, RecomputeCost):
+        return "recompute", BILL_PERIOD_S
     raise ValueError(
         f"cost function {cost_fn.name!r} has no device-resident equivalent; "
         "use the rebuild path (build_soa_state + schedule_decision)"
@@ -386,6 +609,8 @@ def slot_costs(
     inst_price: jax.Array,
     now: jax.Array,
     period: jax.Array,
+    inst_ckpt: Optional[jax.Array] = None,
+    inst_res: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Per-slot termination cost at time ``now`` (invalid slots are masked
     downstream, so garbage values on them are harmless)."""
@@ -395,6 +620,11 @@ def slot_costs(
         return jnp.ones_like(inst_start)
     if cost_kind == "revenue":
         return ((now - inst_start) % period) / period * inst_price
+    if cost_kind == "recompute":
+        # Chip-seconds of work lost since the last durable checkpoint
+        # (== core.cost.RecomputeCost; dim 0 is chips/vcpus by convention).
+        lost = jnp.maximum(0.0, now - inst_ckpt)
+        return lost * jnp.maximum(1.0, inst_res[..., 0])
     raise ValueError(f"unknown cost kind {cost_kind!r}")
 
 
@@ -418,6 +648,7 @@ def build_fleet_state(
     inst_res = np.zeros((n, k_slots, d), np.float32)
     inst_start = np.zeros((n, k_slots), np.float32)
     inst_price = np.ones((n, k_slots), np.float32)
+    inst_ckpt = np.zeros((n, k_slots), np.float32)
     inst_valid = np.zeros((n, k_slots), bool)
     slots: List[List[Optional[Instance]]] = []
     for i, pre in enumerate(pre_lists):
@@ -433,6 +664,11 @@ def build_fleet_state(
             inst_res[i, k] = inst.resources.vec
             inst_start[i, k] = inst.start_time
             inst_price[i, k] = inst.price_rate
+            inst_ckpt[i, k] = (
+                inst.last_checkpoint
+                if inst.last_checkpoint is not None
+                else inst.start_time
+            )
             inst_valid[i, k] = True
         slots.append(row)
     state = SoAFleetState(
@@ -444,24 +680,28 @@ def build_fleet_state(
         inst_res=jnp.asarray(inst_res),
         inst_start=jnp.asarray(inst_start),
         inst_price=jnp.asarray(inst_price),
+        inst_ckpt=jnp.asarray(inst_ckpt),
         inst_valid=jnp.asarray(inst_valid),
     )
     return state, slots
 
 
 # -- pure transitions (all O(K·D) scatter updates; fully jit-able) -----------
+#
+# Every transition donates the input state's buffers: the caller's reference
+# is consumed and must be rebound to the returned state (the ``SoAFleet``
+# mirror and the simulators do exactly that).
 
 
 def _apply_decision(
     state: SoAFleetState,
     host_idx: jax.Array,      # () int32
-    mask_idx: jax.Array,      # () int32 into ``masks``
+    mask_idx: jax.Array,      # () int32 subset-mask index (bit k = slot k)
     ok: jax.Array,            # () bool — no-op when False
     req_res: jax.Array,       # (D,)
     preemptible: jax.Array,   # () bool
     now: jax.Array,           # () float
     price: jax.Array,         # () float
-    masks: jax.Array,         # (M, K)
 ) -> Tuple[SoAFleetState, jax.Array, jax.Array]:
     """Apply one decision: evacuate the winning subset, place the request.
 
@@ -471,7 +711,7 @@ def _apply_decision(
     """
     k = state.k_slots
     row_valid = state.inst_valid[host_idx]                       # (K,)
-    mask_bits = masks[mask_idx] > 0.5                            # (K,)
+    mask_bits = ((mask_idx >> jnp.arange(k)) & 1) > 0            # (K,)
     kill = mask_bits & row_valid & ok & ~preemptible
     freed = jnp.sum(
         jnp.where(kill[:, None], state.inst_res[host_idx], 0.0), axis=0
@@ -499,32 +739,73 @@ def _apply_decision(
         inst_price=state.inst_price.at[host_idx].set(
             jnp.where(onehot, price, state.inst_price[host_idx])
         ),
+        inst_ckpt=state.inst_ckpt.at[host_idx].set(
+            jnp.where(onehot, now, state.inst_ckpt[host_idx])
+        ),
     )
     return new_state, slot, kill
 
 
 def _step_core(
     state: SoAFleetState,
-    req_res, req_preemptible, req_domain, now, price, masks,
-    cost_kind, period, use_pallas, weigher_multipliers,
+    req_res, req_preemptible, req_domain, now, price,
+    cost_kind, period, use_pallas, weigher_multipliers, shortlist,
 ):
-    inst_cost = slot_costs(cost_kind, state.inst_start, state.inst_price, now, period)
+    inst_cost = slot_costs(
+        cost_kind, state.inst_start, state.inst_price, now, period,
+        inst_ckpt=state.inst_ckpt, inst_res=state.inst_res,
+    )
     host_idx, mask_idx, ok = _decision_core(
         state.free_f, state.free_n, state.schedulable, state.domain,
         state.slow, state.inst_res, inst_cost, state.inst_valid,
-        req_res, req_preemptible, req_domain, masks,
+        req_res, req_preemptible, req_domain,
         use_pallas, weigher_multipliers, require_free_slot=True,
+        shortlist=shortlist,
     )
     state, slot, kill = _apply_decision(
-        state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price, masks
+        state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price
     )
     return state, (host_idx, slot, ok, kill)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("cost_kind", "use_pallas", "weigher_multipliers"),
-)
+_STEP_STATICS = ("cost_kind", "use_pallas", "weigher_multipliers", "shortlist")
+
+
+def _step_entry(state, req_res, req_preemptible, req_domain, now, price,
+                period, *, cost_kind, use_pallas, weigher_multipliers,
+                shortlist):
+    return _step_core(
+        state, req_res, req_preemptible, req_domain, now, price,
+        cost_kind, period, use_pallas, weigher_multipliers, shortlist,
+    )
+
+
+def _many_entry(state, req_res, req_preemptible, req_domain, req_now,
+                req_price, period, *, cost_kind, use_pallas,
+                weigher_multipliers, shortlist):
+    def body(st, xs):
+        res, pre, dom, now, price = xs
+        return _step_core(
+            st, res, pre, dom, now, price,
+            cost_kind, period, use_pallas, weigher_multipliers, shortlist,
+        )
+
+    return jax.lax.scan(
+        body, state,
+        (req_res, req_preemptible, req_domain, req_now, req_price),
+    )
+
+
+_step_donated = functools.partial(
+    jax.jit, static_argnames=_STEP_STATICS, donate_argnums=(0,)
+)(_step_entry)
+_step_kept = functools.partial(jax.jit, static_argnames=_STEP_STATICS)(_step_entry)
+_many_donated = functools.partial(
+    jax.jit, static_argnames=_STEP_STATICS, donate_argnums=(0,)
+)(_many_entry)
+_many_kept = functools.partial(jax.jit, static_argnames=_STEP_STATICS)(_many_entry)
+
+
 def schedule_step(
     state: SoAFleetState,
     req_res: jax.Array,          # (D,)
@@ -532,27 +813,29 @@ def schedule_step(
     req_domain: jax.Array,       # () int32; -1 = any
     now: jax.Array,              # () float
     price: jax.Array,            # () float
-    masks: jax.Array,            # (M, K)
     cost_kind: str = "period",
     period: float = BILL_PERIOD_S,
     use_pallas: bool = False,
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+    shortlist: Optional[int] = None,
+    donate: bool = True,
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, jax.Array, jax.Array, jax.Array]]:
     """Fused decide-and-apply on the persistent state (one dispatch/event).
 
-    Returns ``(state', (host_idx, slot, ok, kill))``.
+    Returns ``(state', (host_idx, slot, ok, kill))``.  With ``donate=True``
+    (default) the input state's buffers are reused for the output — the
+    caller must not touch ``state`` afterwards; pass ``donate=False`` to
+    keep the input alive (oracle comparisons, repeated benchmarks).
     """
-    return _step_core(
+    fn = _step_donated if donate else _step_kept
+    return fn(
         state, req_res, req_preemptible, req_domain,
-        jnp.asarray(now, jnp.float32), jnp.asarray(price, jnp.float32), masks,
-        cost_kind, period, use_pallas, weigher_multipliers,
+        jnp.asarray(now, jnp.float32), jnp.asarray(price, jnp.float32),
+        period, cost_kind=cost_kind, use_pallas=use_pallas,
+        weigher_multipliers=tuple(weigher_multipliers), shortlist=shortlist,
     )
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("cost_kind", "use_pallas", "weigher_multipliers"),
-)
 def schedule_many(
     state: SoAFleetState,
     req_res: jax.Array,          # (B, D)
@@ -560,34 +843,30 @@ def schedule_many(
     req_domain: jax.Array,       # (B,) int32; -1 = any
     req_now: jax.Array,          # (B,) float — each request's arrival time
     req_price: jax.Array,        # (B,) float
-    masks: jax.Array,            # (M, K)
     cost_kind: str = "period",
     period: float = BILL_PERIOD_S,
     use_pallas: bool = False,
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+    shortlist: Optional[int] = None,
+    donate: bool = True,
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, jax.Array, jax.Array, jax.Array]]:
     """Run a request batch through ``lax.scan`` carrying the fleet state, so
     each decision sees every earlier placement/termination in the batch —
     bit-identical to ``schedule_step`` in a loop, at one dispatch per batch.
 
     Returns ``(state', (host_idx (B,), slot (B,), ok (B,), kill (B, K)))``.
+    Donation semantics as in ``schedule_step``.
     """
-
-    def body(st, xs):
-        res, pre, dom, now, price = xs
-        return _step_core(
-            st, res, pre, dom, now, price, masks,
-            cost_kind, period, use_pallas, weigher_multipliers,
-        )
-
-    return jax.lax.scan(
-        body, state,
-        (req_res, req_preemptible, req_domain,
-         req_now.astype(jnp.float32), req_price.astype(jnp.float32)),
+    fn = _many_donated if donate else _many_kept
+    return fn(
+        state, req_res, req_preemptible, req_domain,
+        jnp.asarray(req_now, jnp.float32), jnp.asarray(req_price, jnp.float32),
+        period, cost_kind=cost_kind, use_pallas=use_pallas,
+        weigher_multipliers=tuple(weigher_multipliers), shortlist=shortlist,
     )
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0,))
 def apply_placement(
     state: SoAFleetState,
     host_idx: jax.Array,
@@ -628,11 +907,14 @@ def apply_placement(
         inst_price=state.inst_price.at[host_idx].set(
             jnp.where(onehot, jnp.asarray(price, jnp.float32), state.inst_price[host_idx])
         ),
+        inst_ckpt=state.inst_ckpt.at[host_idx].set(
+            jnp.where(onehot, jnp.asarray(now, jnp.float32), state.inst_ckpt[host_idx])
+        ),
     )
     return state, slot
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0,))
 def apply_termination(
     state: SoAFleetState,
     host_idx: jax.Array,
@@ -652,7 +934,7 @@ def apply_termination(
     )
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0,))
 def apply_departure(
     state: SoAFleetState,
     host_idx: jax.Array,
@@ -667,7 +949,25 @@ def apply_departure(
     )
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0,))
+def apply_checkpoint(
+    state: SoAFleetState,
+    host_idx: jax.Array,
+    slot: jax.Array,
+    now: jax.Array,
+) -> SoAFleetState:
+    """Record a durable checkpoint for the preemptible instance in ``slot``:
+    from ``now`` on, its recompute cost accrues from this anchor (the
+    device-resident counterpart of ``Instance.last_checkpoint``)."""
+    return dataclasses.replace(
+        state,
+        inst_ckpt=state.inst_ckpt.at[host_idx, slot].set(
+            jnp.asarray(now, jnp.float32)
+        ),
+    )
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
 def set_schedulable(
     state: SoAFleetState, host_idx: jax.Array, value: jax.Array
 ) -> SoAFleetState:
@@ -676,14 +976,14 @@ def set_schedulable(
     )
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0,))
 def set_slow_factor(
     state: SoAFleetState, host_idx: jax.Array, value: jax.Array
 ) -> SoAFleetState:
     return dataclasses.replace(state, slow=state.slow.at[host_idx].set(value))
 
 
-@jax.jit
+@functools.partial(jax.jit, donate_argnums=(0,))
 def apply_host_failure(
     state: SoAFleetState,
     host_idx: jax.Array,
@@ -725,12 +1025,13 @@ class JaxPreemptibleScheduler:
         k_slots: int = 8,
         use_pallas: bool = False,
         weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+        shortlist: Optional[int] = None,
     ):
         self.cost_fn = cost_fn or PeriodCost()
         self.k_slots = k_slots
         self.use_pallas = use_pallas
         self.weigher_multipliers = weigher_multipliers
-        self._masks = jnp.asarray(subset_masks(k_slots))
+        self.shortlist = shortlist
 
     # -- full pipeline from python objects ------------------------------------
     def schedule(
@@ -774,7 +1075,7 @@ class JaxPreemptibleScheduler:
             req_res,
             jnp.asarray(preemptible),
             jnp.asarray(domain, jnp.int32),
-            self._masks,
             use_pallas=self.use_pallas,
             weigher_multipliers=self.weigher_multipliers,
+            shortlist=self.shortlist,
         )

@@ -234,6 +234,7 @@ class SoASimulator:
         batch_max: int = 64,
         use_pallas: bool = False,
         weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+        shortlist: Optional[int] = None,
     ):
         self.fleet = (
             hosts
@@ -244,6 +245,7 @@ class SoASimulator:
                 k_slots=k_slots,
                 use_pallas=use_pallas,
                 weigher_multipliers=weigher_multipliers,
+                shortlist=shortlist,
             )
         )
         self.workload = workload

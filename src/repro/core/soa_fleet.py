@@ -18,12 +18,12 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from .cost import CostFunction, PeriodCost
 from .jax_scheduler import (
     SoAFleetState,
+    apply_checkpoint,
     apply_departure,
     apply_host_failure,
     apply_termination,
@@ -33,7 +33,6 @@ from .jax_scheduler import (
     schedule_step,
     set_schedulable,
     set_slow_factor,
-    subset_masks,
 )
 from .types import Host, Instance, Request, Resources
 
@@ -65,13 +64,16 @@ class SoAFleet:
         k_slots: int = 8,
         use_pallas: bool = False,
         weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
+        shortlist: Optional[int] = None,
     ):
         self.cost_fn = cost_fn or PeriodCost()
         self.cost_kind, self.period = jax_cost_params(self.cost_fn)
         self.k_slots = k_slots
         self.use_pallas = use_pallas
         self.weigher_multipliers = tuple(weigher_multipliers)
-        self.masks = jnp.asarray(subset_masks(k_slots))
+        #: stage-2 shortlist size (None = auto, 0 = full enumeration);
+        #: decisions are bit-identical either way (see jax_scheduler).
+        self.shortlist = shortlist
 
         self.names: List[str] = [h.name for h in hosts]
         self.index: Dict[str, int] = {n: i for i, n in enumerate(self.names)}
@@ -139,10 +141,11 @@ class SoAFleet:
         """One decide-and-apply step on the persistent state."""
         res, pre, dom = self._req_arrays(req)
         self.state, (host_idx, slot, ok, kill) = schedule_step(
-            self.state, res, pre, dom, now, price, self.masks,
+            self.state, res, pre, dom, now, price,
             cost_kind=self.cost_kind, period=self.period,
             use_pallas=self.use_pallas,
             weigher_multipliers=self.weigher_multipliers,
+            shortlist=self.shortlist,
         )
         return self._absorb(
             req, now, price, int(host_idx), int(slot), bool(ok), np.asarray(kill)
@@ -175,10 +178,11 @@ class SoAFleet:
             now[i] = t
             price[i] = p
         self.state, (host_idx, slot, ok, kill) = schedule_many(
-            self.state, res, pre, dom, now, price, self.masks,
+            self.state, res, pre, dom, now, price,
             cost_kind=self.cost_kind, period=self.period,
             use_pallas=self.use_pallas,
             weigher_multipliers=self.weigher_multipliers,
+            shortlist=self.shortlist,
         )
         host_idx, slot = np.asarray(host_idx), np.asarray(slot)
         ok, kill = np.asarray(ok), np.asarray(kill)
@@ -272,6 +276,18 @@ class SoAFleet:
                 n_norm += 1
         self.state = apply_host_failure(self.state, host_idx, normal_res)
         return n_pre, n_norm
+
+    def checkpoint(self, instance_id: str, now: float) -> bool:
+        """Record a durable checkpoint for a live preemptible instance (its
+        recompute cost restarts from ``now``).  Returns False when the
+        instance is gone or not preemptible — checkpoints are idempotent."""
+        loc = self.locator.get(instance_id)
+        if loc is None or loc[1] is None:
+            return False
+        host_idx, slot = loc
+        self.instances[instance_id].last_checkpoint = now
+        self.state = apply_checkpoint(self.state, host_idx, slot, now)
+        return True
 
     def heal_host(self, name: str) -> None:
         self.state = set_schedulable(self.state, self.index[name], True)

@@ -5,6 +5,6 @@ Each kernel ships three layers: the pallas_call implementation
 (ops.py), and the pure-jnp oracle (ref.py) used by the allclose sweeps in
 tests/test_kernels.py and tests/test_jax_scheduler.py.
 """
-from .ops import flash_attention, rmsnorm, sched_weigh
+from .ops import flash_attention, rmsnorm, sched_weigh, sched_weigh_gathered
 
-__all__ = ["flash_attention", "rmsnorm", "sched_weigh"]
+__all__ = ["flash_attention", "rmsnorm", "sched_weigh", "sched_weigh_gathered"]

@@ -1,6 +1,6 @@
 """Jit'd public wrappers for the Pallas kernels (the ``ops.py`` layer)."""
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
-from .sched_weigh import sched_weigh
+from .sched_weigh import sched_weigh, sched_weigh_gathered
 
-__all__ = ["flash_attention", "rmsnorm", "sched_weigh"]
+__all__ = ["flash_attention", "rmsnorm", "sched_weigh", "sched_weigh_gathered"]

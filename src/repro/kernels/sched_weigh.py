@@ -67,13 +67,13 @@ def _kernel(free_f_ref, inst_res_ref, inst_cost_ref, inst_valid_ref,
     feas_ref[...] = jnp.any(ok, axis=1)[:, None].astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
 def _sched_weigh_padded(free_f, inst_res, inst_cost, inst_valid, req, masks_t,
-                        interpret=True):
+                        interpret=True, tile=TILE_HOSTS):
     n, d = free_f.shape
     k = inst_cost.shape[1]
     m = masks_t.shape[1]
-    t = TILE_HOSTS
+    t = tile
     grid = (n // t,)
     kern = functools.partial(_kernel, ndim=d)
     out_shapes = (
@@ -105,17 +105,18 @@ def _sched_weigh_padded(free_f, inst_res, inst_cost, inst_valid, req, masks_t,
 
 
 def sched_weigh(free_f, inst_res, inst_cost, inst_valid, req_res, masks,
-                interpret=None):
+                interpret=None, tile=TILE_HOSTS):
     """Fused per-host best-plan terms.  Same contract as
     ``core.jax_scheduler.host_plan_terms`` → (best_cost, best_mask, feasible).
 
     ``masks``: (M, K) subset enumeration matrix (row 0 = empty set).
+    ``tile``: hosts per grid step (sublane-aligned multiple of 8).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     n, d = free_f.shape
     k = inst_cost.shape[1]
-    t = TILE_HOSTS
+    t = tile
     pad = (-n) % t
     if pad:
         neg = jnp.full((pad, d), -POS_INF, free_f.dtype)
@@ -131,5 +132,25 @@ def sched_weigh(free_f, inst_res, inst_cost, inst_valid, req_res, masks,
         jnp.asarray(req_res, jnp.float32).reshape(1, d),
         jnp.asarray(masks, jnp.float32).T,
         interpret=interpret,
+        tile=t,
     )
     return best_cost[:n, 0], best_mask[:n, 0], feas[:n, 0].astype(bool)
+
+
+def sched_weigh_gathered(free_f, inst_res, inst_cost, inst_valid, req_res,
+                         masks, interpret=None):
+    """Shortlist stage-2 entry point: the same fused enumeration over a
+    *gathered* candidate set — (M, K, D) slot rows for the top-M hosts the
+    O(N·K) screen surfaced — instead of the full fleet.
+
+    M is small (tens), so the tile shrinks to the padded candidate count
+    (sublane-aligned) and the whole enumeration is a single grid step; with
+    the default 128-host tile a 16-candidate shortlist would waste 7/8 of
+    the VMEM working set on padding.
+    """
+    m = free_f.shape[0]
+    tile = min(TILE_HOSTS, max(8, -(-m // 8) * 8))
+    return sched_weigh(
+        free_f, inst_res, inst_cost, inst_valid, req_res, masks,
+        interpret=interpret, tile=tile,
+    )

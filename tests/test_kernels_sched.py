@@ -1,0 +1,91 @@
+"""Interpret-mode validation of the ``sched_weigh`` Pallas kernel against the
+pure-jnp oracle (``host_plan_terms``), swept over slot counts K∈{4,10,12},
+host counts that are NOT multiples of the 128-host tile, and the gathered
+shortlist entry point.
+
+Inputs are integer-valued (the paper's workload regime) so f32 arithmetic is
+exact and every comparison can be strict.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.jax_scheduler import host_plan_terms, subset_masks
+from repro.kernels.sched_weigh import sched_weigh, sched_weigh_gathered
+
+
+def _rand_soa(rng, n, k, d=3):
+    """Random integer-valued SoA arrays: free space, padded slot rows, costs
+    in whole minutes (all exactly representable in f32)."""
+    free_f = rng.integers(0, 9, (n, d)).astype(np.float32)
+    inst_res = rng.integers(1, 5, (n, k, d)).astype(np.float32)
+    inst_valid = rng.random((n, k)) < 0.7
+    inst_cost = (rng.integers(0, 60, (n, k)) * 60).astype(np.float32)
+    req = rng.integers(2, 14, (d,)).astype(np.float32)
+    return free_f, inst_res, inst_cost, inst_valid, req
+
+
+@pytest.mark.parametrize("k", [4, 10, 12])
+@pytest.mark.parametrize("n", [1, 37, 100, 130])
+def test_sched_weigh_matches_oracle(k, n):
+    if k == 12 and n > 100:
+        n = 100  # keep the 4096-mask interpret sweep quick
+    rng = np.random.default_rng(k * 1000 + n)
+    free_f, inst_res, inst_cost, inst_valid, req = _rand_soa(rng, n, k)
+    masks = subset_masks(k)
+
+    ref_cost, ref_mask, ref_feas = host_plan_terms(
+        free_f, inst_res, inst_cost, inst_valid, req, masks
+    )
+    k_cost, k_mask, k_feas = sched_weigh(
+        free_f, inst_res, inst_cost, inst_valid, req, masks, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(ref_feas), np.asarray(k_feas))
+    np.testing.assert_array_equal(np.asarray(ref_mask), np.asarray(k_mask))
+    feas = np.asarray(ref_feas)
+    np.testing.assert_array_equal(
+        np.asarray(k_cost)[feas], np.asarray(ref_cost)[feas]
+    )
+
+
+@pytest.mark.parametrize("k", [4, 10])
+@pytest.mark.parametrize("m", [1, 5, 16, 33])
+def test_gathered_entry_matches_oracle(k, m):
+    """The shortlist entry point (small gathered candidate sets, sub-128
+    tiles) must agree with the oracle exactly, like the full-fleet path."""
+    rng = np.random.default_rng(k * 100 + m)
+    free_f, inst_res, inst_cost, inst_valid, req = _rand_soa(rng, 200, k)
+    cand = rng.choice(200, size=m, replace=False)
+    masks = subset_masks(k)
+
+    ref = host_plan_terms(
+        free_f[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
+        req, masks,
+    )
+    got = sched_weigh_gathered(
+        free_f[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
+        req, masks, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(ref[2]), np.asarray(got[2]))
+    np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(got[1]))
+    feas = np.asarray(ref[2])
+    np.testing.assert_array_equal(
+        np.asarray(got[0])[feas], np.asarray(ref[0])[feas]
+    )
+
+
+def test_all_slots_invalid_host():
+    """Hosts with zero valid slots are feasible iff the request fits as-is."""
+    k = 4
+    free_f = np.array([[4.0, 4.0, 4.0], [1.0, 1.0, 1.0]], np.float32)
+    inst_res = np.zeros((2, k, 3), np.float32)
+    inst_cost = np.zeros((2, k), np.float32)
+    inst_valid = np.zeros((2, k), bool)
+    req = np.array([2.0, 2.0, 2.0], np.float32)
+    masks = subset_masks(k)
+    cost, mask, feas = sched_weigh(
+        free_f, inst_res, inst_cost, inst_valid, req, masks, interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(feas), [True, False])
+    assert float(cost[0]) == 0.0 and int(mask[0]) == 0

@@ -11,10 +11,12 @@ arithmetic is exact and equality can be strict.
 """
 from __future__ import annotations
 
+import jax.numpy as jnp
+import jax.tree_util
 import numpy as np
 import pytest
 
-from repro.core.cost import PeriodCost, RevenueCost
+from repro.core.cost import PeriodCost, RecomputeCost, RevenueCost
 from repro.core.jax_scheduler import (
     build_fleet_state,
     schedule_many,
@@ -45,7 +47,7 @@ def _assert_states_equal(state, oracle, msg=""):
             np.asarray(getattr(oracle, field)),
             err_msg=f"{msg}: {field}",
         )
-    for field in ("inst_start", "inst_price"):
+    for field in ("inst_start", "inst_price", "inst_ckpt"):
         np.testing.assert_array_equal(
             np.asarray(getattr(state, field)) * valid,
             np.asarray(getattr(oracle, field)) * valid,
@@ -88,7 +90,8 @@ class _PyMirror:
 
 
 @pytest.mark.parametrize(
-    "seed,cost_fn", [(0, PeriodCost()), (1, PeriodCost()), (2, RevenueCost())]
+    "seed,cost_fn",
+    [(0, PeriodCost()), (1, PeriodCost()), (2, RevenueCost()), (3, RecomputeCost())],
 )
 def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
     """≥1k randomized events; after every event the arrays must equal the
@@ -104,7 +107,7 @@ def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
     for step in range(n_events):
         now += float(rng.integers(1, 90))
         roll = rng.random()
-        if roll < 0.70:  # -------------------------------------------- arrival
+        if roll < 0.65:  # -------------------------------------------- arrival
             req = Request(
                 id=f"r{step}",
                 resources=SIZES[int(rng.integers(3))],
@@ -119,7 +122,7 @@ def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
             )
             res, pre, dom = fleet._req_arrays(req)
             _, (oh, oslot, ook, okill) = schedule_step(
-                oracle, res, pre, dom, now, price, fleet.masks,
+                oracle, res, pre, dom, now, price,
                 cost_kind=fleet.cost_kind, period=fleet.period,
             )
             # victims the oracle decision implies, read from the slot map
@@ -137,12 +140,20 @@ def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
                 assert {v.id for v in out.victims} == expect_victims, f"event {step}"
                 py.apply(out)
                 live_departable.append(out.instance.id)
-        elif roll < 0.90 and live_departable:  # -------------------- departure
+        elif roll < 0.85 and live_departable:  # -------------------- departure
             iid = live_departable.pop(int(rng.integers(len(live_departable))))
             was_live = fleet.depart(iid)
             if was_live:
                 host = py.by_name[fleet_host_of(py, iid)]
                 host.remove(iid)
+        elif roll < 0.90:  # ------------------------------------- checkpoint
+            pre_ids = [
+                iid for iid, (_, slot) in fleet.locator.items() if slot is not None
+            ]
+            if pre_ids:
+                iid = pre_ids[int(rng.integers(len(pre_ids)))]
+                assert fleet.checkpoint(iid, now)
+                py.by_name[fleet_host_of(py, iid)].instances[iid].last_checkpoint = now
         elif roll < 0.95:  # -------------------------------------- fail / heal
             name = f"h{rng.integers(n_hosts)}"
             host = py.by_name[name]
@@ -193,18 +204,20 @@ def test_schedule_many_bit_identical_to_sequential_steps():
     now = np.cumsum(rng.integers(1, 60, size=b)).astype(np.float32)
     price = np.ones((b,), np.float32)
 
-    state_seq = fleet.state
+    # schedule_step donates its input state, so run the sequential chain on
+    # an independent deep copy and keep fleet.state for the scan.
+    state_seq = jax.tree_util.tree_map(jnp.array, fleet.state)
     outs = []
     for i in range(b):
         state_seq, o = schedule_step(
             state_seq, res[i], bool(pre[i]), dom[i], float(now[i]),
-            float(price[i]), fleet.masks,
+            float(price[i]),
             cost_kind=fleet.cost_kind, period=fleet.period,
         )
         outs.append([np.asarray(x) for x in o])
 
     state_scan, (h, s, ok, kill) = schedule_many(
-        fleet.state, res, pre, dom, now, price, fleet.masks,
+        fleet.state, res, pre, dom, now, price,
         cost_kind=fleet.cost_kind, period=fleet.period,
     )
     np.testing.assert_array_equal(np.asarray(h), [o[0] for o in outs])
