@@ -57,7 +57,7 @@ def _bench_incremental(n_hosts: int) -> None:
                 continue  # mirrors the python scheduler rows
 
             def call():
-                _, (h, _, ok, _) = schedule_step(
+                _, (h, *_rest) = schedule_step(
                     fleet.state, req_vec, pre, -1, NOW, 1.0,
                     cost_kind=fleet.cost_kind, period=fleet.period,
                     donate=False,
@@ -104,7 +104,15 @@ def _packed_state(n: int, k: int, seed: int = 0):
 
 def _bench_k_sweep() -> None:
     """K × shortlist grid.  ``shortlist=0`` = single-stage full enumeration
-    (the pre-shortlist baseline); ``shortlist=64`` = the two-stage pipeline."""
+    (the pre-shortlist baseline); ``shortlist=64`` = the two-stage pipeline.
+
+    The ``fused`` column runs the same two-stage decision with stage 1 in
+    the fused Pallas screen kernel.  On TPU backends that is the production
+    fast path (one HBM pass + on-chip top-M); on CPU the kernel only exists
+    as an interpreter emulation, so the fused rows run at small N (tiny
+    mode) to keep the entrypoint exercised — their latency measures the
+    interpreter, not the kernel."""
+    on_tpu = jax.default_backend() == "tpu"
     if TINY:
         grid = [(k, 512, (0, 64)) for k in (4, 8, 10, 12)]
         repeats = 3
@@ -119,17 +127,22 @@ def _bench_k_sweep() -> None:
     for k, n, shortlists in grid:
         state, req_vec = _packed_state(n, k)
         for m in shortlists:
-            def call():
-                _, (h, _, ok, _) = schedule_step(
-                    state, req_vec, False, -1, NOW, 1.0,
-                    cost_kind="period", shortlist=m, donate=False,
-                )
-                jax.block_until_ready(h)
+            fused_cols = ((False, ""),)
+            if m and (on_tpu or n <= 2048):
+                fused_cols = ((False, ""), (True, "_fused"))
+            for fused, suffix in fused_cols:
+                def call():
+                    _, (h, *_rest) = schedule_step(
+                        state, req_vec, False, -1, NOW, 1.0,
+                        cost_kind="period", shortlist=m,
+                        fused_screen=fused, donate=False,
+                    )
+                    jax.block_until_ready(h)
 
-            t = time_call(call, repeats=repeats, warmup=2)
-            tag = f"shortlist{m}" if m else "full"
-            emit(f"fig2_ksweep_k{k}_n{n}_{tag}", t.mean_us,
-                 f"std={t.std_us:.1f};masks={1 << k}", p50_us=t.p50_us)
+                t = time_call(call, repeats=repeats, warmup=2)
+                tag = (f"shortlist{m}" if m else "full") + suffix
+                emit(f"fig2_ksweep_k{k}_n{n}_{tag}", t.mean_us,
+                     f"std={t.std_us:.1f};masks={1 << k}", p50_us=t.p50_us)
 
 
 def run() -> None:

@@ -1,0 +1,145 @@
+"""Stage-1 screen microbenchmark: the O(N·K) per-decision work in isolation.
+
+Rows (emitted to BENCH_screen.json via the common REPRO_BENCH_OUT sink):
+
+  * ``screen_slot_costs_*``   — the per-slot termination-cost derivation
+                                (the floor-mod fast path; fmod was ~30x
+                                slower on XLA CPU and dominated the whole
+                                decision before PR 3);
+  * ``screen_terms_*``        — the shared bounds math (Batcher-network
+                                sorted-prefix feasibility + cost bounds);
+  * ``screen_stage1_*``       — the full jnp stage-1: slot costs + screen +
+                                weigher normalization + omega_ub + top_k(65)
+                                (what the fused Pallas kernel replaces);
+  * ``screen_fused_*``        — the fused Pallas kernel.  Compiled on TPU
+                                backends; in interpret mode (CPU) it is an
+                                emulation — those rows validate the
+                                entrypoint and record interpreter overhead,
+                                NOT kernel speed, and only run at small N.
+
+K sweeps {4, 8, 12} on the packed oversubscribed fleet geometry from
+``bench_fig2_latency`` so the sorted-prefix bounds do real work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.jax_scheduler import screen_terms, slot_costs
+from repro.core.screen_math import (
+    base_from_consts,
+    consts_of,
+    inv_span,
+    omega_of,
+    raw_base_terms,
+)
+
+from .bench_fig2_latency import _packed_state
+from .common import NOW, TINY, emit, time_call, write_bench_json
+
+MULT = (1.0, 1.0, 0.0, 0.0)
+M_KEEP = 65
+
+
+@functools.partial(jax.jit, static_argnames=("m_keep",))
+def _stage1_jnp(state, req_res, m_keep):
+    """The full jnp stage-1 assembly (mirrors ``_decision_core``: top_k(M)
+    + masked argmax witness — top_k must stay ≤ 64 for XLA CPU's TopK
+    custom-call; beyond that it silently becomes a full fleet sort)."""
+    inst_cost = slot_costs(
+        "period", state.inst_start, state.inst_price, NOW, 3600.0,
+        inst_ckpt=state.inst_ckpt, inst_res=state.inst_res,
+    )
+    fits = jnp.all(state.free_n >= req_res[None, :] - 1e-6, axis=-1)
+    fits &= state.schedulable
+    feas, over, lb, ub = screen_terms(
+        state.free_f, state.inst_res, inst_cost, state.inst_valid, req_res
+    )
+    valid = fits & feas
+    raw = raw_base_terms(jnp.sum(state.free_f, axis=-1), state.slow, over)
+    consts = consts_of(MULT, valid, lb, ub, *raw)
+    base = base_from_consts(MULT, *raw, consts)
+    omega_ub = omega_of(
+        lb, base, valid, consts, inv_span(consts.c_lo, consts.c_hi), MULT[1]
+    )
+    _, cand = jax.lax.top_k(omega_ub, m_keep - 1)
+    in_short = jnp.zeros(omega_ub.shape, bool).at[cand].set(True)
+    out_ub = jnp.where(in_short, -1e30, omega_ub)
+    return cand, jnp.max(out_ub), jnp.argmax(out_ub)
+
+
+def _fused(state, req_res, m_keep, interpret):
+    from repro.kernels.sched_screen import sched_screen
+
+    inst_cost = slot_costs(
+        "period", state.inst_start, state.inst_price, NOW, 3600.0,
+        inst_ckpt=state.inst_ckpt, inst_res=state.inst_res,
+    )
+    return sched_screen(
+        state.free_f, state.free_n, state.schedulable, state.domain,
+        state.slow, state.inst_res, inst_cost, state.inst_valid,
+        req_res, jnp.asarray(False), jnp.asarray(-1, jnp.int32),
+        weigher_multipliers=MULT, require_free_slot=True,
+        m_keep=m_keep, interpret=interpret,
+    )
+
+
+def run() -> None:
+    on_tpu = jax.default_backend() == "tpu"
+    n = 512 if TINY else 65536
+    repeats = 3 if TINY else 10
+    for k in (4, 8, 12):
+        state, req_vec = _packed_state(n, k)
+        req = jnp.asarray(req_vec)
+
+        costs_j = jax.jit(
+            lambda st: slot_costs(
+                "period", st.inst_start, st.inst_price, NOW, 3600.0,
+                inst_ckpt=st.inst_ckpt, inst_res=st.inst_res,
+            )
+        )
+        t = time_call(
+            lambda: jax.block_until_ready(costs_j(state)), repeats=repeats
+        )
+        emit(f"screen_slot_costs_k{k}_n{n}", t.mean_us,
+             f"std={t.std_us:.1f}", p50_us=t.p50_us)
+
+        inst_cost = costs_j(state)
+        screen_j = jax.jit(screen_terms)
+        t = time_call(
+            lambda: jax.block_until_ready(screen_j(
+                state.free_f, state.inst_res, inst_cost, state.inst_valid, req
+            )),
+            repeats=repeats,
+        )
+        emit(f"screen_terms_k{k}_n{n}", t.mean_us,
+             f"std={t.std_us:.1f}", p50_us=t.p50_us)
+
+        m_keep = min(M_KEEP, n)
+        t = time_call(
+            lambda: jax.block_until_ready(_stage1_jnp(state, req, m_keep)),
+            repeats=repeats,
+        )
+        emit(f"screen_stage1_k{k}_n{n}", t.mean_us,
+             f"std={t.std_us:.1f};m_keep={m_keep}", p50_us=t.p50_us)
+
+        # Fused kernel: real speed on TPU; interpreter-overhead smoke on CPU
+        # (small N only — emulating 2×N/128 grid steps at 10^5 hosts tells
+        # you nothing about the kernel and takes minutes).
+        if on_tpu or n <= 2048:
+            t = time_call(
+                lambda: jax.block_until_ready(
+                    _fused(state, req, m_keep, interpret=not on_tpu)
+                ),
+                repeats=repeats,
+            )
+            mode = "tpu" if on_tpu else "interpret"
+            emit(f"screen_fused_k{k}_n{n}_{mode}", t.mean_us,
+                 f"std={t.std_us:.1f};m_keep={m_keep}", p50_us=t.p50_us)
+    write_bench_json("screen")
+
+
+if __name__ == "__main__":
+    run()

@@ -10,6 +10,7 @@ def main() -> None:
         bench_fig2_latency,
         bench_jax_vs_python,
         bench_roofline,
+        bench_screen,
         bench_sim_utilization,
         bench_tables,
     )
@@ -17,6 +18,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     bench_tables.run()            # paper Tables 3-6 (correctness + latency)
     bench_fig2_latency.run()      # paper Fig. 2 (3 schedulers x scenarios)
+    bench_screen.run()            # stage-1 screen microbenchmark (PR 3)
     bench_jax_vs_python.run()     # beyond-paper vectorized scheduler
     bench_sim_utilization.run()   # backfill utilization (paper motivation)
     bench_roofline.run()          # dry-run roofline table (deliverable g)

@@ -15,6 +15,16 @@ jit-compiled array program over struct-of-arrays host state, organized as a
                                  Alg. 5 subset enumeration + exact weighing
                                  on the shortlist only.
 
+Stage 1 itself has two executions sharing ONE definition of the bounds math
+(``core.screen_math``): the pure-jnp assembly below (the oracle, and the CPU
+default), and the fused Pallas kernel ``repro.kernels.sched_screen`` that
+computes every screen term per 128-host tile and keeps the running top-M
+resident on chip, emitting only the (M+1,) shortlist + 8 normalization
+scalars — one pass over the fleet instead of a dozen HBM round-trips
+(``fused_screen``: None = auto, on for TPU backends, interpret-capable
+elsewhere; pinned bit-exact against the jnp screen by
+tests/test_sched_screen.py).
+
 Only the argmax host's termination plan is ever applied, so pruning is
 *exact*: an admissibility check compares the winner's exact score against the
 optimistic bound of every non-shortlisted host and falls back to the full
@@ -76,6 +86,23 @@ from .cost import (
     RecomputeCost,
     RevenueCost,
 )
+from .screen_math import (
+    EPS,
+    NEG_INF,
+    POS_INF,
+    TIE_EPS,
+    ScreenConsts,
+    base_from_consts,
+    consts_of,
+    floor_mod,
+    inv_span,
+    omega_of,
+    oem_pairs as _oem_pairs,  # noqa: F401  (back-compat re-export)
+    raw_base_terms,
+    screen_bounds_rows,
+    sort_rows as _net_sort_cols,  # noqa: F401  (back-compat re-export)
+    total_rows,
+)
 from .types import (
     EMPTY_PLAN,
     Host,
@@ -84,9 +111,6 @@ from .types import (
     ScheduleResult,
     TerminationPlan,
 )
-
-NEG_INF = -1e30
-POS_INF = 1e30
 
 #: Default stage-2 shortlist size when ``shortlist=None`` (auto).  Fleets not
 #: meaningfully larger than this keep the single-stage full enumeration.
@@ -243,7 +267,7 @@ def host_plan_terms(
     mT = masks.T                                                     # (K,M)
     ok = None
     for d in range(res.shape[-1]):
-        cond = free_f[:, d][:, None] + res[:, :, d] @ mT >= req_res[d] - 1e-6
+        cond = free_f[:, d][:, None] + res[:, :, d] @ mT >= req_res[d] - EPS
         ok = cond if ok is None else (ok & cond)                     # (N,M)
     # Subsets touching an invalid slot are excluded via +inf cost.
     sub_cost = jnp.where(ok, cost @ mT, POS_INF)                     # (N,M)
@@ -251,41 +275,11 @@ def host_plan_terms(
     # (matches the python reference).  Two-stage to stay exact in f32.
     best_cost = jnp.min(sub_cost, axis=-1)                           # (N,)
     size = masks.sum(-1)                                             # (M,)
-    is_tie = sub_cost <= best_cost[:, None] + 1e-3
+    is_tie = sub_cost <= best_cost[:, None] + TIE_EPS
     size_key = jnp.where(is_tie, size[None, :], POS_INF)
     best_mask = jnp.argmin(size_key, axis=-1).astype(jnp.int32)      # (N,)
     feasible = jnp.any(ok, axis=-1)
     return best_cost, best_mask, feasible
-
-
-@functools.lru_cache(maxsize=None)
-def _oem_pairs(n: int) -> Tuple[Tuple[int, int], ...]:
-    """Compare-exchange pairs of Batcher's odd-even mergesort for n lanes."""
-    pairs = []
-    p = 1
-    while p < n:
-        k = p
-        while k >= 1:
-            for j in range(k % p, n - k, 2 * k):
-                for i in range(min(k, n - j - k)):
-                    if (i + j) // (2 * p) == (i + j + k) // (2 * p):
-                        pairs.append((i + j, i + j + k))
-            k //= 2
-        p *= 2
-    return tuple(pairs)
-
-
-def _net_sort_cols(cols: List[jax.Array], descending: bool = False) -> List[jax.Array]:
-    """Sort K column arrays elementwise with a Batcher network: O(K log² K)
-    fused min/max stages.  XLA CPU's generic ``sort`` is ~10x slower on these
-    short (K ≤ 16) rows at fleet-scale N, and the screen must stay O(N·K)
-    cheap for the shortlist pipeline to pay off."""
-    cols = list(cols)
-    for i, j in _oem_pairs(len(cols)):
-        lo = jnp.minimum(cols[i], cols[j])
-        hi = jnp.maximum(cols[i], cols[j])
-        cols[i], cols[j] = (hi, lo) if descending else (lo, hi)
-    return cols
 
 
 def screen_terms(
@@ -297,53 +291,28 @@ def screen_terms(
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Stage-1 per-host screening terms, O(N·K) — no subset enumeration.
 
-    Returns ``(feasible, overcommitted, cost_lb, cost_ub)``:
-      feasible      (N,) EXACT Alg. 5 feasibility: the full valid-slot subset
-                    frees the per-dim maximum, so ``free_f + Σ res ≥ req``
-                    decides feasibility of *some* subset;
-      overcommitted (N,) the request does not fit ``free_f`` as-is;
-      cost_lb       (N,) lower bound on the optimal termination cost: any
-                    feasible subset needs ≥ m* slots (per-dim sorted-resource
-                    prefix argument), and slot costs are non-negative, so it
-                    pays at least the m* cheapest slot costs;
-      cost_ub       (N,) upper bound: cost of evacuating every valid slot
-                    (a feasible plan whenever any plan is).
-    Hosts that fit directly have ``cost_lb == cost_ub == 0`` (exact).
+    Thin row-major adapter over ``screen_math.screen_bounds_rows`` (ONE
+    shared definition with the fused Pallas screen): slices the (N, K, ...)
+    slot arrays into slot-major rows so the Batcher compare-exchange network
+    runs on contiguous host-vectors, which is also ~15% faster on XLA CPU
+    than the previous host-major column slices.
+
+    Returns ``(feasible, overcommitted, cost_lb, cost_ub)``, all (N,) —
+    see ``screen_bounds_rows`` for the exact semantics of each term.
     """
     k = inst_res.shape[1]
-    res = jnp.where(inst_valid[..., None], inst_res, 0.0)            # (N,K,D)
-    costv = jnp.where(inst_valid, inst_cost, POS_INF)                # (N,K)
-    need = req_res[None, :] - free_f                                 # (N,D)
-    feasible = jnp.all(jnp.sum(res, axis=1) >= need - 1e-6, axis=-1)
-    overcommitted = jnp.any(need > 1e-6, axis=-1)
-    # Fewest slots that could cover dim d: descending per-dim resource prefix
-    # sums (any m-subset frees at most the top-m sum on every dim).  Each dim
-    # sorts independently — the bound only needs per-dim maxima coverage.
-    res_desc = _net_sort_cols([res[:, i, :] for i in range(k)], descending=True)
-    lacking = jnp.zeros(need.shape, jnp.int32)                       # (N,D)
-    prefix = jnp.zeros_like(need)
-    for col in res_desc:
-        prefix = prefix + col
-        lacking = lacking + (prefix < need - 1e-6).astype(jnp.int32)
-    m_d = jnp.where(need > 1e-6, lacking + 1, 0)                     # (N,D)
-    m_star = jnp.minimum(jnp.max(m_d, axis=-1), k)                   # (N,)
-    cost_asc = _net_sort_cols([costv[:, i] for i in range(k)])
-    cpre = [jnp.zeros_like(cost_asc[0])]
-    for col in cost_asc:
-        cpre.append(cpre[-1] + col)
-    lb = jnp.take_along_axis(jnp.stack(cpre, axis=1), m_star[:, None], axis=1)[:, 0]
-    cost_lb = jnp.where(overcommitted, lb, 0.0)
-    total = jnp.sum(jnp.where(inst_valid, inst_cost, 0.0), axis=1)
-    cost_ub = jnp.where(overcommitted, total, 0.0)
-    return feasible, overcommitted, cost_lb, cost_ub
-
-
-def _normalize(w: jax.Array, valid: jax.Array) -> jax.Array:
-    """OpenStack weight normalization over the valid candidate set."""
-    lo = jnp.min(jnp.where(valid, w, POS_INF))
-    hi = jnp.max(jnp.where(valid, w, NEG_INF))
-    span = hi - lo
-    return jnp.where(span > 1e-12, (w - lo) / jnp.where(span > 1e-12, span, 1.0), 0.0)
+    need = (req_res[None, :] - free_f).T                             # (D,N)
+    res_rows = [
+        jnp.where(inst_valid[:, i, None], inst_res[:, i, :], 0.0).T
+        for i in range(k)
+    ]
+    cost_rows = [
+        jnp.where(inst_valid[:, i], inst_cost[:, i], POS_INF) for i in range(k)
+    ]
+    total = total_rows(
+        [jnp.where(inst_valid[:, i], inst_cost[:, i], 0.0) for i in range(k)]
+    )
+    return screen_bounds_rows(need, res_rows, cost_rows, total)
 
 
 def _plan_terms(use_pallas: bool, gathered: bool = False):
@@ -372,7 +341,8 @@ def _decision_core(
     weigher_multipliers: Tuple[float, float, float, float],
     require_free_slot: bool,
     shortlist: Optional[int],
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    fused_screen: Optional[bool],
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """The two-stage decision pipeline on raw SoA arrays (shared by the
     rebuild path, the persistent fast path, and the batched ``lax.scan``
     path).
@@ -382,90 +352,149 @@ def _decision_core(
     value yields decisions bit-identical to the full enumeration — when the
     admissibility check cannot certify the shortlist, the full path runs via
     ``lax.cond``.
+
+    ``fused_screen``: run stage 1 through the fused Pallas kernel
+    (``repro.kernels.sched_screen``) instead of the jnp assembly.  ``None``
+    = auto (on for TPU backends, where it collapses the screen's HBM
+    round-trips into one pass; off elsewhere — the kernel stays available in
+    interpret mode for parity testing).  Both screens execute the shared
+    ``screen_math`` definitions, so the decision is identical either way.
+
+    Returns ``(host_idx, term_mask_idx, ok, fell_back, margin)``:
+    ``fell_back`` flags decisions where the admissibility check could not
+    certify the shortlist and the full enumeration ran; ``margin`` is the
+    admissibility headroom ``best_val - u`` (POS_INF when no valid host or
+    pruning was off) — the signals the adaptive shortlist controller
+    (``soa_fleet.AdaptiveShortlist``) steers M with.
     """
     n_hosts, k = inst_res.shape[0], inst_res.shape[1]
     masks = _masks_const(k)
     if shortlist is None:
         shortlist = DEFAULT_SHORTLIST if n_hosts > 4 * DEFAULT_SHORTLIST else 0
     m_cand = min(int(shortlist), n_hosts)
-    m_over, m_term, m_pack, m_strag = weigher_multipliers
+    if fused_screen is None:
+        fused_screen = jax.default_backend() == "tpu"
+    mult = weigher_multipliers
+    m_term = mult[1]
 
-    # ---- phase 1: dual-view filtering (the paper's trick) -------------------
-    view = jnp.where(req_preemptible, free_f, free_n)                # (N,D)
-    fits = jnp.all(view >= req_res[None, :] - 1e-6, axis=-1)
-    fits &= schedulable
-    fits &= (req_domain < 0) | (domain == req_domain)
-    if require_free_slot:
-        # Persistent state carries K slots per host: a preemptible request
-        # needs an empty slot (the rebuild path instead raises on overflow).
-        fits &= jnp.where(req_preemptible, jnp.any(~inst_valid, axis=-1), True)
+    def fits_of(free_f, free_n, schedulable, domain, inst_valid):
+        """Dual-view filtering (the paper's trick) — row-major layout."""
+        view = jnp.where(req_preemptible, free_f, free_n)
+        fits = jnp.all(view >= req_res[None, :] - EPS, axis=-1)
+        fits &= schedulable
+        fits &= (req_domain < 0) | (domain == req_domain)
+        if require_free_slot:
+            # Persistent state carries K slots per host: a preemptible
+            # request needs an empty slot (the rebuild path raises on
+            # overflow instead).
+            fits &= jnp.where(
+                req_preemptible, jnp.any(~inst_valid, axis=-1), True
+            )
+        return fits
 
-    # ---- stage 1: O(N·K) screen ---------------------------------------------
-    any_feasible, overcommitted, cost_lb, cost_ub = screen_terms(
-        free_f, inst_res, inst_cost, inst_valid, req_res
-    )
-    # Preemptible requests never terminate others: zero cost everywhere.
-    cost_lb = jnp.where(req_preemptible, 0.0, cost_lb)
-    cost_ub = jnp.where(req_preemptible, 0.0, cost_ub)
-    feasible = jnp.where(req_preemptible, fits, any_feasible)
-    valid = fits & feasible
-
-    # Weigher terms that need no enumeration, summed in a fixed order shared
-    # by every path (bit-exact shortlist parity requires identical float ops).
-    base = jnp.zeros(n_hosts)
-    if m_over:
-        base = base + m_over * _normalize(jnp.where(overcommitted, -1.0, 0.0), valid)
-    if m_pack:
-        base = base + m_pack * _normalize(-free_f.sum(-1), valid)
-    if m_strag:
-        base = base + m_strag * _normalize(-slow, valid)
-
-    # The termination-cost weigher is normalized with *bound-derived*
-    # constants (min/max of the stage-1 cost envelope over the valid set)
-    # instead of the enumerated costs' min/max: same [0,1]-ish scaling, but
-    # computable in O(N·K) — which is what lets stage 2 skip the enumeration
-    # for every non-shortlisted host while staying bit-exact.
-    c_lo = jnp.min(jnp.where(valid, cost_lb, POS_INF))
-    c_hi = jnp.max(jnp.where(valid, cost_ub, NEG_INF))
-    span = c_hi - c_lo
-    good_span = span > 1e-12
-    inv_span = jnp.where(good_span, 1.0 / jnp.where(good_span, span, 1.0), 0.0)
-
-    def omega_of(best_cost: jax.Array, base_terms: jax.Array, valid_mask: jax.Array):
-        w = base_terms
-        if m_term:
-            w = w + m_term * ((c_hi - jnp.minimum(best_cost, POS_INF)) * inv_span)
-        return jnp.where(valid_mask, w, NEG_INF)
-
-    plan_terms = _plan_terms(use_pallas)
+    def stage1_of(free_f, free_n, schedulable, domain, slow, inst_res,
+                  inst_cost, inst_valid):
+        """Stage-1 screen assembly on row-major arrays — used for the full
+        fleet (jnp screen / fallback) and for gathered candidate rows (the
+        fused path's per-candidate recompute).  Same shared math as the
+        kernel, so the outputs agree elementwise."""
+        fits = fits_of(free_f, free_n, schedulable, domain, inst_valid)
+        feas, overcommitted, cost_lb, cost_ub = screen_terms(
+            free_f, inst_res, inst_cost, inst_valid, req_res
+        )
+        # Preemptible requests never terminate others: zero cost everywhere.
+        cost_lb = jnp.where(req_preemptible, 0.0, cost_lb)
+        cost_ub = jnp.where(req_preemptible, 0.0, cost_ub)
+        feas = jnp.where(req_preemptible, fits, feas)
+        valid = fits & feas
+        raw = raw_base_terms(jnp.sum(free_f, axis=-1), slow, overcommitted)
+        return valid, cost_lb, cost_ub, raw
 
     def full_decision(_):
-        """Single-stage path: exact enumeration over every host."""
-        best_cost, best_mask, _ = plan_terms(
+        """Single-stage path: exact enumeration over every host.  Fully
+        self-contained (the fused screen never materializes fleet-wide
+        terms, so the fallback recomputes stage 1 with the same shared math
+        — bit-identical to the ``shortlist=0`` result either way)."""
+        valid, cost_lb, cost_ub, raw = stage1_of(
+            free_f, free_n, schedulable, domain, slow,
+            inst_res, inst_cost, inst_valid,
+        )
+        consts = consts_of(mult, valid, cost_lb, cost_ub, *raw)
+        base = base_from_consts(mult, *raw, consts)
+        ispan = inv_span(consts.c_lo, consts.c_hi)
+        best_cost, best_mask, _ = _plan_terms(use_pallas)(
             free_f, inst_res, inst_cost, inst_valid, req_res, masks
         )
         best_cost = jnp.where(req_preemptible, 0.0, best_cost)
         best_mask = jnp.where(req_preemptible, 0, best_mask)
-        omega = omega_of(best_cost, base, valid)
+        omega = omega_of(best_cost, base, valid, consts, ispan, m_term)
         host_idx = jnp.argmax(omega).astype(jnp.int32)
         return host_idx, best_mask[host_idx], omega[host_idx] > NEG_INF / 2
 
     if m_cand <= 0 or m_cand >= n_hosts:
-        return full_decision(None)
+        h, bm, ok = full_decision(None)
+        return h, bm, ok, jnp.asarray(False), jnp.float32(POS_INF)
 
-    # ---- stage 2: top-M shortlist, exact enumeration on the gather ----------
+    # ---- stage 1: O(N·K) screen → top-M candidates + (u, j_u) witness -------
     # omega_ub ≥ omega at float level: cost_lb ≤ best_cost and every op in
     # omega_of is monotone (shared constants, shared add order).
-    opt_cost = cost_lb if m_term >= 0 else cost_ub
-    omega_ub = omega_of(opt_cost, base, valid)
-    _, cand = jax.lax.top_k(omega_ub, m_cand)                        # ties → low idx
+    if fused_screen:
+        # One fused pass over the fleet; only the (M+1,) shortlist and the 8
+        # normalization scalars come back.  Entry M is the best omega_ub
+        # outside the shortlist with lax.top_k tie ordering — the (u, j_u)
+        # admissibility witness.
+        from repro.kernels.sched_screen import sched_screen
+
+        top_s, top_i, consts_arr = sched_screen(
+            free_f, free_n, schedulable, domain, slow,
+            inst_res, inst_cost, inst_valid,
+            req_res, req_preemptible, req_domain,
+            weigher_multipliers=mult,
+            require_free_slot=require_free_slot,
+            m_keep=m_cand + 1,
+        )
+        consts = ScreenConsts.unpack(consts_arr)
+        cand = top_i[:m_cand]
+        u, j_u = top_s[m_cand], top_i[m_cand]
+        # Per-candidate base/valid recomputed on the gathered rows from the
+        # kernel's constants — elementwise identical to the fleet-wide jnp
+        # values (min/max folds are reassociation-free).
+        valid_c, _, _, raw_c = stage1_of(
+            free_f[cand], free_n[cand], schedulable[cand], domain[cand],
+            slow[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
+        )
+        base_c = base_from_consts(mult, *raw_c, consts)
+    else:
+        valid, cost_lb, cost_ub, raw = stage1_of(
+            free_f, free_n, schedulable, domain, slow,
+            inst_res, inst_cost, inst_valid,
+        )
+        consts = consts_of(mult, valid, cost_lb, cost_ub, *raw)
+        base = base_from_consts(mult, *raw, consts)
+        ispan_ub = inv_span(consts.c_lo, consts.c_hi)
+        opt_cost = cost_lb if m_term >= 0 else cost_ub
+        omega_ub = omega_of(opt_cost, base, valid, consts, ispan_ub, m_term)
+        # NOTE: top_k(M) + a masked argmax for the (u, j_u) witness, NOT the
+        # seemingly cleaner top_k(M+1) whose entry M is the same witness:
+        # XLA CPU only rewrites top_k into its fast TopK custom-call for
+        # k ≤ 64, so with the default M=64 the +1 falls off a cliff into a
+        # full stable sort of all N hosts (~22 ms at N=65536 — measured).
+        _, cand = jax.lax.top_k(omega_ub, m_cand)                # ties → low idx
+        in_short = jnp.zeros((n_hosts,), bool).at[cand].set(True)
+        out_ub = jnp.where(in_short, NEG_INF, omega_ub)
+        u = jnp.max(out_ub)
+        j_u = jnp.argmax(out_ub).astype(jnp.int32)
+        valid_c, base_c = valid[cand], base[cand]
+
+    # ---- stage 2: exact enumeration on the gathered shortlist ---------------
+    ispan = inv_span(consts.c_lo, consts.c_hi)
     bc_s, bm_s, _ = _plan_terms(use_pallas, gathered=True)(
         free_f[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
         req_res, masks,
     )
     bc_s = jnp.where(req_preemptible, 0.0, bc_s)
     bm_s = jnp.where(req_preemptible, 0, bm_s)
-    omega_s = omega_of(bc_s, base[cand], valid[cand])                # (M,)
+    omega_s = omega_of(bc_s, base_c, valid_c, consts, ispan, m_term)  # (M,)
     best_val = jnp.max(omega_s)
     # Winner = lowest ORIGINAL index among exact-score ties (what the full
     # path's argmax-first-hit does over the whole fleet).
@@ -475,14 +504,10 @@ def _decision_core(
     ok_s = best_val > NEG_INF / 2
 
     # ---- admissibility: can any non-shortlisted host still win? -------------
-    in_short = jnp.zeros((n_hosts,), bool).at[cand].set(True)
-    out_ub = jnp.where(in_short, NEG_INF, omega_ub)
-    u = jnp.max(out_ub)
-    j_u = jnp.argmax(out_ub).astype(jnp.int32)
     # An outside host beats w* only with omega > best_val, or omega == best_val
     # and a lower index; its omega_ub caps both.  ~ok_s ⇒ no valid host exists
-    # anywhere (top_k would have surfaced one), so the shortlist result (host
-    # 0, ok=False) already matches the full path.
+    # anywhere (the top-M would have surfaced one), so the shortlist result
+    # (host 0, ok=False) already matches the full path.
     #
     # With integer-valued costs (the paper regime; all sums are exact in f32)
     # ``cost_lb ≤ best_cost`` holds bitwise and ``u < best_val`` is already
@@ -492,24 +517,28 @@ def _decision_core(
     # fast path for mass-tied fleets (see module docstring for the residual
     # ulp-tie caveat on non-integer inputs).
     if m_term:
-        tol = abs(m_term) * inv_span * (3.0 * k * 1.2e-7) * jnp.maximum(
-            jnp.abs(c_hi), jnp.abs(c_lo)
+        tol = abs(m_term) * ispan * (3.0 * k * 1.2e-7) * jnp.maximum(
+            jnp.abs(consts.c_hi), jnp.abs(consts.c_lo)
         )
     else:
         tol = 0.0
     admissible = (u < best_val - tol) | ((u == best_val) & (j_u > w_star)) | ~ok_s
+    margin = jnp.where(ok_s, best_val - u, jnp.float32(POS_INF))
 
-    return jax.lax.cond(
+    h, bm, ok = jax.lax.cond(
         admissible,
         lambda _: (w_star, bm_s[winner_pos], ok_s),
         full_decision,
         operand=None,
     )
+    return h, bm, ok, ~admissible, margin
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("use_pallas", "weigher_multipliers", "shortlist"),
+    static_argnames=(
+        "use_pallas", "weigher_multipliers", "shortlist", "fused_screen"
+    ),
 )
 def schedule_decision(
     state: SoAHostState,
@@ -519,21 +548,24 @@ def schedule_decision(
     use_pallas: bool = False,
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
     shortlist: Optional[int] = None,
+    fused_screen: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One scheduling decision.  Returns (host_idx, term_mask_idx, ok).
 
     ``weigher_multipliers`` = (overcommit, termination_cost, packing,
     straggler) — the first two reproduce the paper's evaluation policy.
-    ``shortlist`` = stage-2 candidate count (None = auto, 0 = off); any
-    setting returns the same decision (see ``_decision_core``).
+    ``shortlist`` = stage-2 candidate count (None = auto, 0 = off);
+    ``fused_screen`` = stage-1 backend (None = auto: fused Pallas screen on
+    TPU, jnp elsewhere); any setting returns the same decision (see
+    ``_decision_core``).
     """
     return _decision_core(
         state.free_f, state.free_n, state.schedulable, state.domain,
         state.slow, state.inst_res, state.inst_cost, state.inst_valid,
         req_res, req_preemptible, req_domain,
         use_pallas, weigher_multipliers, require_free_slot=False,
-        shortlist=shortlist,
-    )
+        shortlist=shortlist, fused_screen=fused_screen,
+    )[:3]
 
 
 # ---------------------------------------------------------------------------
@@ -613,13 +645,19 @@ def slot_costs(
     inst_res: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Per-slot termination cost at time ``now`` (invalid slots are masked
-    downstream, so garbage values on them are harmless)."""
+    downstream, so garbage values on them are harmless).
+
+    The period kinds use ``screen_math.floor_mod`` instead of ``%``: XLA
+    CPU's fmod was the single most expensive op of the whole decision at
+    10^5 hosts (~19 ms at N=65536·K=8 vs ~0.6 ms for the floor form, which
+    is bit-identical on the integer-second workloads every parity test
+    runs — see ``floor_mod`` for the boundary-correction argument)."""
     if cost_kind == "period":
-        return (now - inst_start) % period
+        return floor_mod(now - inst_start, period)
     if cost_kind == "count":
         return jnp.ones_like(inst_start)
     if cost_kind == "revenue":
-        return ((now - inst_start) % period) / period * inst_price
+        return floor_mod(now - inst_start, period) / period * inst_price
     if cost_kind == "recompute":
         # Chip-seconds of work lost since the last durable checkpoint
         # (== core.cost.RecomputeCost; dim 0 is chips/vcpus by convention).
@@ -750,44 +788,50 @@ def _step_core(
     state: SoAFleetState,
     req_res, req_preemptible, req_domain, now, price,
     cost_kind, period, use_pallas, weigher_multipliers, shortlist,
+    fused_screen,
 ):
     inst_cost = slot_costs(
         cost_kind, state.inst_start, state.inst_price, now, period,
         inst_ckpt=state.inst_ckpt, inst_res=state.inst_res,
     )
-    host_idx, mask_idx, ok = _decision_core(
+    host_idx, mask_idx, ok, fell_back, margin = _decision_core(
         state.free_f, state.free_n, state.schedulable, state.domain,
         state.slow, state.inst_res, inst_cost, state.inst_valid,
         req_res, req_preemptible, req_domain,
         use_pallas, weigher_multipliers, require_free_slot=True,
-        shortlist=shortlist,
+        shortlist=shortlist, fused_screen=fused_screen,
     )
     state, slot, kill = _apply_decision(
         state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price
     )
-    return state, (host_idx, slot, ok, kill)
+    return state, (host_idx, slot, ok, kill, fell_back, margin)
 
 
-_STEP_STATICS = ("cost_kind", "use_pallas", "weigher_multipliers", "shortlist")
+_STEP_STATICS = (
+    "cost_kind", "use_pallas", "weigher_multipliers", "shortlist",
+    "fused_screen",
+)
 
 
 def _step_entry(state, req_res, req_preemptible, req_domain, now, price,
                 period, *, cost_kind, use_pallas, weigher_multipliers,
-                shortlist):
+                shortlist, fused_screen):
     return _step_core(
         state, req_res, req_preemptible, req_domain, now, price,
         cost_kind, period, use_pallas, weigher_multipliers, shortlist,
+        fused_screen,
     )
 
 
 def _many_entry(state, req_res, req_preemptible, req_domain, req_now,
                 req_price, period, *, cost_kind, use_pallas,
-                weigher_multipliers, shortlist):
+                weigher_multipliers, shortlist, fused_screen):
     def body(st, xs):
         res, pre, dom, now, price = xs
         return _step_core(
             st, res, pre, dom, now, price,
             cost_kind, period, use_pallas, weigher_multipliers, shortlist,
+            fused_screen,
         )
 
     return jax.lax.scan(
@@ -818,14 +862,17 @@ def schedule_step(
     use_pallas: bool = False,
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
     shortlist: Optional[int] = None,
+    fused_screen: Optional[bool] = None,
     donate: bool = True,
-) -> Tuple[SoAFleetState, Tuple[jax.Array, jax.Array, jax.Array, jax.Array]]:
+) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Fused decide-and-apply on the persistent state (one dispatch/event).
 
-    Returns ``(state', (host_idx, slot, ok, kill))``.  With ``donate=True``
-    (default) the input state's buffers are reused for the output — the
-    caller must not touch ``state`` afterwards; pass ``donate=False`` to
-    keep the input alive (oracle comparisons, repeated benchmarks).
+    Returns ``(state', (host_idx, slot, ok, kill, fell_back, margin))`` —
+    the last two are the shortlist-health signals (see ``_decision_core``)
+    the adaptive controller consumes.  With ``donate=True`` (default) the
+    input state's buffers are reused for the output — the caller must not
+    touch ``state`` afterwards; pass ``donate=False`` to keep the input
+    alive (oracle comparisons, repeated benchmarks).
     """
     fn = _step_donated if donate else _step_kept
     return fn(
@@ -833,6 +880,7 @@ def schedule_step(
         jnp.asarray(now, jnp.float32), jnp.asarray(price, jnp.float32),
         period, cost_kind=cost_kind, use_pallas=use_pallas,
         weigher_multipliers=tuple(weigher_multipliers), shortlist=shortlist,
+        fused_screen=fused_screen,
     )
 
 
@@ -848,13 +896,17 @@ def schedule_many(
     use_pallas: bool = False,
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
     shortlist: Optional[int] = None,
+    fused_screen: Optional[bool] = None,
     donate: bool = True,
-) -> Tuple[SoAFleetState, Tuple[jax.Array, jax.Array, jax.Array, jax.Array]]:
+) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Run a request batch through ``lax.scan`` carrying the fleet state, so
     each decision sees every earlier placement/termination in the batch —
     bit-identical to ``schedule_step`` in a loop, at one dispatch per batch.
 
-    Returns ``(state', (host_idx (B,), slot (B,), ok (B,), kill (B, K)))``.
+    Returns ``(state', (host_idx (B,), slot (B,), ok (B,), kill (B, K),
+    fell_back (B,), margin (B,)))``.  ``fell_back.sum()`` is the batch's
+    admissibility-fallback counter and ``margin`` the per-decision headroom
+    — the signals the adaptive shortlist controller steers M with.
     Donation semantics as in ``schedule_step``.
     """
     fn = _many_donated if donate else _many_kept
@@ -863,6 +915,7 @@ def schedule_many(
         jnp.asarray(req_now, jnp.float32), jnp.asarray(req_price, jnp.float32),
         period, cost_kind=cost_kind, use_pallas=use_pallas,
         weigher_multipliers=tuple(weigher_multipliers), shortlist=shortlist,
+        fused_screen=fused_screen,
     )
 
 
@@ -1026,12 +1079,14 @@ class JaxPreemptibleScheduler:
         use_pallas: bool = False,
         weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
         shortlist: Optional[int] = None,
+        fused_screen: Optional[bool] = None,
     ):
         self.cost_fn = cost_fn or PeriodCost()
         self.k_slots = k_slots
         self.use_pallas = use_pallas
         self.weigher_multipliers = weigher_multipliers
         self.shortlist = shortlist
+        self.fused_screen = fused_screen
 
     # -- full pipeline from python objects ------------------------------------
     def schedule(
@@ -1078,4 +1133,5 @@ class JaxPreemptibleScheduler:
             use_pallas=self.use_pallas,
             weigher_multipliers=self.weigher_multipliers,
             shortlist=self.shortlist,
+            fused_screen=self.fused_screen,
         )

@@ -1,0 +1,274 @@
+"""Shared stage-1 screen/bounds math — ONE definition for both screens.
+
+The O(N·K) stage-1 screen exists in two executions: the pure-jnp oracle
+(``jax_scheduler.screen_terms`` + the weigher assembly in ``_decision_core``)
+and the fused Pallas kernel (``repro.kernels.sched_screen``), which runs the
+same math per 128-host tile with a running top-M shortlist kept in VMEM.
+Shortlist decisions are only bit-exact when the two agree on every float op,
+so the bounds math lives here once and both callers execute *these*
+functions — the kernel on slot-major ``(K, D, T)`` tiles, the oracle on the
+whole fleet.
+
+Layout convention: *slot-major rows*.  Per-slot data is a python list of K
+arrays whose trailing axis is the host axis (``res_rows[i]`` is ``(D, X)``,
+``cost_rows[i]`` is ``(X,)`` for X hosts).  The Batcher compare-exchange
+network then works on whole host-vectors per step — contiguous lanes on TPU
+(the VPU's native orientation) and contiguous memory on CPU, where the
+previous host-major ``(N, K)`` column slices strided badly.
+
+Exactness: with integer-valued resources/costs (the paper regime and every
+parity test) all sums here are exact in f32, so sorted-prefix bounds hold
+bitwise and both screens produce identical arrays.  With arbitrary float
+inputs the two executions still agree on CPU (same HLO ops); on TPU the
+admissibility fallback absorbs reassociation-ulp differences (see
+``jax_scheduler`` module docstring).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+POS_INF = 1e30
+#: resource-comparison slack (integer-valued resources make it inert).
+EPS = 1e-6
+#: degenerate-span guard for the [0, 1] weight normalizations.
+NORM_EPS = 1e-12
+#: Termination-cost tie-break epsilon of the Alg. 5 enumeration: subsets
+#: whose cost is within TIE_EPS of the optimum count as tied and resolve by
+#: (fewer instances, lower mask index).  ONE constant shared by the Pallas
+#: ``sched_weigh`` kernel and the jnp oracle (``host_plan_terms``) — a
+#: drifted epsilon would let the two paths break ties differently (pinned by
+#: tests/test_kernels_sched.py::test_tie_epsilon_*).  Defined here (the only
+#: module both layers can import without a cycle) and re-exported by
+#: ``repro.kernels.ops``, the kernels' public surface.
+TIE_EPS = 1e-3
+
+
+@functools.lru_cache(maxsize=None)
+def oem_pairs(n: int) -> Tuple[Tuple[int, int], ...]:
+    """Compare-exchange pairs of Batcher's odd-even mergesort for n lanes."""
+    pairs = []
+    p = 1
+    while p < n:
+        k = p
+        while k >= 1:
+            for j in range(k % p, n - k, 2 * k):
+                for i in range(min(k, n - j - k)):
+                    if (i + j) // (2 * p) == (i + j + k) // (2 * p):
+                        pairs.append((i + j, i + j + k))
+            k //= 2
+        p *= 2
+    return tuple(pairs)
+
+
+def sort_rows(rows: Sequence[jax.Array], descending: bool = False) -> List[jax.Array]:
+    """Sort K row arrays elementwise with a Batcher network: O(K log² K)
+    fused min/max stages.  XLA CPU's generic ``sort`` is ~10x slower on these
+    short (K ≤ 16) rows at fleet-scale N, and Mosaic has no sort at all —
+    the same static network serves both."""
+    rows = list(rows)
+    for i, j in oem_pairs(len(rows)):
+        lo = jnp.minimum(rows[i], rows[j])
+        hi = jnp.maximum(rows[i], rows[j])
+        rows[i], rows[j] = (hi, lo) if descending else (lo, hi)
+    return rows
+
+
+def total_rows(rows: Sequence[jax.Array]) -> jax.Array:
+    """Sequential sum of row arrays — one canonical add order for both
+    screens (``jnp.sum`` over a stacked axis may reassociate)."""
+    tot = rows[0]
+    for row in rows[1:]:
+        tot = tot + row
+    return tot
+
+
+def screen_bounds_rows(
+    need: jax.Array,                    # (D, X) req - free_f, host-trailing
+    res_rows: Sequence[jax.Array],      # K × (D, X), invalid slots zeroed
+    cost_rows: Sequence[jax.Array],     # K × (X,), invalid slots +POS_INF
+    total_cost: jax.Array,              # (X,) Σ valid slot costs
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Stage-1 per-host screening terms, O(X·K) — no subset enumeration.
+
+    Returns ``(feasible, overcommitted, cost_lb, cost_ub)`` (all (X,)):
+      feasible      EXACT Alg. 5 feasibility: the full valid-slot subset
+                    frees the per-dim maximum, so the descending prefix's
+                    final sum ≥ need decides feasibility of *some* subset;
+      overcommitted the request does not fit ``free_f`` as-is;
+      cost_lb       lower bound on the optimal termination cost: any
+                    feasible subset needs ≥ m* slots (per-dim sorted-resource
+                    prefix argument), and slot costs are non-negative, so it
+                    pays at least the m* cheapest slot costs;
+      cost_ub       upper bound: cost of evacuating every valid slot
+                    (a feasible plan whenever any plan is).
+    Hosts that fit directly have ``cost_lb == cost_ub == 0`` (exact).
+    """
+    k = len(res_rows)
+    # Fewest slots that could cover dim d: descending per-dim resource prefix
+    # sums (any m-subset frees at most the top-m sum on every dim).  Each dim
+    # sorts independently — the bound only needs per-dim maxima coverage.
+    res_desc = sort_rows(res_rows, descending=True)
+    lacking = jnp.zeros(need.shape, jnp.int32)
+    prefix = jnp.zeros_like(need)
+    for row in res_desc:
+        prefix = prefix + row
+        lacking = lacking + (prefix < need - EPS).astype(jnp.int32)
+    # The full descending prefix is the total freed by evacuating everything,
+    # so exact feasibility falls out of the same pass.
+    feasible = jnp.all(prefix >= need - EPS, axis=0)
+    overcommitted = jnp.any(need > EPS, axis=0)
+    m_d = jnp.where(need > EPS, lacking + 1, 0)
+    m_star = jnp.minimum(jnp.max(m_d, axis=0), k)                    # (X,)
+    cost_asc = sort_rows(cost_rows)
+    lb = jnp.zeros_like(cost_asc[0])
+    for i, row in enumerate(cost_asc):
+        lb = lb + jnp.where(i < m_star, row, 0.0)
+    cost_lb = jnp.where(overcommitted, lb, 0.0)
+    cost_ub = jnp.where(overcommitted, total_cost, 0.0)
+    return feasible, overcommitted, cost_lb, cost_ub
+
+
+# ---------------------------------------------------------------------------
+# Weigher normalization: bound-derived constants shared by every path
+# ---------------------------------------------------------------------------
+
+
+class ScreenConsts(NamedTuple):
+    """Global normalization constants of one decision (all f32 scalars).
+
+    ``c_lo``/``c_hi`` bracket the termination-cost envelope over the valid
+    set; the three ``*_lo``/``*_hi`` pairs are the min/max of the raw
+    overcommit / packing / straggler weigher terms.  Terms whose multiplier
+    is 0 keep the fold identities (+inf, -inf) — both screens gate
+    identically on the static multipliers."""
+
+    c_lo: jax.Array
+    c_hi: jax.Array
+    over_lo: jax.Array
+    over_hi: jax.Array
+    pack_lo: jax.Array
+    pack_hi: jax.Array
+    strag_lo: jax.Array
+    strag_hi: jax.Array
+
+    def pack(self) -> jax.Array:
+        return jnp.stack(list(self))
+
+    @classmethod
+    def unpack(cls, arr: jax.Array) -> "ScreenConsts":
+        return cls(*(arr[i] for i in range(8)))
+
+
+def raw_base_terms(
+    free_f_sum: jax.Array, slow: jax.Array, overcommitted: jax.Array
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Raw (pre-normalization) enumeration-free weigher terms.
+
+    ``free_f_sum`` is the per-host sum of free_f over resource dims (callers
+    reduce their own layout); returns (over_raw, pack_raw, strag_raw)."""
+    over_raw = jnp.where(overcommitted, -1.0, 0.0)
+    return over_raw, -free_f_sum, -slow
+
+
+def consts_of(
+    multipliers: Tuple[float, float, float, float],
+    valid: jax.Array,
+    cost_lb: jax.Array,
+    cost_ub: jax.Array,
+    over_raw: jax.Array,
+    pack_raw: jax.Array,
+    strag_raw: jax.Array,
+) -> ScreenConsts:
+    """Fold the per-host terms into ``ScreenConsts`` (pure-jnp reduction;
+    the Pallas screen folds the same min/maxes tile-by-tile into SMEM —
+    min/max are reassociation-free, so the two agree bitwise)."""
+    m_over, _, m_pack, m_strag = multipliers
+    pos = jnp.float32(POS_INF)
+    neg = jnp.float32(NEG_INF)
+
+    def fold(w, on):
+        if not on:
+            return pos, neg
+        return (
+            jnp.min(jnp.where(valid, w, POS_INF)),
+            jnp.max(jnp.where(valid, w, NEG_INF)),
+        )
+
+    c_lo = jnp.min(jnp.where(valid, cost_lb, POS_INF))
+    c_hi = jnp.max(jnp.where(valid, cost_ub, NEG_INF))
+    over_lo, over_hi = fold(over_raw, m_over)
+    pack_lo, pack_hi = fold(pack_raw, m_pack)
+    strag_lo, strag_hi = fold(strag_raw, m_strag)
+    return ScreenConsts(c_lo, c_hi, over_lo, over_hi, pack_lo, pack_hi,
+                        strag_lo, strag_hi)
+
+
+def norm01(w: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
+    """OpenStack weight normalization against fixed global constants."""
+    span = hi - lo
+    return jnp.where(
+        span > NORM_EPS, (w - lo) / jnp.where(span > NORM_EPS, span, 1.0), 0.0
+    )
+
+
+def inv_span(c_lo: jax.Array, c_hi: jax.Array) -> jax.Array:
+    """1/(c_hi - c_lo) with the degenerate-span guard (0 disables the term)."""
+    span = c_hi - c_lo
+    good = span > NORM_EPS
+    return jnp.where(good, 1.0 / jnp.where(good, span, 1.0), 0.0)
+
+
+def base_from_consts(
+    multipliers: Tuple[float, float, float, float],
+    over_raw: jax.Array,
+    pack_raw: jax.Array,
+    strag_raw: jax.Array,
+    consts: ScreenConsts,
+) -> jax.Array:
+    """Enumeration-free weigher terms, summed in the ONE fixed order every
+    path shares (bit-exact parity requires identical float ops)."""
+    m_over, _, m_pack, m_strag = multipliers
+    base = jnp.zeros_like(over_raw)
+    if m_over:
+        base = base + m_over * norm01(over_raw, consts.over_lo, consts.over_hi)
+    if m_pack:
+        base = base + m_pack * norm01(pack_raw, consts.pack_lo, consts.pack_hi)
+    if m_strag:
+        base = base + m_strag * norm01(strag_raw, consts.strag_lo, consts.strag_hi)
+    return base
+
+
+def omega_of(
+    best_cost: jax.Array,
+    base: jax.Array,
+    valid: jax.Array,
+    consts: ScreenConsts,
+    ispan: jax.Array,
+    m_term: float,
+) -> jax.Array:
+    """Total weigher score: base terms + the termination-cost weigher
+    normalized with the *bound-derived* constants (not the enumerated costs'
+    min/max) — computable in O(N·K), which is what lets stage 2 skip the
+    enumeration for every non-shortlisted host while staying bit-exact."""
+    w = base
+    if m_term:
+        w = w + m_term * ((consts.c_hi - jnp.minimum(best_cost, POS_INF)) * ispan)
+    return jnp.where(valid, w, NEG_INF)
+
+
+def floor_mod(x: jax.Array, period) -> jax.Array:
+    """``x % period`` for non-negative x via floor — an order of magnitude
+    faster than ``lax.rem``'s fmod on XLA CPU, where fmod was one of the
+    biggest single terms of the whole decision at 10^5 hosts.  The rounding
+    of ``x * (1/p)`` can put ``floor`` off by one exactly at period
+    boundaries; the correction step folds the result back into [0, p),
+    after which it matches fmod bitwise whenever x and p are exactly
+    representable (the integer-second regime — all parity tests) and to
+    1 ulp otherwise."""
+    r = x - jnp.floor(x * (1.0 / period)) * period
+    return jnp.where(r < 0, r + period, jnp.where(r >= period, r - period, r))

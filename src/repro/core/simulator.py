@@ -235,6 +235,8 @@ class SoASimulator:
         use_pallas: bool = False,
         weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
         shortlist: Optional[int] = None,
+        fused_screen: Optional[bool] = None,
+        adaptive_shortlist: bool = False,
     ):
         self.fleet = (
             hosts
@@ -246,6 +248,8 @@ class SoASimulator:
                 use_pallas=use_pallas,
                 weigher_multipliers=weigher_multipliers,
                 shortlist=shortlist,
+                fused_screen=fused_screen,
+                adaptive_shortlist=adaptive_shortlist,
             )
         )
         self.workload = workload

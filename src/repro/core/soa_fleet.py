@@ -22,6 +22,7 @@ import numpy as np
 
 from .cost import CostFunction, PeriodCost
 from .jax_scheduler import (
+    DEFAULT_SHORTLIST,
     SoAFleetState,
     apply_checkpoint,
     apply_departure,
@@ -38,6 +39,69 @@ from .types import Host, Instance, Request, Resources
 
 #: Padding sentinel for batched scheduling: a request no host can fit.
 _PAD_RES = 1e30
+
+
+@dataclasses.dataclass
+class AdaptiveShortlist:
+    """Host-side shortlist-size controller over the jit'd decision paths.
+
+    The stage-2 shortlist size M is a compile-time constant of the decision
+    executables, so the controller adapts *between* calls on the python side
+    using the health signals every step/batch already returns
+    (``fell_back``, ``margin`` — see ``jax_scheduler.schedule_many``):
+
+      * grow (×2 up to ``m_max``) after ``grow_after`` consecutive flushes
+        that contained an admissibility fallback — the shortlist was too
+        small to certify its winner and the decision paid the full O(N·2^K)
+        enumeration;
+      * shrink (÷2 down to ``m_min``) after ``shrink_after`` consecutive
+        fallback-free flushes whose smallest admissibility margin stayed
+        above ``wide_margin`` (weigher-score units; the default multipliers
+        put one weigher term in [0, 1], so 0.25 is "a quarter of a term of
+        headroom beyond every non-shortlisted bound").
+
+    M stays a power of two in [m_min, m_max], so the jit cache holds at most
+    log2(m_max/m_min)+1 decision executables per request shape.
+
+    CPU caveat: XLA CPU rewrites ``lax.top_k`` to its fast TopK custom-call
+    only for k ≤ 64, so on CPU backends growing past M=64 adds a full fleet
+    sort (~22 ms at N=65536) on top of the larger stage 2 — the growth path
+    really pays off on TPU (fused screen) or when fallbacks are burning far
+    more than the sort.
+    """
+
+    m: int = DEFAULT_SHORTLIST
+    m_min: int = 16
+    m_max: int = 256
+    grow_after: int = 2
+    shrink_after: int = 8
+    wide_margin: float = 0.25
+    #: counters (exposed via ``SoAFleet.shortlist_stats``)
+    grows: int = 0
+    shrinks: int = 0
+    _fallback_streak: int = dataclasses.field(default=0, repr=False)
+    _calm_streak: int = dataclasses.field(default=0, repr=False)
+
+    def update(self, n_fallbacks: int, min_margin: float) -> None:
+        """Fold one flush's signals; possibly step M."""
+        if n_fallbacks > 0:
+            self._fallback_streak += 1
+            self._calm_streak = 0
+            if self._fallback_streak >= self.grow_after and self.m < self.m_max:
+                self.m = min(self.m * 2, self.m_max)
+                self.grows += 1
+                self._fallback_streak = 0
+        else:
+            self._fallback_streak = 0
+            self._calm_streak += 1
+            if (
+                self._calm_streak >= self.shrink_after
+                and min_margin > self.wide_margin
+                and self.m > self.m_min
+            ):
+                self.m = max(self.m // 2, self.m_min)
+                self.shrinks += 1
+                self._calm_streak = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +129,8 @@ class SoAFleet:
         use_pallas: bool = False,
         weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
         shortlist: Optional[int] = None,
+        fused_screen: Optional[bool] = None,
+        adaptive_shortlist: bool = False,
     ):
         self.cost_fn = cost_fn or PeriodCost()
         self.cost_kind, self.period = jax_cost_params(self.cost_fn)
@@ -74,6 +140,24 @@ class SoAFleet:
         #: stage-2 shortlist size (None = auto, 0 = full enumeration);
         #: decisions are bit-identical either way (see jax_scheduler).
         self.shortlist = shortlist
+        #: stage-1 screen backend (None = auto: fused Pallas kernel on TPU).
+        self.fused_screen = fused_screen
+        #: optional host-side controller steering M between flushes.
+        if adaptive_shortlist and shortlist == 0:
+            raise ValueError(
+                "adaptive_shortlist=True contradicts shortlist=0 (explicit "
+                "full enumeration); pass shortlist=None or a starting M"
+            )
+        self.adaptive: Optional[AdaptiveShortlist] = (
+            AdaptiveShortlist(
+                m=DEFAULT_SHORTLIST if shortlist is None else shortlist
+            )
+            if adaptive_shortlist
+            else None
+        )
+        #: admissibility-fallback totals (every flush, adaptive or not)
+        self.decisions = 0
+        self.fallbacks = 0
 
         self.names: List[str] = [h.name for h in hosts]
         self.index: Dict[str, int] = {n: i for i, n in enumerate(self.names)}
@@ -135,18 +219,51 @@ class SoAFleet:
             np.int32(dom),
         )
 
+    @property
+    def effective_shortlist(self) -> Optional[int]:
+        """The M the next flush will use (controller-steered when adaptive)."""
+        return self.adaptive.m if self.adaptive is not None else self.shortlist
+
+    @property
+    def shortlist_stats(self) -> Dict[str, int]:
+        """Shortlist-health counters: decisions seen, admissibility
+        fallbacks paid, and the adaptive controller's moves (0s when the
+        controller is off).  ``shortlist`` is the M decisions actually run
+        with — ``shortlist=None`` resolves to the same auto value the
+        decision core uses (M=64 at fleet scale, 0 = full enumeration on
+        small fleets)."""
+        a = self.adaptive
+        m = self.effective_shortlist
+        if m is None:  # mirror _decision_core's auto rule
+            m = DEFAULT_SHORTLIST if self.n_hosts > 4 * DEFAULT_SHORTLIST else 0
+        return {
+            "decisions": self.decisions,
+            "fallbacks": self.fallbacks,
+            "shortlist": m,
+            "grows": a.grows if a else 0,
+            "shrinks": a.shrinks if a else 0,
+        }
+
+    def _observe(self, n_fallbacks: int, min_margin: float, n_decisions: int):
+        self.decisions += n_decisions
+        self.fallbacks += n_fallbacks
+        if self.adaptive is not None:
+            self.adaptive.update(n_fallbacks, min_margin)
+
     def schedule_request(
         self, req: Request, now: float, price: float = 1.0
     ) -> SoAOutcome:
         """One decide-and-apply step on the persistent state."""
         res, pre, dom = self._req_arrays(req)
-        self.state, (host_idx, slot, ok, kill) = schedule_step(
+        self.state, (host_idx, slot, ok, kill, fell_back, margin) = schedule_step(
             self.state, res, pre, dom, now, price,
             cost_kind=self.cost_kind, period=self.period,
             use_pallas=self.use_pallas,
             weigher_multipliers=self.weigher_multipliers,
-            shortlist=self.shortlist,
+            shortlist=self.effective_shortlist,
+            fused_screen=self.fused_screen,
         )
+        self._observe(int(fell_back), float(margin), 1)
         return self._absorb(
             req, now, price, int(host_idx), int(slot), bool(ok), np.asarray(kill)
         )
@@ -177,15 +294,21 @@ class SoAFleet:
             res[i], pre[i], dom[i] = self._req_arrays(req)
             now[i] = t
             price[i] = p
-        self.state, (host_idx, slot, ok, kill) = schedule_many(
+        self.state, (host_idx, slot, ok, kill, fell_back, margin) = schedule_many(
             self.state, res, pre, dom, now, price,
             cost_kind=self.cost_kind, period=self.period,
             use_pallas=self.use_pallas,
             weigher_multipliers=self.weigher_multipliers,
-            shortlist=self.shortlist,
+            shortlist=self.effective_shortlist,
+            fused_screen=self.fused_screen,
         )
         host_idx, slot = np.asarray(host_idx), np.asarray(slot)
         ok, kill = np.asarray(ok), np.asarray(kill)
+        # Health signals from the REAL rows only (padding sentinels can
+        # neither fall back nor tighten the margin, but stay out anyway).
+        fb = np.asarray(fell_back)[:b]
+        mg = np.asarray(margin)[:b]
+        self._observe(int(fb.sum()), float(mg.min()), b)
         return [
             self._absorb(
                 req, t, p, int(host_idx[i]), int(slot[i]), bool(ok[i]), kill[i]

@@ -2,9 +2,24 @@
 
 Each kernel ships three layers: the pallas_call implementation
 (<name>.py with explicit BlockSpec VMEM tiling), the jit'd public wrapper
-(ops.py), and the pure-jnp oracle (ref.py) used by the allclose sweeps in
-tests/test_kernels.py and tests/test_jax_scheduler.py.
+(ops.py), and the pure-jnp oracle (ref.py / repro.core.screen_math) used by
+the parity sweeps in tests/test_kernels.py, tests/test_kernels_sched.py and
+tests/test_sched_screen.py.
 """
-from .ops import flash_attention, rmsnorm, sched_weigh, sched_weigh_gathered
+from .ops import (
+    TIE_EPS,
+    flash_attention,
+    rmsnorm,
+    sched_screen,
+    sched_weigh,
+    sched_weigh_gathered,
+)
 
-__all__ = ["flash_attention", "rmsnorm", "sched_weigh", "sched_weigh_gathered"]
+__all__ = [
+    "TIE_EPS",
+    "flash_attention",
+    "rmsnorm",
+    "sched_screen",
+    "sched_weigh",
+    "sched_weigh_gathered",
+]

@@ -1,6 +1,22 @@
-"""Jit'd public wrappers for the Pallas kernels (the ``ops.py`` layer)."""
+"""Jit'd public wrappers for the Pallas kernels (the ``ops.py`` layer).
+
+``TIE_EPS`` (the enumeration tie-break epsilon shared by ``sched_weigh``
+and the jnp oracle) is *defined* in ``repro.core.screen_math`` — the one
+dependency-free module both the kernel and scheduler layers import — and
+re-exported here as part of the kernels' public surface.
+"""
+from repro.core.screen_math import TIE_EPS
+
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
+from .sched_screen import sched_screen
 from .sched_weigh import sched_weigh, sched_weigh_gathered
 
-__all__ = ["flash_attention", "rmsnorm", "sched_weigh", "sched_weigh_gathered"]
+__all__ = [
+    "TIE_EPS",
+    "flash_attention",
+    "rmsnorm",
+    "sched_screen",
+    "sched_weigh",
+    "sched_weigh_gathered",
+]

@@ -1,0 +1,310 @@
+"""Pallas TPU kernel: fused stage-1 screen + on-chip top-M shortlist.
+
+One pass over the fleet replaces the pure-jnp stage-1 pipeline (dual-view
+fit mask, exact full-subset feasibility, sorted-prefix termination-cost
+bounds, optimistic ``omega_ub``, global ``lax.top_k``), whose separate
+O(N·K) passes each round-trip the full host arrays through HBM — the
+dominant latency term at 10^5 hosts once stage 2 only enumerates a
+shortlist.  Here every term is computed per 128-host tile from VMEM via the
+*shared* bounds math in ``repro.core.screen_math`` (both screens execute the
+same functions, so shortlist decisions stay bit-exact), and the only HBM
+writes are the (M+1,) shortlist plus 8 normalization scalars.
+
+Structure (grid = (2, N/T), sequential on TPU):
+
+  phase 0   fold the global weigher-normalization constants (termination
+            cost envelope min/max + raw base-term min/max over the valid
+            set) tile-by-tile into SMEM scratch — min/max are
+            reassociation-free, so the folded constants match the jnp
+            reductions bitwise;
+  phase 1   recompute the tile's screen terms, assemble ``omega_ub`` from
+            the SMEM constants, and fold (score, host-index) pairs into a
+            running top-M kept sorted in the output VMEM block by a bitonic
+            lane network (``pltpu.roll`` partner exchanges).  Ties order by
+            lowest host index — exactly ``lax.top_k``'s tie rule, so the
+            emitted shortlist equals the oracle's up to nothing at all.
+
+The buffer holds S = next_pow2(m_keep + T) lanes: each step concatenates the
+previous top-(S-T) with the tile's T candidates and re-sorts, so the keep
+region always contains the true running top-(S-T) — no reset logic.  Entry
+``m_keep-1`` (= M) is the best *non-shortlisted* ``omega_ub`` and its index:
+precisely the (u, j_u) pair the admissibility fallback check needs.
+
+VMEM per step at K=8, D=4, T=128: res tile (8,4,128)f32 16 KB + buffer
+2×(1,256) + odds and ends ≈ 25 KB — far inside the v5e budget; T=128 keeps
+the kernel latency-bound like ``sched_weigh``.
+
+Oracle: ``repro.core.jax_scheduler.screen_terms`` + ``_decision_core``'s
+stage-1 assembly (same shared math).  Validated in interpret mode by
+tests/test_sched_screen.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.screen_math import (
+    EPS,
+    NEG_INF,
+    POS_INF,
+    ScreenConsts,
+    base_from_consts,
+    inv_span,
+    omega_of,
+    screen_bounds_rows,
+    total_rows,
+)
+
+TILE_HOSTS = 128
+#: index sentinel for empty buffer slots — larger than any real host index,
+#: so initial entries sort after every real candidate (ties break low-index).
+IDX_SENTINEL = 2 ** 30
+
+
+def _fold_top(scores_ref, idx_ref, tile_scores, tile_idx, s_buf, tile):
+    """Fold a tile's (1, T) candidates into the sorted (1, S) running top.
+
+    Concatenate the previous top-(S-T) with the new tile and re-sort
+    descending by (score, -index) with a bitonic lane network.  Partner
+    lookup ``x[i ^ j]`` is two ``pltpu.roll``s selected by the j-bit; the
+    comparator is total (indices are unique), so the result is deterministic
+    and matches ``lax.top_k`` tie ordering."""
+    keep = s_buf - tile
+    scores = jnp.concatenate([scores_ref[...][:, :keep], tile_scores], axis=1)
+    idx = jnp.concatenate([idx_ref[...][:, :keep], tile_idx], axis=1)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, s_buf), 1)
+    k = 2
+    while k <= s_buf:
+        j = k // 2
+        while j >= 1:
+            bit0 = (lane & j) == 0
+
+            def partner(x):
+                return jnp.where(
+                    bit0,
+                    pltpu.roll(x, s_buf - j, axis=1),
+                    pltpu.roll(x, j, axis=1),
+                )
+
+            ps, pi = partner(scores), partner(idx)
+            self_first = (scores > ps) | ((scores == ps) & (idx < pi))
+            want_first = ((lane & k) == 0) == bit0
+            take_self = self_first == want_first
+            scores = jnp.where(take_self, scores, ps)
+            idx = jnp.where(take_self, idx, pi)
+            j //= 2
+        k *= 2
+    scores_ref[...] = scores
+    idx_ref[...] = idx
+
+
+def _kernel(
+    free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
+    res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
+    scores_ref, idx_ref, consts_ref, smem,
+    *, multipliers, require_free_slot, tile, s_buf,
+):
+    m_over, m_term, m_pack, m_strag = multipliers
+    phase = pl.program_id(0)
+    t = pl.program_id(1)
+    k = res_ref.shape[0]
+
+    pre = pre_ref[0, 0] != 0
+    rdom = rdom_ref[0, 0]
+    free_f = free_f_ref[...]                                     # (D, T)
+    req = req_ref[...]                                           # (D, 1)
+    validf = valid_ref[...]                                      # (K, T)
+
+    # ---- shared stage-1 bounds math on slot-major rows ----------------------
+    res_rows = [res_ref[i] * validf[i][None, :] for i in range(k)]
+    cost_rows = [
+        jnp.where(validf[i] > 0.5, cost_ref[i], POS_INF) for i in range(k)
+    ]
+    total = total_rows(
+        [jnp.where(validf[i] > 0.5, cost_ref[i], 0.0) for i in range(k)]
+    )
+    need = req - free_f                                          # (D, T)
+    feasible, overcommitted, cost_lb, cost_ub = screen_bounds_rows(
+        need, res_rows, cost_rows, total
+    )
+
+    # ---- dual-view filtering (same formula as _decision_core) ---------------
+    view = jnp.where(pre, free_f, free_n_ref[...])
+    fits = jnp.all(view >= req - EPS, axis=0)                    # (T,)
+    fits &= sched_ref[...][0] > 0.5
+    fits &= (rdom < 0) | (domain_ref[...][0] == rdom)
+    if require_free_slot:
+        has_free = jnp.min(validf, axis=0) < 0.5
+        fits &= jnp.where(pre, has_free, True)
+    cost_lb = jnp.where(pre, 0.0, cost_lb)
+    cost_ub = jnp.where(pre, 0.0, cost_ub)
+    feasible = jnp.where(pre, fits, feasible)
+    valid = fits & feasible
+
+    over_raw = jnp.where(overcommitted, -1.0, 0.0)
+    pack_raw = -jnp.sum(free_f, axis=0)
+    strag_raw = -slow_ref[...][0]
+
+    # ---- phase 0: fold normalization constants into SMEM --------------------
+    @pl.when((phase == 0) & (t == 0))
+    def _():
+        for i in range(4):
+            smem[2 * i] = jnp.float32(POS_INF)
+            smem[2 * i + 1] = jnp.float32(NEG_INF)
+
+    @pl.when(phase == 0)
+    def _():
+        smem[0] = jnp.minimum(smem[0], jnp.min(jnp.where(valid, cost_lb, POS_INF)))
+        smem[1] = jnp.maximum(smem[1], jnp.max(jnp.where(valid, cost_ub, NEG_INF)))
+        for slot, (on, raw) in enumerate(
+            [(m_over, over_raw), (m_pack, pack_raw), (m_strag, strag_raw)]
+        ):
+            if on:
+                smem[2 + 2 * slot] = jnp.minimum(
+                    smem[2 + 2 * slot], jnp.min(jnp.where(valid, raw, POS_INF))
+                )
+                smem[3 + 2 * slot] = jnp.maximum(
+                    smem[3 + 2 * slot], jnp.max(jnp.where(valid, raw, NEG_INF))
+                )
+
+    # ---- phase 1: omega_ub from the constants + running top-M ---------------
+    @pl.when((phase == 1) & (t == 0))
+    def _():
+        scores_ref[...] = jnp.full((1, s_buf), NEG_INF, jnp.float32)
+        idx_ref[...] = jnp.full((1, s_buf), IDX_SENTINEL, jnp.int32)
+
+    @pl.when(phase == 1)
+    def _():
+        consts = ScreenConsts(*(smem[i] for i in range(8)))
+        base = base_from_consts(multipliers, over_raw, pack_raw, strag_raw, consts)
+        ispan = inv_span(consts.c_lo, consts.c_hi)
+        opt_cost = cost_lb if m_term >= 0 else cost_ub
+        omega_ub = omega_of(opt_cost, base, valid, consts, ispan, m_term)
+        gidx = t * tile + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+        _fold_top(scores_ref, idx_ref, omega_ub[None, :], gidx, s_buf, tile)
+        consts_ref[...] = consts.pack()[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "multipliers", "require_free_slot", "s_buf", "tile", "interpret"
+    ),
+)
+def _sched_screen_padded(
+    free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
+    req, pre, rdom,
+    multipliers, require_free_slot, s_buf, tile, interpret,
+):
+    k, d, n = res_t.shape
+    grid = (2, n // tile)
+    kern = functools.partial(
+        _kernel,
+        multipliers=multipliers,
+        require_free_slot=require_free_slot,
+        tile=tile,
+        s_buf=s_buf,
+    )
+    host = lambda p, t: (0, t)
+    fixed = lambda p, t: (0, 0)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, tile), host),
+            pl.BlockSpec((d, tile), host),
+            pl.BlockSpec((1, tile), host),
+            pl.BlockSpec((1, tile), host),
+            pl.BlockSpec((1, tile), host),
+            pl.BlockSpec((k, d, tile), lambda p, t: (0, 0, t)),
+            pl.BlockSpec((k, tile), host),
+            pl.BlockSpec((k, tile), host),
+            pl.BlockSpec((d, 1), fixed),
+            pl.BlockSpec((1, 1), fixed),
+            pl.BlockSpec((1, 1), fixed),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, s_buf), fixed),
+            pl.BlockSpec((1, s_buf), fixed),
+            pl.BlockSpec((1, 8), fixed),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, s_buf), jnp.float32),
+            jax.ShapeDtypeStruct((1, s_buf), jnp.int32),
+            jax.ShapeDtypeStruct((1, 8), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.SMEM((8,), jnp.float32)],
+        interpret=interpret,
+    )(free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
+      req, pre, rdom)
+
+
+def sched_screen(
+    free_f, free_n, schedulable, domain, slow,
+    inst_res, inst_cost, inst_valid,
+    req_res, req_preemptible, req_domain,
+    weigher_multipliers,
+    require_free_slot: bool,
+    m_keep: int,
+    interpret=None,
+    tile: int = TILE_HOSTS,
+):
+    """Fused stage-1 screen.  Returns ``(top_scores, top_idx, consts)``:
+
+      top_scores  (m_keep,) the m_keep best ``omega_ub`` values, descending,
+                  ties by lowest host index (== ``lax.top_k`` order);
+      top_idx     (m_keep,) their host indices.  Callers shortlist the first
+                  m_keep-1 and use entry m_keep-1 as the admissibility
+                  (u, j_u) witness — pass ``m_keep = M + 1``;
+      consts      (8,) packed ``ScreenConsts`` for reconstructing the exact
+                  per-candidate base terms / tolerances outside the kernel.
+
+    Requires ``m_keep <= n_hosts`` (the caller's shortlist branch guarantees
+    M < N).  Hosts are padded to the 128-lane tile with unschedulable
+    entries, which can never outrank a real host.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n, d = free_f.shape
+    k = inst_cost.shape[1]
+    if not 1 <= m_keep <= n:
+        raise ValueError(f"m_keep={m_keep} out of range for {n} hosts")
+    s_buf = 1
+    while s_buf < m_keep + tile:
+        s_buf *= 2
+    pad = (-n) % tile
+    free_f = jnp.asarray(free_f, jnp.float32)
+    free_n = jnp.asarray(free_n, jnp.float32)
+    sched = jnp.asarray(schedulable, jnp.float32)
+    domain = jnp.asarray(domain, jnp.int32)
+    slow = jnp.asarray(slow, jnp.float32)
+    inst_res = jnp.asarray(inst_res, jnp.float32)
+    inst_cost = jnp.asarray(inst_cost, jnp.float32)
+    inst_valid = jnp.asarray(inst_valid, jnp.float32)
+    if pad:
+        zf = jnp.zeros((pad, d), jnp.float32)
+        free_f = jnp.concatenate([free_f, zf])
+        free_n = jnp.concatenate([free_n, zf])
+        sched = jnp.concatenate([sched, jnp.zeros((pad,), jnp.float32)])
+        domain = jnp.concatenate([domain, jnp.zeros((pad,), jnp.int32)])
+        slow = jnp.concatenate([slow, jnp.ones((pad,), jnp.float32)])
+        inst_res = jnp.concatenate([inst_res, jnp.zeros((pad, k, d), jnp.float32)])
+        inst_cost = jnp.concatenate([inst_cost, jnp.zeros((pad, k), jnp.float32)])
+        inst_valid = jnp.concatenate([inst_valid, jnp.zeros((pad, k), jnp.float32)])
+    scores, idx, consts = _sched_screen_padded(
+        free_f.T, free_n.T, sched[None, :], domain[None, :], slow[None, :],
+        inst_res.transpose(1, 2, 0), inst_cost.T, inst_valid.T,
+        jnp.asarray(req_res, jnp.float32).reshape(d, 1),
+        jnp.asarray(req_preemptible, jnp.int32).reshape(1, 1),
+        jnp.asarray(req_domain, jnp.int32).reshape(1, 1),
+        multipliers=tuple(weigher_multipliers),
+        require_free_slot=bool(require_free_slot),
+        s_buf=s_buf,
+        tile=tile,
+        interpret=interpret,
+    )
+    return scores[0, :m_keep], idx[0, :m_keep], consts[0]

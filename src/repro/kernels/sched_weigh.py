@@ -26,6 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.screen_math import TIE_EPS
+
 POS_INF = 1e30
 TILE_HOSTS = 128
 
@@ -58,7 +60,7 @@ def _kernel(free_f_ref, inst_res_ref, inst_cost_ref, inst_valid_ref,
     best_cost = jnp.min(sub_cost, axis=1)                           # (T,)
     # tie-break: fewest instances, then lowest mask index (argmin is first-hit)
     sizes = jnp.sum(masks, axis=0)                                  # (M,)
-    is_tie = sub_cost <= best_cost[:, None] + 1e-3
+    is_tie = sub_cost <= best_cost[:, None] + TIE_EPS
     size_key = jnp.where(is_tie, sizes[None, :], POS_INF)
     best_mask = jnp.argmin(size_key, axis=1).astype(jnp.int32)
 

@@ -11,7 +11,11 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
+import importlib
+
+from repro.core import jax_scheduler
 from repro.core.jax_scheduler import host_plan_terms, subset_masks
+from repro.kernels.ops import TIE_EPS
 from repro.kernels.sched_weigh import sched_weigh, sched_weigh_gathered
 
 
@@ -73,6 +77,43 @@ def test_gathered_entry_matches_oracle(k, m):
     np.testing.assert_array_equal(
         np.asarray(got[0])[feas], np.asarray(ref[0])[feas]
     )
+
+
+def test_tie_epsilon_single_source():
+    """The enumeration tie-break epsilon is ONE constant in kernels/ops.py:
+    the Pallas kernel and the jnp oracle must reference it, not private
+    copies that can drift."""
+    # the function re-export shadows the submodule on the package, so
+    # resolve the module object explicitly
+    sched_weigh_mod = importlib.import_module("repro.kernels.sched_weigh")
+    assert sched_weigh_mod.TIE_EPS is TIE_EPS
+    assert jax_scheduler.TIE_EPS is TIE_EPS
+
+
+@pytest.mark.parametrize("gap_frac,want_mask", [(0.5, 0b001), (2.0, 0b110)])
+def test_tie_epsilon_boundary_identical_on_both_paths(gap_frac, want_mask):
+    """A cost gap just INSIDE the epsilon makes the 1-slot plan tie with the
+    cheaper 2-slot plan and win on size; just OUTSIDE, the cheap 2-slot plan
+    wins outright.  Kernel and oracle must flip at the same boundary.
+
+    Geometry (D=1, K=3): req needs 4; slot 0 frees 4 alone (cost 10+gap),
+    slots {1, 2} free 4 together (cost 5+5=10, the minimum)."""
+    masks = subset_masks(3)
+    free_f = np.zeros((1, 1), np.float32)
+    inst_res = np.array([[[4.0], [2.0], [2.0]]], np.float32)
+    inst_valid = np.ones((1, 3), bool)
+    req = np.array([4.0], np.float32)
+    inst_cost = np.array([[10.0 + gap_frac * TIE_EPS, 5.0, 5.0]], np.float32)
+
+    ref_cost, ref_mask, ref_feas = host_plan_terms(
+        free_f, inst_res, inst_cost, inst_valid, req, masks
+    )
+    k_cost, k_mask, k_feas = sched_weigh(
+        free_f, inst_res, inst_cost, inst_valid, req, masks, interpret=True
+    )
+    assert bool(ref_feas[0]) and bool(k_feas[0])
+    assert float(ref_cost[0]) == float(k_cost[0]) == 10.0
+    assert int(ref_mask[0]) == int(k_mask[0]) == want_mask
 
 
 def test_all_slots_invalid_host():

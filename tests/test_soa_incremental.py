@@ -121,7 +121,7 @@ def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
                 slot_assignment=fleet.slot_assignment(),
             )
             res, pre, dom = fleet._req_arrays(req)
-            _, (oh, oslot, ook, okill) = schedule_step(
+            _, (oh, oslot, ook, okill, _fb, _mg) = schedule_step(
                 oracle, res, pre, dom, now, price,
                 cost_kind=fleet.cost_kind, period=fleet.period,
             )
@@ -216,7 +216,7 @@ def test_schedule_many_bit_identical_to_sequential_steps():
         )
         outs.append([np.asarray(x) for x in o])
 
-    state_scan, (h, s, ok, kill) = schedule_many(
+    state_scan, (h, s, ok, kill, _fb, _mg) = schedule_many(
         fleet.state, res, pre, dom, now, price,
         cost_kind=fleet.cost_kind, period=fleet.period,
     )
