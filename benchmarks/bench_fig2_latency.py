@@ -26,6 +26,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cost import PeriodCost
+from repro.core.fleet_sharding import (
+    fleet_mesh,
+    pad_fleet_state,
+    padded_hosts,
+    shard_fleet_state,
+)
 from repro.core.jax_scheduler import SoAFleetState, schedule_step
 from repro.core.scheduler import FilterScheduler, PreemptibleScheduler, RetryScheduler
 from repro.core.soa_fleet import SoAFleet
@@ -111,8 +117,14 @@ def _bench_k_sweep() -> None:
     fast path (one HBM pass + on-chip top-M); on CPU the kernel only exists
     as an interpreter emulation, so the fused rows run at small N (tiny
     mode) to keep the entrypoint exercised — their latency measures the
-    interpreter, not the kernel."""
+    interpreter, not the kernel.
+
+    The ``sharded`` column (multi-device runs only) runs the same decision
+    end-to-end with the fleet partitioned host-major across every visible
+    device (``mesh=``) — decide + apply on sharded buffers, bit-exact with
+    the unsharded rows."""
     on_tpu = jax.default_backend() == "tpu"
+    n_dev = jax.device_count()
     if TINY:
         grid = [(k, 512, (0, 64)) for k in (4, 8, 10, 12)]
         repeats = 3
@@ -143,6 +155,29 @@ def _bench_k_sweep() -> None:
                 tag = (f"shortlist{m}" if m else "full") + suffix
                 emit(f"fig2_ksweep_k{k}_n{n}_{tag}", t.mean_us,
                      f"std={t.std_us:.1f};masks={1 << k}", p50_us=t.p50_us)
+            if m and n_dev > 1:
+                mesh = fleet_mesh()
+                st_sh = shard_fleet_state(
+                    pad_fleet_state(
+                        state, padded_hosts(n, mesh.size, m_keep=m + 1)
+                    ),
+                    mesh,
+                )
+
+                def call_sharded():
+                    _, (h, *_rest) = schedule_step(
+                        st_sh, req_vec, False, -1, NOW, 1.0,
+                        cost_kind="period", shortlist=m, mesh=mesh,
+                        donate=False,
+                    )
+                    jax.block_until_ready(h)
+
+                t = time_call(call_sharded, repeats=repeats, warmup=2)
+                emit(f"fig2_ksweep_k{k}_n{n}_shortlist{m}_sharded",
+                     t.mean_us,
+                     f"std={t.std_us:.1f};masks={1 << k};shards={mesh.size}",
+                     p50_us=t.p50_us)
+                del st_sh
 
 
 def run() -> None:

@@ -15,7 +15,17 @@ Rows (emitted to BENCH_screen.json via the common REPRO_BENCH_OUT sink):
                                 backends; in interpret mode (CPU) it is an
                                 emulation — those rows validate the
                                 entrypoint and record interpreter overhead,
-                                NOT kernel speed, and only run at small N.
+                                NOT kernel speed, and only run at small N;
+  * ``screen_sharded_*``      — the device-sharded stage-1 (shard_map screen
+                                + cross-shard shortlist merge) on S-device
+                                meshes: a strong-scaling sweep at fixed
+                                N ≥ 10^6 hosts and a weak-scaling sweep at
+                                fixed hosts/shard.  Only emitted when more
+                                than one device is visible — on CPU force
+                                XLA_FLAGS=--xla_force_host_platform_device_count=8
+                                (device "shards" then share the physical
+                                cores, so treat CPU rows as a scaling-shape
+                                smoke, not per-device speedup).
 
 K sweeps {4, 8, 12} on the packed oversubscribed fleet geometry from
 ``bench_fig2_latency`` so the sorted-prefix bounds do real work.
@@ -27,7 +37,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.jax_scheduler import screen_terms, slot_costs
+from repro.core.fleet_sharding import (
+    fleet_mesh,
+    merge_shortlists,
+    pad_fleet_state,
+    shard_fleet_state,
+)
+from repro.core.jax_scheduler import _sharded_screen, screen_terms, slot_costs
 from repro.core.screen_math import (
     base_from_consts,
     consts_of,
@@ -68,6 +84,67 @@ def _stage1_jnp(state, req_res, m_keep):
     in_short = jnp.zeros(omega_ub.shape, bool).at[cand].set(True)
     out_ub = jnp.where(in_short, -1e30, omega_ub)
     return cand, jnp.max(out_ub), jnp.argmax(out_ub)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "m_cand"))
+def _stage1_sharded(state, req_res, mesh, m_cand):
+    """The sharded stage-1: per-shard screen under shard_map + the
+    cross-shard shortlist/consts merge (what ``_decision_core`` runs before
+    stage 2 when ``mesh`` is set)."""
+    inst_cost = slot_costs(
+        "period", state.inst_start, state.inst_price, NOW, 3600.0,
+        inst_ckpt=state.inst_ckpt, inst_res=state.inst_res,
+    )
+    all_s, all_i, consts = _sharded_screen(
+        mesh,
+        state.free_f, state.free_n, state.schedulable, state.domain,
+        state.slow, state.inst_res, inst_cost, state.inst_valid,
+        req_res, jnp.asarray(False), jnp.asarray(-1, jnp.int32),
+        MULT, True, m_cand,
+    )
+    cand, u, j_u = merge_shortlists(all_s, all_i, m_cand)
+    return cand, u, j_u, consts
+
+
+def _bench_sharded(k: int, repeats: int) -> None:
+    """Weak/strong scaling of the sharded stage-1 across device subsets.
+
+    Strong: fixed N (≥ 10^6 hosts in full mode) over 1..S-device meshes —
+    the single-shard row is the sharded-path overhead baseline.  Weak:
+    fixed hosts/shard, fleet grows with the mesh."""
+    n_dev = jax.device_count()
+    if n_dev < 2:
+        return
+    shard_counts = [s for s in (1, 2, 4, 8, 16) if s <= n_dev]
+    n_strong = 2048 if TINY else 1 << 20        # 1,048,576 hosts
+    per_shard_weak = 256 if TINY else 1 << 17   # 131,072 hosts/shard
+    m_cand = 64
+    req = jnp.asarray(_packed_state(4, k)[1])   # same request geometry
+
+    def row(tag, n, s, state, mesh):
+        t = time_call(
+            lambda: jax.block_until_ready(
+                _stage1_sharded(state, req, mesh, m_cand)
+            ),
+            repeats=repeats, warmup=2,
+        )
+        emit(f"screen_sharded_{tag}_k{k}_n{n}_s{s}", t.mean_us,
+             f"std={t.std_us:.1f};hosts_per_shard={n // s};m={m_cand}",
+             p50_us=t.p50_us)
+
+    # strong scaling: ONE fleet (built once — ~130 MB at 2^20 hosts), more
+    # shards; only the device placement changes per row.
+    strong_base, _ = _packed_state(n_strong, k)
+    for s in shard_counts:
+        mesh = fleet_mesh(s)
+        row("strong", n_strong, s, shard_fleet_state(strong_base, mesh), mesh)
+        # weak scaling: fleet grows with the mesh
+        n_weak = per_shard_weak * s
+        if n_weak != n_strong:
+            state, _ = _packed_state(n_weak, k)
+            state = shard_fleet_state(pad_fleet_state(state, n_weak), mesh)
+            row("weak", n_weak, s, state, mesh)
+            del state
 
 
 def _fused(state, req_res, m_keep, interpret):
@@ -138,6 +215,9 @@ def run() -> None:
             mode = "tpu" if on_tpu else "interpret"
             emit(f"screen_fused_k{k}_n{n}_{mode}", t.mean_us,
                  f"std={t.std_us:.1f};m_keep={m_keep}", p50_us=t.p50_us)
+    # Device-sharded stage-1 scaling (multi-device runs only): K=8, the
+    # acceptance geometry, swept over shard counts at ≥10^6 hosts.
+    _bench_sharded(k=8, repeats=repeats)
     write_bench_json("screen")
 
 

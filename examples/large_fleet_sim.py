@@ -7,18 +7,28 @@ on device, applies each event as an O(K·D) transition, and batches runs of
 arrivals through one jit-compiled ``lax.scan``.
 
 Usage:
-    PYTHONPATH=src python examples/large_fleet_sim.py [n_hosts] [sim_hours]
+    PYTHONPATH=src python examples/large_fleet_sim.py [n_hosts] [sim_hours] [n_shards]
 
 Defaults to 10_000 hosts × 2 simulated hours; try 100_000 hosts for the full
 stress run (the decision stays one fused array program — wall time scales
 linearly in fleet size, not in python object count).
+
+Pass ``n_shards > 1`` to partition the fleet host-major across that many
+devices and run the stage-1 screen per shard (``mesh=``) — decisions stay
+bit-identical to the single-device run.  On a CPU-only box, force host
+devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/large_fleet_sim.py 100000 2 8
 """
 from __future__ import annotations
 
 import sys
 import time
 
-from repro.core import PeriodCost, SoASimulator, WorkloadSpec, make_uniform_fleet
+from repro.core import (
+    PeriodCost, SoASimulator, WorkloadSpec, fleet_mesh, make_uniform_fleet,
+)
 from repro.core.types import VM_SPEC
 
 NODE = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=10_000)
@@ -31,6 +41,10 @@ SIZES = {
 def main() -> None:
     n_hosts = int(sys.argv[1]) if len(sys.argv) > 1 else 10_000
     hours = float(sys.argv[2]) if len(sys.argv) > 2 else 2.0
+    n_shards = int(sys.argv[3]) if len(sys.argv) > 3 else 1
+    mesh = fleet_mesh(n_shards) if n_shards > 1 else None
+    if mesh is not None:
+        print(f"sharding {n_hosts} hosts across {n_shards} devices")
 
     # Arrival rate scaled to the fleet so utilization climbs regardless of N.
     workload = WorkloadSpec(
@@ -42,7 +56,7 @@ def main() -> None:
     # K=8 slots: the small flavor packs up to 8 preemptible instances/host.
     sim = SoASimulator(
         make_uniform_fleet(n_hosts, NODE), workload, seed=42,
-        cost_fn=PeriodCost(), k_slots=8, batch_max=128,
+        cost_fn=PeriodCost(), k_slots=8, batch_max=128, mesh=mesh,
     )
 
     # Fault story: 5% stragglers, plus a cascade of host failures that heal.

@@ -7,6 +7,13 @@ Vectorized beyond-paper implementation:
 """
 from .cluster import Cluster, make_uniform_fleet
 from .cost import CountCost, PeriodCost, RecomputeCost, RevenueCost
+from .fleet_sharding import (
+    fleet_mesh,
+    merge_shortlists,
+    pad_fleet_state,
+    padded_hosts,
+    shard_fleet_state,
+)
 from .preemption import PreemptAck, PreemptionController
 from .scheduler import (
     FilterScheduler,
@@ -32,6 +39,8 @@ from .types import (
 __all__ = [
     "Cluster", "make_uniform_fleet",
     "CountCost", "PeriodCost", "RecomputeCost", "RevenueCost",
+    "fleet_mesh", "merge_shortlists", "pad_fleet_state", "padded_hosts",
+    "shard_fleet_state",
     "PreemptAck", "PreemptionController",
     "FilterScheduler", "PreemptibleScheduler", "RetryScheduler", "SCHEDULER_REGISTRY",
     "Simulator", "SoASimulator", "WorkloadSpec",

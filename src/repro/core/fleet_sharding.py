@@ -1,0 +1,159 @@
+"""Device-sharded fleet utilities: mesh construction, host-major state
+padding/placement, and the cross-shard shortlist merge.
+
+The stage-1 screen is O(N·K) over the whole fleet — the term that caps a
+single device around 10^5 hosts.  The sharded path partitions every per-host
+array *host-major* over a 1-D device mesh and runs the unchanged
+``screen_math`` bounds per shard under ``jax.shard_map``
+(``jax_scheduler._sharded_screen``); only two things ever cross shards:
+
+  * the 8 weigher-normalization scalars (``ScreenConsts``) — merged with
+    ``lax.pmin``/``lax.pmax``, which are reassociation-free, so the merged
+    constants are bitwise equal to the unsharded fleet-wide folds;
+  * each shard's top-M shortlist plus its admissibility witness — merged by
+    ``merge_shortlists`` below, which reproduces ``lax.top_k``'s exact
+    (value-descending, index-ascending) tie ordering over the union.
+
+Everything downstream (stage-2 enumeration on the gathered shortlist rows,
+the admissibility check, the ``lax.cond`` full-enumeration fallback) runs on
+replicated data, so sharded decisions are bit-identical to the unsharded
+oracle (pinned by tests/test_sharded_parity.py under 8 forced host devices:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``).
+
+Padding: the shard size must divide N and leave every shard at least
+``M + 1`` hosts (top-M + one witness candidate).  ``padded_hosts`` computes
+the padded row count and ``pad_fleet_state`` appends all-zero rows —
+``schedulable=False`` / ``inst_valid=False``, so padding hosts are invalid
+everywhere, score ``NEG_INF``, and (having the highest indices) lose every
+``lax.top_k`` tie against real hosts; decisions on a padded state are
+bit-identical to the unpadded ones.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .screen_math import POS_INF
+
+#: Mesh axis name of the host partition (the only axis the scheduler shards).
+HOST_AXIS = "hosts"
+
+
+def fleet_mesh(
+    n_shards: Optional[int] = None,
+    devices: Optional[Sequence[jax.Device]] = None,
+    axis_name: str = HOST_AXIS,
+) -> Mesh:
+    """A 1-D device mesh for host-major fleet sharding.
+
+    ``n_shards`` defaults to every visible device (``jax.devices()``); pass a
+    smaller count to benchmark strong scaling on device subsets.  On CPU,
+    force multiple host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (before jax
+    initializes) — that is how CI runs the sharded parity suite.
+    """
+    devices = list(devices if devices is not None else jax.devices())
+    if n_shards is not None:
+        if n_shards > len(devices):
+            raise ValueError(
+                f"n_shards={n_shards} > {len(devices)} visible devices"
+            )
+        devices = devices[:n_shards]
+    return Mesh(np.asarray(devices), (axis_name,))
+
+
+def padded_hosts(n_hosts: int, n_shards: int, m_keep: int = 65) -> int:
+    """Smallest padded fleet size that (a) divides evenly into ``n_shards``
+    host-major blocks and (b) leaves every shard ≥ ``m_keep`` hosts, so each
+    shard can emit a full top-M shortlist plus the admissibility witness
+    (``m_keep = M + 1``).  The decision core silently falls back to the
+    unsharded screen when either condition fails (still correct — just not
+    shard-parallel), so callers building sharded fleets should pad to this."""
+    per_shard = max(math.ceil(n_hosts / n_shards), m_keep)
+    return n_shards * per_shard
+
+
+def pad_fleet_state(state, n_padded: int):
+    """Append all-zero host rows to every per-host leaf of a state dataclass
+    (``SoAFleetState`` or ``SoAHostState``) up to ``n_padded`` rows.
+
+    Zero rows are inert: ``schedulable``/``inst_valid`` pad as False, so the
+    screen marks padding invalid (omega = NEG_INF) and transitions never
+    touch it.  Returns ``state`` unchanged when already at least as large."""
+    n = state.free_f.shape[0]
+    if n_padded <= n:
+        return state
+
+    def pad(x):
+        widths = [(0, n_padded - n)] + [(0, 0)] * (x.ndim - 1)
+        return jnp.pad(x, widths)
+
+    return jax.tree_util.tree_map(pad, state)
+
+
+def host_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """NamedSharding partitioning axis 0 (hosts) and replicating the rest."""
+    axis = mesh.axis_names[0]
+    return NamedSharding(mesh, P(axis, *([None] * (ndim - 1))))
+
+
+def shard_fleet_state(state, mesh: Mesh):
+    """Place every leaf of a state dataclass host-major across ``mesh``.
+
+    The row count must already be a multiple of the mesh size (see
+    ``padded_hosts``/``pad_fleet_state``)."""
+    n = state.free_f.shape[0]
+    if n % mesh.size:
+        raise ValueError(
+            f"fleet size {n} does not divide across {mesh.size} shards; "
+            "pad with pad_fleet_state(state, padded_hosts(...)) first"
+        )
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, host_sharding(mesh, x.ndim)), state
+    )
+
+
+def merge_shortlists(
+    scores: jax.Array,  # (S·(M+1),) per-shard top-M + witness omega_ub
+    idxs: jax.Array,    # (S·(M+1),) matching GLOBAL host indices
+    m_cand: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Merge per-shard shortlist candidates into the global top-M + witness.
+
+    Returns ``(cand (M,), u, j_u)`` where ``cand`` lists the global top-M
+    hosts in exactly ``lax.top_k``'s order — score descending, ties by
+    ascending host index — and ``(u, j_u)`` is the best remaining candidate
+    (the admissibility witness, matching the unsharded path's masked argmax:
+    max score, ties to the lowest index).
+
+    Correctness of the union: any host ranking ≤ M+1 globally under
+    (score desc, index asc) ranks ≤ M+1 within its own shard, so it appears
+    in that shard's top-M or as its witness — the merge never needs hosts
+    that were not forwarded.  The only duplicates possible are a shard whose
+    hosts ALL sit in its local top-M re-emitting one of them (at NEG_INF) as
+    its witness; the dedup pass drops those before the final cut, keeping
+    the candidate list duplicate-free like ``lax.top_k``'s.
+
+    Exactness: two ``lax.sort`` passes on ``(key, index)`` pairs — sorting
+    moves values, never recombines them, so the merged ordering is bitwise
+    faithful to the per-shard scores.
+    """
+    neg = -scores  # ascending sort on -score == descending on score (exact)
+    idx = idxs.astype(jnp.int32)
+    neg_s, idx_s = jax.lax.sort((neg, idx), num_keys=2)
+    # Drop duplicate hosts (same index ⇒ same score ⇒ adjacent after the
+    # lexicographic sort): push them past every real entry and re-sort.
+    # The sentinel key +POS_INF collides with real NEG_INF scores (-(-inf)),
+    # but the int32 max index breaks that tie behind every real host.
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), idx_s[1:] == idx_s[:-1]]
+    )
+    neg_s = jnp.where(dup, jnp.float32(POS_INF), neg_s)
+    idx_s = jnp.where(dup, jnp.int32(jnp.iinfo(jnp.int32).max), idx_s)
+    neg_s, idx_s = jax.lax.sort((neg_s, idx_s), num_keys=2)
+    return idx_s[:m_cand], -neg_s[m_cand], idx_s[m_cand]

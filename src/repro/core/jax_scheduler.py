@@ -315,6 +315,133 @@ def screen_terms(
     return screen_bounds_rows(need, res_rows, cost_rows, total)
 
 
+def _stage1_rows(
+    free_f: jax.Array,
+    free_n: jax.Array,
+    schedulable: jax.Array,
+    domain: jax.Array,
+    slow: jax.Array,
+    inst_res: jax.Array,
+    inst_cost: jax.Array,
+    inst_valid: jax.Array,
+    req_res: jax.Array,
+    req_preemptible: jax.Array,
+    req_domain: jax.Array,
+    require_free_slot: bool,
+) -> Tuple[jax.Array, jax.Array, jax.Array, Tuple[jax.Array, ...]]:
+    """Stage-1 screen assembly on row-major host arrays: the dual-view fit
+    mask (the paper's trick), the shared ``screen_math`` bounds, and the raw
+    enumeration-free weigher terms.
+
+    ONE definition executed for the full fleet (jnp screen / fallback), for
+    gathered candidate rows (the fused path's per-candidate recompute), and
+    per shard under ``shard_map`` (the device-sharded screen) — all three
+    see identical elementwise outputs, which is what keeps every stage-1
+    backend bit-exact with the others.
+
+    Returns ``(valid, cost_lb, cost_ub, raw)``.
+    """
+    view = jnp.where(req_preemptible, free_f, free_n)
+    fits = jnp.all(view >= req_res[None, :] - EPS, axis=-1)
+    fits &= schedulable
+    fits &= (req_domain < 0) | (domain == req_domain)
+    if require_free_slot:
+        # Persistent state carries K slots per host: a preemptible request
+        # needs an empty slot (the rebuild path raises on overflow instead).
+        fits &= jnp.where(req_preemptible, jnp.any(~inst_valid, axis=-1), True)
+    feas, overcommitted, cost_lb, cost_ub = screen_terms(
+        free_f, inst_res, inst_cost, inst_valid, req_res
+    )
+    # Preemptible requests never terminate others: zero cost everywhere.
+    cost_lb = jnp.where(req_preemptible, 0.0, cost_lb)
+    cost_ub = jnp.where(req_preemptible, 0.0, cost_ub)
+    feas = jnp.where(req_preemptible, fits, feas)
+    valid = fits & feas
+    raw = raw_base_terms(jnp.sum(free_f, axis=-1), slow, overcommitted)
+    return valid, cost_lb, cost_ub, raw
+
+
+def _sharded_screen(
+    mesh,
+    free_f, free_n, schedulable, domain, slow,
+    inst_res, inst_cost, inst_valid,
+    req_res, req_preemptible, req_domain,
+    mult: Tuple[float, float, float, float],
+    require_free_slot: bool,
+    m_cand: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stage-1 screen per host-major shard under ``jax.shard_map``.
+
+    Each shard runs the unchanged ``screen_math`` bounds on its block of
+    hosts, folds its local normalization partials, and the mesh merges:
+
+      * ``ScreenConsts`` via ``lax.pmin``/``lax.pmax`` — min/max are
+        reassociation-free, so the merged scalars are bitwise equal to the
+        unsharded fleet-wide folds in ``consts_of``;
+      * a per-shard top-M (``lax.top_k`` — kept at M so XLA CPU's fast TopK
+        custom-call still applies per shard) plus the shard's own
+        admissibility witness (masked argmax, ties to the lowest index),
+        tagged with GLOBAL host indices and ``all_gather``-ed.
+
+    Returns replicated ``(scores (S·(M+1),), idxs (S·(M+1),), consts (8,))``
+    for ``fleet_sharding.merge_shortlists`` to reduce into the global
+    shortlist.  Callers guarantee ``N % S == 0`` and ``N/S ≥ m_cand + 1``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+    m_term = mult[1]
+
+    def shard_fn(free_f, free_n, schedulable, domain, slow,
+                 inst_res, inst_cost, inst_valid,
+                 req_res, req_preemptible, req_domain):
+        t = free_f.shape[0]  # hosts per shard
+        valid, cost_lb, cost_ub, raw = _stage1_rows(
+            free_f, free_n, schedulable, domain, slow,
+            inst_res, inst_cost, inst_valid,
+            req_res, req_preemptible, req_domain, require_free_slot,
+        )
+        local = consts_of(mult, valid, cost_lb, cost_ub, *raw)
+        consts = ScreenConsts(
+            jax.lax.pmin(local.c_lo, axis), jax.lax.pmax(local.c_hi, axis),
+            jax.lax.pmin(local.over_lo, axis), jax.lax.pmax(local.over_hi, axis),
+            jax.lax.pmin(local.pack_lo, axis), jax.lax.pmax(local.pack_hi, axis),
+            jax.lax.pmin(local.strag_lo, axis), jax.lax.pmax(local.strag_hi, axis),
+        )
+        base = base_from_consts(mult, *raw, consts)
+        ispan_ub = inv_span(consts.c_lo, consts.c_hi)
+        opt_cost = cost_lb if m_term >= 0 else cost_ub
+        omega_ub = omega_of(opt_cost, base, valid, consts, ispan_ub, m_term)
+        offset = (jax.lax.axis_index(axis) * t).astype(jnp.int32)
+        s_loc, p_loc = jax.lax.top_k(omega_ub, m_cand)
+        in_short = jnp.zeros((t,), bool).at[p_loc].set(True)
+        out_ub = jnp.where(in_short, jnp.float32(NEG_INF), omega_ub)
+        u_loc = jnp.max(out_ub)
+        ju_loc = jnp.argmax(out_ub).astype(jnp.int32) + offset
+        scores = jnp.concatenate([s_loc, u_loc[None]])
+        idxs = jnp.concatenate(
+            [p_loc.astype(jnp.int32) + offset, ju_loc[None]]
+        )
+        all_s = jax.lax.all_gather(scores, axis).reshape(-1)
+        all_i = jax.lax.all_gather(idxs, axis).reshape(-1)
+        return all_s, all_i, consts.pack()
+
+    row = P(axis)
+    rep = P()
+    return shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=(row,) * 8 + (rep, rep, rep),
+        out_specs=(rep, rep, rep),
+        check_rep=False,
+    )(
+        free_f, free_n, schedulable, domain, slow,
+        inst_res, inst_cost, inst_valid,
+        req_res, req_preemptible, req_domain,
+    )
+
+
 def _plan_terms(use_pallas: bool, gathered: bool = False):
     """Enumeration backend: Pallas kernel (full-fleet or gathered-shortlist
     tiling) or the pure-jnp oracle."""
@@ -342,6 +469,7 @@ def _decision_core(
     require_free_slot: bool,
     shortlist: Optional[int],
     fused_screen: Optional[bool],
+    mesh=None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """The two-stage decision pipeline on raw SoA arrays (shared by the
     rebuild path, the persistent fast path, and the batched ``lax.scan``
@@ -360,6 +488,14 @@ def _decision_core(
     interpret mode for parity testing).  Both screens execute the shared
     ``screen_math`` definitions, so the decision is identical either way.
 
+    ``mesh``: a 1-D ``jax.sharding.Mesh`` (see ``fleet_sharding``) running
+    stage 1 per host-major shard under ``shard_map`` with a bit-exact
+    cross-shard merge — the fleet-scale path past the single-device ceiling.
+    Takes precedence over ``fused_screen`` for stage 1.  Requires the host
+    count to divide across the mesh with ≥ M+1 hosts per shard (pad with
+    ``fleet_sharding.padded_hosts``/``pad_fleet_state``); otherwise the
+    unsharded screen runs (same decision, just not shard-parallel).
+
     Returns ``(host_idx, term_mask_idx, ok, fell_back, margin)``:
     ``fell_back`` flags decisions where the admissibility check could not
     certify the shortlist and the full enumeration ran; ``margin`` is the
@@ -373,42 +509,29 @@ def _decision_core(
         shortlist = DEFAULT_SHORTLIST if n_hosts > 4 * DEFAULT_SHORTLIST else 0
     m_cand = min(int(shortlist), n_hosts)
     if fused_screen is None:
-        fused_screen = jax.default_backend() == "tpu"
+        fused_screen = jax.default_backend() == "tpu" and mesh is None
     mult = weigher_multipliers
     m_term = mult[1]
-
-    def fits_of(free_f, free_n, schedulable, domain, inst_valid):
-        """Dual-view filtering (the paper's trick) — row-major layout."""
-        view = jnp.where(req_preemptible, free_f, free_n)
-        fits = jnp.all(view >= req_res[None, :] - EPS, axis=-1)
-        fits &= schedulable
-        fits &= (req_domain < 0) | (domain == req_domain)
-        if require_free_slot:
-            # Persistent state carries K slots per host: a preemptible
-            # request needs an empty slot (the rebuild path raises on
-            # overflow instead).
-            fits &= jnp.where(
-                req_preemptible, jnp.any(~inst_valid, axis=-1), True
-            )
-        return fits
+    use_mesh = (
+        mesh is not None
+        and m_cand > 0
+        and n_hosts % mesh.size == 0
+        and n_hosts // mesh.size >= m_cand + 1
+    )
 
     def stage1_of(free_f, free_n, schedulable, domain, slow, inst_res,
                   inst_cost, inst_valid):
-        """Stage-1 screen assembly on row-major arrays — used for the full
-        fleet (jnp screen / fallback) and for gathered candidate rows (the
-        fused path's per-candidate recompute).  Same shared math as the
-        kernel, so the outputs agree elementwise."""
-        fits = fits_of(free_f, free_n, schedulable, domain, inst_valid)
-        feas, overcommitted, cost_lb, cost_ub = screen_terms(
-            free_f, inst_res, inst_cost, inst_valid, req_res
+        """Stage-1 screen assembly on row-major arrays (the shared
+        ``_stage1_rows`` with this decision's request closed over) — used
+        for the full fleet (jnp screen / fallback) and for gathered
+        candidate rows (the fused/sharded paths' per-candidate recompute).
+        Same shared math as the kernel and the sharded screen, so the
+        outputs agree elementwise."""
+        return _stage1_rows(
+            free_f, free_n, schedulable, domain, slow,
+            inst_res, inst_cost, inst_valid,
+            req_res, req_preemptible, req_domain, require_free_slot,
         )
-        # Preemptible requests never terminate others: zero cost everywhere.
-        cost_lb = jnp.where(req_preemptible, 0.0, cost_lb)
-        cost_ub = jnp.where(req_preemptible, 0.0, cost_ub)
-        feas = jnp.where(req_preemptible, fits, feas)
-        valid = fits & feas
-        raw = raw_base_terms(jnp.sum(free_f, axis=-1), slow, overcommitted)
-        return valid, cost_lb, cost_ub, raw
 
     def full_decision(_):
         """Single-stage path: exact enumeration over every host.  Fully
@@ -438,7 +561,30 @@ def _decision_core(
     # ---- stage 1: O(N·K) screen → top-M candidates + (u, j_u) witness -------
     # omega_ub ≥ omega at float level: cost_lb ≤ best_cost and every op in
     # omega_of is monotone (shared constants, shared add order).
-    if fused_screen:
+    if use_mesh:
+        # Per-shard screen under shard_map; the merge reduces the gathered
+        # per-shard (top-M + witness) pairs into the global shortlist with
+        # lax.top_k's exact tie ordering, and the pmin/pmax-merged constants
+        # are bitwise equal to the fleet-wide folds.
+        from .fleet_sharding import merge_shortlists
+
+        all_s, all_i, consts_arr = _sharded_screen(
+            mesh,
+            free_f, free_n, schedulable, domain, slow,
+            inst_res, inst_cost, inst_valid,
+            req_res, req_preemptible, req_domain,
+            mult, require_free_slot, m_cand,
+        )
+        consts = ScreenConsts.unpack(consts_arr)
+        cand, u, j_u = merge_shortlists(all_s, all_i, m_cand)
+        # Per-candidate base/valid recomputed on the gathered (replicated)
+        # shortlist rows — elementwise identical to the fleet-wide values.
+        valid_c, _, _, raw_c = stage1_of(
+            free_f[cand], free_n[cand], schedulable[cand], domain[cand],
+            slow[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
+        )
+        base_c = base_from_consts(mult, *raw_c, consts)
+    elif fused_screen:
         # One fused pass over the fleet; only the (M+1,) shortlist and the 8
         # normalization scalars come back.  Entry M is the best omega_ub
         # outside the shortlist with lax.top_k tie ordering — the (u, j_u)
@@ -537,7 +683,8 @@ def _decision_core(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "use_pallas", "weigher_multipliers", "shortlist", "fused_screen"
+        "use_pallas", "weigher_multipliers", "shortlist", "fused_screen",
+        "mesh",
     ),
 )
 def schedule_decision(
@@ -549,6 +696,7 @@ def schedule_decision(
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
     shortlist: Optional[int] = None,
     fused_screen: Optional[bool] = None,
+    mesh=None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One scheduling decision.  Returns (host_idx, term_mask_idx, ok).
 
@@ -556,15 +704,16 @@ def schedule_decision(
     straggler) — the first two reproduce the paper's evaluation policy.
     ``shortlist`` = stage-2 candidate count (None = auto, 0 = off);
     ``fused_screen`` = stage-1 backend (None = auto: fused Pallas screen on
-    TPU, jnp elsewhere); any setting returns the same decision (see
-    ``_decision_core``).
+    TPU, jnp elsewhere); ``mesh`` = optional 1-D device mesh sharding stage 1
+    host-major (see ``fleet_sharding``); any setting returns the same
+    decision (see ``_decision_core``).
     """
     return _decision_core(
         state.free_f, state.free_n, state.schedulable, state.domain,
         state.slow, state.inst_res, state.inst_cost, state.inst_valid,
         req_res, req_preemptible, req_domain,
         use_pallas, weigher_multipliers, require_free_slot=False,
-        shortlist=shortlist, fused_screen=fused_screen,
+        shortlist=shortlist, fused_screen=fused_screen, mesh=mesh,
     )[:3]
 
 
@@ -788,7 +937,7 @@ def _step_core(
     state: SoAFleetState,
     req_res, req_preemptible, req_domain, now, price,
     cost_kind, period, use_pallas, weigher_multipliers, shortlist,
-    fused_screen,
+    fused_screen, mesh,
 ):
     inst_cost = slot_costs(
         cost_kind, state.inst_start, state.inst_price, now, period,
@@ -799,7 +948,7 @@ def _step_core(
         state.slow, state.inst_res, inst_cost, state.inst_valid,
         req_res, req_preemptible, req_domain,
         use_pallas, weigher_multipliers, require_free_slot=True,
-        shortlist=shortlist, fused_screen=fused_screen,
+        shortlist=shortlist, fused_screen=fused_screen, mesh=mesh,
     )
     state, slot, kill = _apply_decision(
         state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price
@@ -809,29 +958,29 @@ def _step_core(
 
 _STEP_STATICS = (
     "cost_kind", "use_pallas", "weigher_multipliers", "shortlist",
-    "fused_screen",
+    "fused_screen", "mesh",
 )
 
 
 def _step_entry(state, req_res, req_preemptible, req_domain, now, price,
                 period, *, cost_kind, use_pallas, weigher_multipliers,
-                shortlist, fused_screen):
+                shortlist, fused_screen, mesh):
     return _step_core(
         state, req_res, req_preemptible, req_domain, now, price,
         cost_kind, period, use_pallas, weigher_multipliers, shortlist,
-        fused_screen,
+        fused_screen, mesh,
     )
 
 
 def _many_entry(state, req_res, req_preemptible, req_domain, req_now,
                 req_price, period, *, cost_kind, use_pallas,
-                weigher_multipliers, shortlist, fused_screen):
+                weigher_multipliers, shortlist, fused_screen, mesh):
     def body(st, xs):
         res, pre, dom, now, price = xs
         return _step_core(
             st, res, pre, dom, now, price,
             cost_kind, period, use_pallas, weigher_multipliers, shortlist,
-            fused_screen,
+            fused_screen, mesh,
         )
 
     return jax.lax.scan(
@@ -863,16 +1012,21 @@ def schedule_step(
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
     shortlist: Optional[int] = None,
     fused_screen: Optional[bool] = None,
+    mesh=None,
     donate: bool = True,
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Fused decide-and-apply on the persistent state (one dispatch/event).
 
-    Returns ``(state', (host_idx, slot, ok, kill, fell_back, margin))`` —
-    the last two are the shortlist-health signals (see ``_decision_core``)
-    the adaptive controller consumes.  With ``donate=True`` (default) the
-    input state's buffers are reused for the output — the caller must not
-    touch ``state`` afterwards; pass ``donate=False`` to keep the input
-    alive (oracle comparisons, repeated benchmarks).
+    Returns ``(state', (host_idx, slot, ok, kill, fell_back, margin))`` — a
+    6-tuple: the winning host index, the slot a preemptible placement landed
+    in, whether the request was placed at all, the (K,) bool mask of slots
+    evacuated on the winner, and the two shortlist-health signals (see
+    ``_decision_core``) the adaptive controller consumes.  With
+    ``donate=True`` (default) the input state's buffers are reused for the
+    output — the caller must not touch ``state`` afterwards; pass
+    ``donate=False`` to keep the input alive (oracle comparisons, repeated
+    benchmarks).  ``mesh`` shards stage 1 host-major across devices (the
+    state should already be padded + placed via ``fleet_sharding``).
     """
     fn = _step_donated if donate else _step_kept
     return fn(
@@ -880,7 +1034,7 @@ def schedule_step(
         jnp.asarray(now, jnp.float32), jnp.asarray(price, jnp.float32),
         period, cost_kind=cost_kind, use_pallas=use_pallas,
         weigher_multipliers=tuple(weigher_multipliers), shortlist=shortlist,
-        fused_screen=fused_screen,
+        fused_screen=fused_screen, mesh=mesh,
     )
 
 
@@ -897,6 +1051,7 @@ def schedule_many(
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
     shortlist: Optional[int] = None,
     fused_screen: Optional[bool] = None,
+    mesh=None,
     donate: bool = True,
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Run a request batch through ``lax.scan`` carrying the fleet state, so
@@ -904,10 +1059,12 @@ def schedule_many(
     bit-identical to ``schedule_step`` in a loop, at one dispatch per batch.
 
     Returns ``(state', (host_idx (B,), slot (B,), ok (B,), kill (B, K),
-    fell_back (B,), margin (B,)))``.  ``fell_back.sum()`` is the batch's
+    fell_back (B,), margin (B,)))`` — the batched 6-tuple of
+    ``schedule_step``.  ``fell_back.sum()`` is the batch's
     admissibility-fallback counter and ``margin`` the per-decision headroom
     — the signals the adaptive shortlist controller steers M with.
-    Donation semantics as in ``schedule_step``.
+    Donation and ``mesh`` semantics as in ``schedule_step`` (the sharded
+    stage 1 runs inside the scan body; the carried state stays sharded).
     """
     fn = _many_donated if donate else _many_kept
     return fn(
@@ -915,7 +1072,7 @@ def schedule_many(
         jnp.asarray(req_now, jnp.float32), jnp.asarray(req_price, jnp.float32),
         period, cost_kind=cost_kind, use_pallas=use_pallas,
         weigher_multipliers=tuple(weigher_multipliers), shortlist=shortlist,
-        fused_screen=fused_screen,
+        fused_screen=fused_screen, mesh=mesh,
     )
 
 
@@ -1080,6 +1237,7 @@ class JaxPreemptibleScheduler:
         weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
         shortlist: Optional[int] = None,
         fused_screen: Optional[bool] = None,
+        mesh=None,
     ):
         self.cost_fn = cost_fn or PeriodCost()
         self.k_slots = k_slots
@@ -1087,6 +1245,11 @@ class JaxPreemptibleScheduler:
         self.weigher_multipliers = weigher_multipliers
         self.shortlist = shortlist
         self.fused_screen = fused_screen
+        #: optional 1-D device mesh for the sharded stage-1 screen.  The
+        #: rebuild path does not pad, so sharding only engages when the host
+        #: count already divides the mesh with ≥ M+1 hosts per shard; the
+        #: persistent path (SoAFleet(mesh=...)) pads automatically.
+        self.mesh = mesh
 
     # -- full pipeline from python objects ------------------------------------
     def schedule(
@@ -1134,4 +1297,5 @@ class JaxPreemptibleScheduler:
             weigher_multipliers=self.weigher_multipliers,
             shortlist=self.shortlist,
             fused_screen=self.fused_screen,
+            mesh=self.mesh,
         )

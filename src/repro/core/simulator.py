@@ -215,7 +215,10 @@ class SoASimulator:
     transition, and runs of consecutive arrivals are batched through one
     jit-compiled ``lax.scan`` (``schedule_many``) so consecutive decisions
     still see each other's placements exactly.  Python ``Host`` objects are
-    materialized only on demand (``fleet.sync_hosts()``).
+    materialized only on demand (``fleet.sync_hosts()``).  Pass ``mesh`` (a
+    1-D device mesh, see ``fleet_sharding``) to shard the fleet state
+    host-major across devices — the whole event loop then runs on the
+    sharded stage-1 screen, bit-identical to the single-device run.
 
     Behavioral deltas vs ``Simulator`` (documented, both benign):
       * lifetimes are drawn at arrival time (not on placement success), so
@@ -236,6 +239,7 @@ class SoASimulator:
         weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
         shortlist: Optional[int] = None,
         fused_screen: Optional[bool] = None,
+        mesh=None,
         adaptive_shortlist: bool = False,
     ):
         self.fleet = (
@@ -249,6 +253,7 @@ class SoASimulator:
                 weigher_multipliers=weigher_multipliers,
                 shortlist=shortlist,
                 fused_screen=fused_screen,
+                mesh=mesh,
                 adaptive_shortlist=adaptive_shortlist,
             )
         )

@@ -119,7 +119,23 @@ class SoAOutcome:
 
 
 class SoAFleet:
-    """Incremental fleet view: device arrays + id bookkeeping."""
+    """Incremental fleet view: device arrays + id bookkeeping.
+
+    Decision knobs (all threaded straight through to ``jax_scheduler``; every
+    combination produces bit-identical decisions — they select *which path
+    computes the answer*, never the answer itself):
+
+      * ``shortlist`` — stage-2 candidate count M (None = auto, 0 = full
+        enumeration);
+      * ``fused_screen`` — stage 1 via the fused Pallas kernel (None = auto:
+        on for TPU);
+      * ``mesh`` — a 1-D device mesh sharding the fleet host-major; the
+        state is padded (``fleet_sharding.padded_hosts``) and placed across
+        the mesh at build, and stage 1 runs per shard under ``shard_map``
+        with a bit-exact cross-shard merge;
+      * ``adaptive_shortlist`` — host-side controller resizing M between
+        flushes from the ``fell_back``/``margin`` health signals.
+    """
 
     def __init__(
         self,
@@ -130,6 +146,7 @@ class SoAFleet:
         weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
         shortlist: Optional[int] = None,
         fused_screen: Optional[bool] = None,
+        mesh=None,
         adaptive_shortlist: bool = False,
     ):
         self.cost_fn = cost_fn or PeriodCost()
@@ -142,6 +159,8 @@ class SoAFleet:
         self.shortlist = shortlist
         #: stage-1 screen backend (None = auto: fused Pallas kernel on TPU).
         self.fused_screen = fused_screen
+        #: optional 1-D device mesh for the sharded stage-1 screen.
+        self.mesh = mesh
         #: optional host-side controller steering M between flushes.
         if adaptive_shortlist and shortlist == 0:
             raise ValueError(
@@ -171,6 +190,28 @@ class SoAFleet:
         self.state, slot_rows = build_fleet_state(
             hosts, k_slots=k_slots, domain_ids=self.domain_ids
         )
+        if mesh is not None:
+            # Pad to a shard-divisible host count that leaves every shard
+            # room for the largest shortlist this fleet can run (the
+            # adaptive ceiling when the controller is on), then place the
+            # arrays host-major across the mesh.  Padding rows are invalid
+            # everywhere, so decisions are unchanged (tests/test_sharded_parity).
+            from .fleet_sharding import (
+                pad_fleet_state, padded_hosts, shard_fleet_state,
+            )
+
+            m_hi = (
+                self.adaptive.m_max
+                if self.adaptive is not None
+                else (DEFAULT_SHORTLIST if shortlist is None else shortlist)
+            )
+            self.state = shard_fleet_state(
+                pad_fleet_state(
+                    self.state,
+                    padded_hosts(len(hosts), mesh.size, m_keep=m_hi + 1),
+                ),
+                mesh,
+            )
         #: slot → live preemptible instance id (None = free slot)
         self.slot_ids: List[List[Optional[str]]] = [
             [inst.id if inst is not None else None for inst in row]
@@ -234,8 +275,12 @@ class SoAFleet:
         small fleets)."""
         a = self.adaptive
         m = self.effective_shortlist
-        if m is None:  # mirror _decision_core's auto rule
-            m = DEFAULT_SHORTLIST if self.n_hosts > 4 * DEFAULT_SHORTLIST else 0
+        if m is None:  # mirror _decision_core's auto rule (padded state size)
+            m = (
+                DEFAULT_SHORTLIST
+                if self.state.n_hosts > 4 * DEFAULT_SHORTLIST
+                else 0
+            )
         return {
             "decisions": self.decisions,
             "fallbacks": self.fallbacks,
@@ -262,6 +307,7 @@ class SoAFleet:
             weigher_multipliers=self.weigher_multipliers,
             shortlist=self.effective_shortlist,
             fused_screen=self.fused_screen,
+            mesh=self.mesh,
         )
         self._observe(int(fell_back), float(margin), 1)
         return self._absorb(
@@ -301,6 +347,7 @@ class SoAFleet:
             weigher_multipliers=self.weigher_multipliers,
             shortlist=self.effective_shortlist,
             fused_screen=self.fused_screen,
+            mesh=self.mesh,
         )
         host_idx, slot = np.asarray(host_idx), np.asarray(slot)
         ok, kill = np.asarray(ok), np.asarray(kill)
