@@ -33,6 +33,7 @@ from repro.core.fleet_sharding import (
     shard_fleet_state,
 )
 from repro.core.jax_scheduler import SoAFleetState, schedule_step
+from repro.core.policy import SchedulerPolicy
 from repro.core.scheduler import FilterScheduler, PreemptibleScheduler, RetryScheduler
 from repro.core.soa_fleet import SoAFleet
 from repro.core.types import VM_SPEC, Request
@@ -65,8 +66,7 @@ def _bench_incremental(n_hosts: int) -> None:
             def call():
                 _, (h, *_rest) = schedule_step(
                     fleet.state, req_vec, pre, -1, NOW, 1.0,
-                    cost_kind=fleet.cost_kind, period=fleet.period,
-                    donate=False,
+                    policy=fleet.policy, donate=False,
                 )
                 jax.block_until_ready(h)
 
@@ -97,6 +97,7 @@ def _packed_state(n: int, k: int, seed: int = 0):
         ),
         inst_price=jnp.ones((n, k), jnp.float32),
         inst_ckpt=jnp.zeros((n, k), jnp.float32),
+        inst_cost_kind=jnp.full((n, k), -1, jnp.int32),
         inst_valid=jnp.ones((n, k), bool),
     )
     free_vcpus = int(cap[0]) - k * int(small[0])
@@ -146,8 +147,10 @@ def _bench_k_sweep() -> None:
                 def call():
                     _, (h, *_rest) = schedule_step(
                         state, req_vec, False, -1, NOW, 1.0,
-                        cost_kind="period", shortlist=m,
-                        fused_screen=fused, donate=False,
+                        policy=SchedulerPolicy(
+                            shortlist=m, fused_screen=fused
+                        ),
+                        donate=False,
                     )
                     jax.block_until_ready(h)
 
@@ -167,7 +170,7 @@ def _bench_k_sweep() -> None:
                 def call_sharded():
                     _, (h, *_rest) = schedule_step(
                         st_sh, req_vec, False, -1, NOW, 1.0,
-                        cost_kind="period", shortlist=m, mesh=mesh,
+                        policy=SchedulerPolicy(shortlist=m, mesh=mesh),
                         donate=False,
                     )
                     jax.block_until_ready(h)

@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.core.cost import PeriodCost
 from repro.core.jax_scheduler import JaxPreemptibleScheduler, build_soa_state
+from repro.core.policy import SchedulerPolicy
 from repro.core.scheduler import PreemptibleScheduler
 from repro.core.types import Request
 
@@ -40,7 +41,10 @@ def run() -> None:
             if use_pallas and n_hosts > 1000:
                 continue  # interpret mode is a correctness harness, not speed
             jx = JaxPreemptibleScheduler(
-                cost_fn=PeriodCost(), use_pallas=use_pallas, shortlist=shortlist
+                cost_fn=PeriodCost(),
+                policy=SchedulerPolicy(
+                    use_pallas=use_pallas, shortlist=shortlist
+                ),
             )
             state, _ = build_soa_state(hosts, NOW, jx.cost_fn, k_slots=jx.k_slots)
 

@@ -25,17 +25,36 @@ Rows (emitted to BENCH_screen.json via the common REPRO_BENCH_OUT sink):
                                 XLA_FLAGS=--xla_force_host_platform_device_count=8
                                 (device "shards" then share the physical
                                 cores, so treat CPU rows as a scaling-shape
-                                smoke, not per-device speedup).
+                                smoke, not per-device speedup);
+  * ``screen_slot_costs_mixed_*`` — the heterogeneous kind-table selection
+                                (``fleet_slot_costs`` under a 4-kind
+                                ``SchedulerPolicy``) vs the single-kind
+                                column above — the mixed-payment overhead is
+                                the extra elementwise selects only;
+  * ``screen_adaptive_*``     — the AdaptiveShortlist workload study: a
+                                fallback-heavy fleet (loose stage-1 bounds
+                                on every host, so small M cannot certify its
+                                winner) and a calm skewed fleet (a cheap
+                                pool far ahead of the field, so margins are
+                                wide) swept over (grow_after, shrink_after)
+                                controller thresholds; the note records
+                                decisions / fallbacks / final M / grows /
+                                shrinks.  See ``AdaptiveShortlist`` for the
+                                defaults this study picked.
 
 K sweeps {4, 8, 12} on the packed oversubscribed fleet geometry from
 ``bench_fig2_latency`` so the sorted-prefix bounds do real work.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
+
+import numpy as np
 
 from repro.core.fleet_sharding import (
     fleet_mesh,
@@ -43,7 +62,13 @@ from repro.core.fleet_sharding import (
     pad_fleet_state,
     shard_fleet_state,
 )
-from repro.core.jax_scheduler import _sharded_screen, screen_terms, slot_costs
+from repro.core.jax_scheduler import (
+    _sharded_screen,
+    fleet_slot_costs,
+    screen_terms,
+    slot_costs,
+)
+from repro.core.policy import SchedulerPolicy
 from repro.core.screen_math import (
     base_from_consts,
     consts_of,
@@ -51,12 +76,16 @@ from repro.core.screen_math import (
     omega_of,
     raw_base_terms,
 )
+from repro.core.soa_fleet import SoAFleet
+from repro.core.types import VM_SPEC, Host, Instance, Request
 
 from .bench_fig2_latency import _packed_state
 from .common import NOW, TINY, emit, time_call, write_bench_json
 
 MULT = (1.0, 1.0, 0.0, 0.0)
 M_KEEP = 65
+#: all four kinds in one table — the mixed-payment fleet the tentpole added
+MIXED_POLICY = SchedulerPolicy(cost_kinds=("count", "revenue", "recompute"))
 
 
 @functools.partial(jax.jit, static_argnames=("m_keep",))
@@ -147,6 +176,116 @@ def _bench_sharded(k: int, repeats: int) -> None:
             del state
 
 
+CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=10_000)
+MEDIUM = VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40)
+
+
+def _loose_bound_fleet(n: int):
+    """Every host's stage-1 cost lower bound undershoots its true optimum:
+    two cheap slots cover one resource dim each (m* = 1 ⇒ lb = one cheap
+    slot), but any feasible plan pays both — so a small shortlist can never
+    certify its winner against the outside bounds and EVERY decision pays
+    the admissibility fallback.  The worst case the adaptive controller's
+    grow path exists for."""
+    a = VM_SPEC.make(vcpus=4, ram_mb=0, disk_gb=20)
+    b = VM_SPEC.make(vcpus=0, ram_mb=8000, disk_gb=20)
+    c = VM_SPEC.make(vcpus=4, ram_mb=8000, disk_gb=40)
+    hosts = []
+    for i in range(n):
+        h = Host(name=f"h{i}", capacity=CAP)
+        for j, (res, mins) in enumerate(((a, 10), (b, 10), (c, 50))):
+            h.place(Instance(
+                id=f"x{i}-{j}", resources=res, preemptible=True, host=h.name,
+                start_time=NOW - mins * 60.0,
+            ))
+        hosts.append(h)
+    return hosts, VM_SPEC.make(vcpus=4, ram_mb=8000, disk_gb=40)
+
+
+def _calm_skewed_fleet(n: int, rng):
+    """Sparse feasibility: only ~64 hosts can admit the request at all (one
+    evacuable slot + normal-view room); the rest are full of normal
+    instances.  The whole viable pool fits inside the default shortlist, so
+    the best *non-shortlisted* bound is NEG_INF and the admissibility
+    margin is effectively infinite — the regime where a small M provably
+    suffices and the controller should shrink toward the floor."""
+    filler = MEDIUM
+    step = max(n // 64, 1)
+    hosts = []
+    for i in range(n):
+        h = Host(name=f"h{i}", capacity=CAP)
+        feasible = i % step == 0
+        if feasible:
+            h.place(Instance(
+                id=f"p{i}", resources=filler, preemptible=True, host=h.name,
+                start_time=NOW - float(rng.integers(5, 56)) * 60.0,
+            ))
+        n_fill = 3 if feasible else 4
+        for j in range(n_fill):
+            h.place(Instance(
+                id=f"n{i}-{j}", resources=filler, preemptible=False,
+                host=h.name, start_time=NOW - 3600.0,
+            ))
+        hosts.append(h)
+    return hosts, MEDIUM
+
+
+def _bench_adaptive(repeats: int) -> None:
+    """AdaptiveShortlist workload study: how the controller's thresholds
+    trade fallback cost against shortlist size on the two extreme synthetic
+    workloads, and what per-decision latency each configuration lands at.
+    The (grow_after=2, shrink_after=8) row is the shipped default — see the
+    ``AdaptiveShortlist`` docstring for the conclusions."""
+    n = 256 if TINY else 4096
+    flushes = 6 if TINY else 12
+    batch = 8
+    rng = np.random.default_rng(0)
+    workloads = {
+        "fallback_heavy": _loose_bound_fleet(n),
+        "calm": _calm_skewed_fleet(n, rng),
+    }
+    for g, s in ((1, 4), (2, 8), (4, 16)):
+        for name, (hosts, req_res) in workloads.items():
+            fleet = SoAFleet(
+                hosts, k_slots=4,
+                policy=SchedulerPolicy(
+                    shortlist=64, adaptive_shortlist=True,
+                    adaptive_bounds=(16, 256),
+                ),
+            )
+            fleet.adaptive.grow_after = g
+            fleet.adaptive.shrink_after = s
+
+            def flush(i):
+                fleet.schedule_batch([
+                    (
+                        Request(id=f"r{i}-{j}", resources=req_res,
+                                preemptible=False),
+                        NOW + 60.0 * (i * batch + j),
+                        1.0,
+                    )
+                    for j in range(batch)
+                ])
+
+            flush(0)  # compile + first controller observation
+            ts = []
+            for i in range(1, flushes + 1):
+                t0 = time.perf_counter()
+                flush(i)
+                ts.append((time.perf_counter() - t0) * 1e6)
+            st = fleet.shortlist_stats
+            emit(
+                f"screen_adaptive_{name}_g{g}_s{s}_n{n}",
+                float(np.mean(ts)) / batch,
+                (
+                    f"per_decision;decisions={st['decisions']};"
+                    f"fallbacks={st['fallbacks']};final_m={st['shortlist']};"
+                    f"grows={st['grows']};shrinks={st['shrinks']}"
+                ),
+                p50_us=float(np.median(ts)) / batch,
+            )
+
+
 def _fused(state, req_res, m_keep, interpret):
     from repro.kernels.sched_screen import sched_screen
 
@@ -183,6 +322,26 @@ def run() -> None:
         emit(f"screen_slot_costs_k{k}_n{n}", t.mean_us,
              f"std={t.std_us:.1f}", p50_us=t.p50_us)
 
+        # Heterogeneous kind-table selection (the mixed-payment fast path):
+        # same column, each slot billed by its own kind through the
+        # branchless 4-way select.
+        rng = np.random.default_rng(k)
+        mixed_state = dataclasses.replace(
+            state,
+            inst_cost_kind=jnp.asarray(
+                rng.integers(-1, 4, (n, k)).astype(np.int32)
+            ),
+        )
+        mixed_j = jax.jit(
+            lambda st: fleet_slot_costs(st, jnp.float32(NOW), MIXED_POLICY)
+        )
+        t = time_call(
+            lambda: jax.block_until_ready(mixed_j(mixed_state)),
+            repeats=repeats,
+        )
+        emit(f"screen_slot_costs_mixed_k{k}_n{n}", t.mean_us,
+             f"std={t.std_us:.1f};kinds=4", p50_us=t.p50_us)
+
         inst_cost = costs_j(state)
         screen_j = jax.jit(screen_terms)
         t = time_call(
@@ -218,6 +377,8 @@ def run() -> None:
     # Device-sharded stage-1 scaling (multi-device runs only): K=8, the
     # acceptance geometry, swept over shard counts at ≥10^6 hosts.
     _bench_sharded(k=8, repeats=repeats)
+    # Adaptive-shortlist workload study (fallback-heavy vs calm fleets).
+    _bench_adaptive(repeats=repeats)
     write_bench_json("screen")
 
 

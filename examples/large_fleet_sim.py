@@ -14,9 +14,9 @@ stress run (the decision stays one fused array program — wall time scales
 linearly in fleet size, not in python object count).
 
 Pass ``n_shards > 1`` to partition the fleet host-major across that many
-devices and run the stage-1 screen per shard (``mesh=``) — decisions stay
-bit-identical to the single-device run.  On a CPU-only box, force host
-devices first:
+devices and run the stage-1 screen per shard
+(``SchedulerPolicy(mesh=...)``) — decisions stay bit-identical to the
+single-device run.  On a CPU-only box, force host devices first:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/large_fleet_sim.py 100000 2 8
@@ -27,7 +27,8 @@ import sys
 import time
 
 from repro.core import (
-    PeriodCost, SoASimulator, WorkloadSpec, fleet_mesh, make_uniform_fleet,
+    PeriodCost, SchedulerPolicy, SoASimulator, WorkloadSpec, fleet_mesh,
+    make_uniform_fleet,
 )
 from repro.core.types import VM_SPEC
 
@@ -54,9 +55,11 @@ def main() -> None:
         flavor_probs=(0.5, 0.5),
     )
     # K=8 slots: the small flavor packs up to 8 preemptible instances/host.
+    # One SchedulerPolicy carries every decision knob (mesh included).
     sim = SoASimulator(
         make_uniform_fleet(n_hosts, NODE), workload, seed=42,
-        cost_fn=PeriodCost(), k_slots=8, batch_max=128, mesh=mesh,
+        cost_fn=PeriodCost(), k_slots=8, batch_max=128,
+        policy=SchedulerPolicy(mesh=mesh),
     )
 
     # Fault story: 5% stragglers, plus a cascade of host failures that heal.

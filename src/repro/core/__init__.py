@@ -6,13 +6,19 @@ Vectorized beyond-paper implementation:
     jax_scheduler.JaxPreemptibleScheduler  (jit; optional Pallas hot path)
 """
 from .cluster import Cluster, make_uniform_fleet
-from .cost import CountCost, PeriodCost, RecomputeCost, RevenueCost
+from .cost import CountCost, MixedCost, PeriodCost, RecomputeCost, RevenueCost
 from .fleet_sharding import (
     fleet_mesh,
     merge_shortlists,
     pad_fleet_state,
     padded_hosts,
+    padded_hosts_for,
     shard_fleet_state,
+)
+from .policy import (
+    COST_KINDS,
+    PolicyDeprecationWarning,
+    SchedulerPolicy,
 )
 from .preemption import PreemptAck, PreemptionController
 from .scheduler import (
@@ -38,9 +44,10 @@ from .types import (
 
 __all__ = [
     "Cluster", "make_uniform_fleet",
-    "CountCost", "PeriodCost", "RecomputeCost", "RevenueCost",
+    "CountCost", "MixedCost", "PeriodCost", "RecomputeCost", "RevenueCost",
+    "COST_KINDS", "PolicyDeprecationWarning", "SchedulerPolicy",
     "fleet_mesh", "merge_shortlists", "pad_fleet_state", "padded_hosts",
-    "shard_fleet_state",
+    "padded_hosts_for", "shard_fleet_state",
     "PreemptAck", "PreemptionController",
     "FilterScheduler", "PreemptibleScheduler", "RetryScheduler", "SCHEDULER_REGISTRY",
     "Simulator", "SoASimulator", "WorkloadSpec",

@@ -100,6 +100,64 @@ class WeightedSumCost(CostFunction):
         return sum(m * c.cost(instances, now) for m, c in self.parts)
 
 
+class MixedCost(CostFunction):
+    """Heterogeneous per-instance billing: each instance is scored by ITS OWN
+    kind (``Instance.cost_kind``; ``None`` falls back to ``default``), and a
+    set's cost is the sum of those per-instance terms — still per-instance
+    additive, so the whole two-stage device pipeline applies unchanged.
+
+    This is the mixed spot/on-demand economics the paper's §5 payment-model
+    discussion (and INDIGO-DataCloud) motivates: one fleet can bill some
+    instances by partial period, others by count / lost revenue / recompute
+    work.  The python oracle of the device path's kind-table selection
+    (``SchedulerPolicy`` + the ``inst_cost_kind`` column); pinned
+    decision-for-decision by tests/test_mixed_cost.py.
+
+    ``kinds`` lists the extra kinds instances may carry beyond ``default``
+    (the policy's cost-kind table); an instance carrying a kind outside the
+    table is a configuration error and raises.
+    """
+
+    name = "mixed"
+
+    def __init__(
+        self,
+        default: str = "period",
+        kinds: Sequence[str] = (),
+        period_s: float = BILL_PERIOD_S,
+    ):
+        self.default = str(default)
+        self.kinds = tuple(str(k) for k in kinds)
+        self.period_s = float(period_s)
+        for kind in (self.default,) + self.kinds:
+            if kind not in COST_REGISTRY:
+                raise ValueError(
+                    f"unknown cost kind {kind!r}; known: {sorted(COST_REGISTRY)}"
+                )
+        self._table = {self.default, *self.kinds}
+        period_kw = {"period_s": self.period_s}
+        self._fns = {
+            kind: COST_REGISTRY[kind](
+                **(period_kw if kind in ("period", "revenue") else {})
+            )
+            for kind in self._table
+        }
+
+    def kind_of(self, instance: Instance) -> str:
+        kind = instance.cost_kind or self.default
+        if kind not in self._table:
+            raise ValueError(
+                f"instance {instance.id} bills by {kind!r}, which is not in "
+                f"this fleet's cost-kind table {sorted(self._table)}"
+            )
+        return kind
+
+    def cost(self, instances: Sequence[Instance], now: float) -> float:
+        return sum(
+            self._fns[self.kind_of(i)].cost([i], now) for i in instances
+        )
+
+
 COST_REGISTRY = {
     "period": PeriodCost,
     "count": CountCost,

@@ -67,6 +67,19 @@ def fleet_mesh(
     return Mesh(np.asarray(devices), (axis_name,))
 
 
+def padded_hosts_for(n_hosts: int, policy) -> int:
+    """``padded_hosts`` with the shard count and shortlist ceiling read off a
+    ``SchedulerPolicy`` (``policy.mesh`` must be set): the padded size that
+    lets every shard emit the largest top-M this policy can ever run —
+    the adaptive ceiling when the controller is on.  What ``SoAFleet``
+    pads sharded fleets to at build."""
+    if policy.mesh is None:
+        raise ValueError("padded_hosts_for needs a policy with mesh set")
+    return padded_hosts(
+        n_hosts, policy.mesh.size, m_keep=policy.max_shortlist() + 1
+    )
+
+
 def padded_hosts(n_hosts: int, n_shards: int, m_keep: int = 65) -> int:
     """Smallest padded fleet size that (a) divides evenly into ``n_shards``
     host-major blocks and (b) leaves every shard ≥ ``m_keep`` hosts, so each

@@ -82,9 +82,18 @@ from .cost import (
     BILL_PERIOD_S,
     CostFunction,
     CountCost,
+    MixedCost,
     PeriodCost,
     RecomputeCost,
     RevenueCost,
+)
+from .policy import (
+    COST_KIND_IDS,
+    DEFAULT_SHORTLIST,
+    LEGACY_DECISION_KNOBS,
+    LEGACY_STEP_KNOBS,
+    SchedulerPolicy,
+    resolve_policy,
 )
 from .screen_math import (
     EPS,
@@ -100,6 +109,7 @@ from .screen_math import (
     oem_pairs as _oem_pairs,  # noqa: F401  (back-compat re-export)
     raw_base_terms,
     screen_bounds_rows,
+    slot_cost_by_kind,
     sort_rows as _net_sort_cols,  # noqa: F401  (back-compat re-export)
     total_rows,
 )
@@ -112,9 +122,9 @@ from .types import (
     TerminationPlan,
 )
 
-#: Default stage-2 shortlist size when ``shortlist=None`` (auto).  Fleets not
-#: meaningfully larger than this keep the single-stage full enumeration.
-DEFAULT_SHORTLIST = 64
+# DEFAULT_SHORTLIST (the shortlist=None auto size; fleets not meaningfully
+# larger keep the single-stage full enumeration) lives in ``policy`` and is
+# re-exported here for back-compat.
 
 
 # ---------------------------------------------------------------------------
@@ -369,6 +379,7 @@ def _sharded_screen(
     mult: Tuple[float, float, float, float],
     require_free_slot: bool,
     m_cand: int,
+    use_fused: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Stage-1 screen per host-major shard under ``jax.shard_map``.
 
@@ -386,6 +397,19 @@ def _sharded_screen(
     Returns replicated ``(scores (S·(M+1),), idxs (S·(M+1),), consts (8,))``
     for ``fleet_sharding.merge_shortlists`` to reduce into the global
     shortlist.  Callers guarantee ``N % S == 0`` and ``N/S ≥ m_cand + 1``.
+
+    ``use_fused`` runs the shard-local screen through the fused Pallas
+    kernel instead of the jnp assembly, split at the constants barrier
+    (``sched_screen_consts`` → pmin/pmax merge → ``sched_screen_topm``): the
+    per-shard top-(M+1) then comes out of the kernel's on-chip bitonic fold,
+    computed from the SAME merged constants the jnp shards use, so the
+    forwarded (score, index) pairs are identical and the kernel and mesh
+    stop being mutually exclusive.  (One benign exception: a shard whose
+    non-shortlisted hosts are ALL invalid (score NEG_INF) may forward a
+    different — equally inert — witness index than the jnp masked argmax;
+    both are dominated by every real candidate and cannot change a
+    decision.)  On non-TPU backends the kernel runs in interpret mode
+    (parity-gated by tests/test_sharded_parity.py).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -397,32 +421,64 @@ def _sharded_screen(
                  inst_res, inst_cost, inst_valid,
                  req_res, req_preemptible, req_domain):
         t = free_f.shape[0]  # hosts per shard
-        valid, cost_lb, cost_ub, raw = _stage1_rows(
-            free_f, free_n, schedulable, domain, slow,
-            inst_res, inst_cost, inst_valid,
-            req_res, req_preemptible, req_domain, require_free_slot,
-        )
-        local = consts_of(mult, valid, cost_lb, cost_ub, *raw)
+        offset = (jax.lax.axis_index(axis) * t).astype(jnp.int32)
+        if use_fused:
+            from repro.kernels.sched_screen import (
+                sched_screen_consts,
+                sched_screen_topm,
+            )
+
+            kern_args = (
+                free_f, free_n, schedulable, domain, slow,
+                inst_res, inst_cost, inst_valid,
+                req_res, req_preemptible, req_domain,
+            )
+            local = ScreenConsts.unpack(sched_screen_consts(
+                *kern_args,
+                weigher_multipliers=mult,
+                require_free_slot=require_free_slot,
+            ))
+        else:
+            valid, cost_lb, cost_ub, raw = _stage1_rows(
+                free_f, free_n, schedulable, domain, slow,
+                inst_res, inst_cost, inst_valid,
+                req_res, req_preemptible, req_domain, require_free_slot,
+            )
+            local = consts_of(mult, valid, cost_lb, cost_ub, *raw)
         consts = ScreenConsts(
             jax.lax.pmin(local.c_lo, axis), jax.lax.pmax(local.c_hi, axis),
             jax.lax.pmin(local.over_lo, axis), jax.lax.pmax(local.over_hi, axis),
             jax.lax.pmin(local.pack_lo, axis), jax.lax.pmax(local.pack_hi, axis),
             jax.lax.pmin(local.strag_lo, axis), jax.lax.pmax(local.strag_hi, axis),
         )
-        base = base_from_consts(mult, *raw, consts)
-        ispan_ub = inv_span(consts.c_lo, consts.c_hi)
-        opt_cost = cost_lb if m_term >= 0 else cost_ub
-        omega_ub = omega_of(opt_cost, base, valid, consts, ispan_ub, m_term)
-        offset = (jax.lax.axis_index(axis) * t).astype(jnp.int32)
-        s_loc, p_loc = jax.lax.top_k(omega_ub, m_cand)
-        in_short = jnp.zeros((t,), bool).at[p_loc].set(True)
-        out_ub = jnp.where(in_short, jnp.float32(NEG_INF), omega_ub)
-        u_loc = jnp.max(out_ub)
-        ju_loc = jnp.argmax(out_ub).astype(jnp.int32) + offset
-        scores = jnp.concatenate([s_loc, u_loc[None]])
-        idxs = jnp.concatenate(
-            [p_loc.astype(jnp.int32) + offset, ju_loc[None]]
-        )
+        if use_fused:
+            # Kernel top-(M+1) from the MERGED constants; entry M is the
+            # shard's admissibility witness (best non-shortlisted omega_ub,
+            # lax.top_k tie order — the same candidate the masked argmax
+            # surfaces whenever it is a real score).
+            s_all, i_all = sched_screen_topm(
+                *kern_args,
+                consts=consts.pack(),
+                weigher_multipliers=mult,
+                require_free_slot=require_free_slot,
+                m_keep=m_cand + 1,
+            )
+            scores = s_all
+            idxs = i_all.astype(jnp.int32) + offset
+        else:
+            base = base_from_consts(mult, *raw, consts)
+            ispan_ub = inv_span(consts.c_lo, consts.c_hi)
+            opt_cost = cost_lb if m_term >= 0 else cost_ub
+            omega_ub = omega_of(opt_cost, base, valid, consts, ispan_ub, m_term)
+            s_loc, p_loc = jax.lax.top_k(omega_ub, m_cand)
+            in_short = jnp.zeros((t,), bool).at[p_loc].set(True)
+            out_ub = jnp.where(in_short, jnp.float32(NEG_INF), omega_ub)
+            u_loc = jnp.max(out_ub)
+            ju_loc = jnp.argmax(out_ub).astype(jnp.int32) + offset
+            scores = jnp.concatenate([s_loc, u_loc[None]])
+            idxs = jnp.concatenate(
+                [p_loc.astype(jnp.int32) + offset, ju_loc[None]]
+            )
         all_s = jax.lax.all_gather(scores, axis).reshape(-1)
         all_i = jax.lax.all_gather(idxs, axis).reshape(-1)
         return all_s, all_i, consts.pack()
@@ -464,37 +520,42 @@ def _decision_core(
     req_res: jax.Array,
     req_preemptible: jax.Array,
     req_domain: jax.Array,
-    use_pallas: bool,
-    weigher_multipliers: Tuple[float, float, float, float],
+    policy: SchedulerPolicy,
     require_free_slot: bool,
-    shortlist: Optional[int],
-    fused_screen: Optional[bool],
-    mesh=None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """The two-stage decision pipeline on raw SoA arrays (shared by the
     rebuild path, the persistent fast path, and the batched ``lax.scan``
-    path).
+    path).  ``policy`` is the ONE static knob bundle (``core.policy``); the
+    fields it reads here:
 
-    ``shortlist``: stage-2 candidate count M.  ``None`` = auto (64 at fleet
-    scale, full enumeration for small fleets); ``0`` disables pruning.  Any
-    value yields decisions bit-identical to the full enumeration — when the
-    admissibility check cannot certify the shortlist, the full path runs via
-    ``lax.cond``.
+    ``policy.shortlist``: stage-2 candidate count M.  ``None`` = auto (64 at
+    fleet scale, full enumeration for small fleets); ``0`` disables pruning.
+    Any value yields decisions bit-identical to the full enumeration — when
+    the admissibility check cannot certify the shortlist, the full path runs
+    via ``lax.cond``.
 
-    ``fused_screen``: run stage 1 through the fused Pallas kernel
+    ``policy.fused_screen``: run stage 1 through the fused Pallas kernel
     (``repro.kernels.sched_screen``) instead of the jnp assembly.  ``None``
     = auto (on for TPU backends, where it collapses the screen's HBM
     round-trips into one pass; off elsewhere — the kernel stays available in
     interpret mode for parity testing).  Both screens execute the shared
     ``screen_math`` definitions, so the decision is identical either way.
 
-    ``mesh``: a 1-D ``jax.sharding.Mesh`` (see ``fleet_sharding``) running
-    stage 1 per host-major shard under ``shard_map`` with a bit-exact
+    ``policy.mesh``: a 1-D ``jax.sharding.Mesh`` (see ``fleet_sharding``)
+    running stage 1 per host-major shard under ``shard_map`` with a bit-exact
     cross-shard merge — the fleet-scale path past the single-device ceiling.
-    Takes precedence over ``fused_screen`` for stage 1.  Requires the host
+    Combined with ``fused_screen=True`` the kernel runs *per shard* inside
+    ``shard_map`` (split at the constants barrier).  Requires the host
     count to divide across the mesh with ≥ M+1 hosts per shard (pad with
     ``fleet_sharding.padded_hosts``/``pad_fleet_state``); otherwise the
     unsharded screen runs (same decision, just not shard-parallel).
+
+    ``policy.use_pallas`` selects the stage-2 enumeration backend;
+    ``policy.weigher_multipliers`` the scoring policy.  The slot costs in
+    ``inst_cost`` are computed by the caller (``fleet_slot_costs`` for
+    persistent states — including the heterogeneous kind-table selection —
+    or frozen at build for ``SoAHostState``), so every screen backend
+    consumes identical cost arrays.
 
     Returns ``(host_idx, term_mask_idx, ok, fell_back, margin)``:
     ``fell_back`` flags decisions where the admissibility check could not
@@ -503,6 +564,10 @@ def _decision_core(
     pruning was off) — the signals the adaptive shortlist controller
     (``soa_fleet.AdaptiveShortlist``) steers M with.
     """
+    use_pallas = policy.use_pallas
+    mesh = policy.mesh
+    shortlist = policy.shortlist
+    fused_screen = policy.fused_screen
     n_hosts, k = inst_res.shape[0], inst_res.shape[1]
     masks = _masks_const(k)
     if shortlist is None:
@@ -510,7 +575,7 @@ def _decision_core(
     m_cand = min(int(shortlist), n_hosts)
     if fused_screen is None:
         fused_screen = jax.default_backend() == "tpu" and mesh is None
-    mult = weigher_multipliers
+    mult = policy.weigher_multipliers
     m_term = mult[1]
     use_mesh = (
         mesh is not None
@@ -565,7 +630,9 @@ def _decision_core(
         # Per-shard screen under shard_map; the merge reduces the gathered
         # per-shard (top-M + witness) pairs into the global shortlist with
         # lax.top_k's exact tie ordering, and the pmin/pmax-merged constants
-        # are bitwise equal to the fleet-wide folds.
+        # are bitwise equal to the fleet-wide folds.  fused_screen=True runs
+        # the per-shard screen through the Pallas kernel (no longer mutually
+        # exclusive with the mesh).
         from .fleet_sharding import merge_shortlists
 
         all_s, all_i, consts_arr = _sharded_screen(
@@ -574,6 +641,7 @@ def _decision_core(
             inst_res, inst_cost, inst_valid,
             req_res, req_preemptible, req_domain,
             mult, require_free_slot, m_cand,
+            use_fused=bool(fused_screen),
         )
         consts = ScreenConsts.unpack(consts_arr)
         cand, u, j_u = merge_shortlists(all_s, all_i, m_cand)
@@ -680,41 +748,50 @@ def _decision_core(
     return h, bm, ok, ~admissible, margin
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "use_pallas", "weigher_multipliers", "shortlist", "fused_screen",
-        "mesh",
-    ),
-)
+@functools.partial(jax.jit, static_argnames=("policy",))
+def _decision_entry(
+    state: SoAHostState,
+    req_res: jax.Array,
+    req_preemptible: jax.Array,
+    req_domain: jax.Array,
+    *,
+    policy: SchedulerPolicy,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    return _decision_core(
+        state.free_f, state.free_n, state.schedulable, state.domain,
+        state.slow, state.inst_res, state.inst_cost, state.inst_valid,
+        req_res, req_preemptible, req_domain,
+        policy, require_free_slot=False,
+    )[:3]
+
+
 def schedule_decision(
     state: SoAHostState,
     req_res: jax.Array,          # (D,)
     req_preemptible: jax.Array,  # () bool
     req_domain: jax.Array,       # () int32; -1 = any
-    use_pallas: bool = False,
-    weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
-    shortlist: Optional[int] = None,
-    fused_screen: Optional[bool] = None,
-    mesh=None,
+    policy: Optional[SchedulerPolicy] = None,
+    **legacy,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One scheduling decision.  Returns (host_idx, term_mask_idx, ok).
 
+    ``policy`` is the single static knob bundle (``SchedulerPolicy``):
     ``weigher_multipliers`` = (overcommit, termination_cost, packing,
-    straggler) — the first two reproduce the paper's evaluation policy.
+    straggler) — the first two reproduce the paper's evaluation policy;
     ``shortlist`` = stage-2 candidate count (None = auto, 0 = off);
     ``fused_screen`` = stage-1 backend (None = auto: fused Pallas screen on
-    TPU, jnp elsewhere); ``mesh`` = optional 1-D device mesh sharding stage 1
-    host-major (see ``fleet_sharding``); any setting returns the same
-    decision (see ``_decision_core``).
+    TPU, jnp elsewhere); ``mesh`` = optional 1-D device mesh sharding
+    stage 1 host-major (see ``fleet_sharding``); any setting returns the
+    same decision (see ``_decision_core``).  Equal policies hit one jit
+    cache entry.  The pre-policy loose kwargs still work as deprecated
+    shims for one release (``PolicyDeprecationWarning``).
     """
-    return _decision_core(
-        state.free_f, state.free_n, state.schedulable, state.domain,
-        state.slow, state.inst_res, state.inst_cost, state.inst_valid,
-        req_res, req_preemptible, req_domain,
-        use_pallas, weigher_multipliers, require_free_slot=False,
-        shortlist=shortlist, fused_screen=fused_screen, mesh=mesh,
-    )[:3]
+    policy = resolve_policy(
+        policy, legacy, LEGACY_DECISION_KNOBS, "schedule_decision"
+    )
+    return _decision_entry(
+        state, req_res, req_preemptible, req_domain, policy=policy
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -751,6 +828,8 @@ class SoAFleetState:
     inst_start: jax.Array   # (N, K)    slot start times
     inst_price: jax.Array   # (N, K)    slot price rates
     inst_ckpt: jax.Array    # (N, K)    last durable-checkpoint times
+    inst_cost_kind: jax.Array  # (N, K) int32 billing-kind id (COST_KIND_IDS;
+                               #        -1 = the policy's default kind)
     inst_valid: jax.Array   # (N, K)    bool
 
     @property
@@ -778,6 +857,11 @@ def jax_cost_params(cost_fn: CostFunction) -> Tuple[str, float]:
         return "revenue", cost_fn.period_s
     if isinstance(cost_fn, RecomputeCost):
         return "recompute", BILL_PERIOD_S
+    if isinstance(cost_fn, MixedCost):
+        raise ValueError(
+            "MixedCost is a kind TABLE, not a single kind; build the policy "
+            "with SchedulerPolicy.for_cost(cost_fn) instead"
+        )
     raise ValueError(
         f"cost function {cost_fn.name!r} has no device-resident equivalent; "
         "use the rebuild path (build_soa_state + schedule_decision)"
@@ -815,6 +899,47 @@ def slot_costs(
     raise ValueError(f"unknown cost kind {cost_kind!r}")
 
 
+def mixed_slot_costs(
+    policy: SchedulerPolicy,
+    inst_cost_kind: jax.Array,
+    inst_start: jax.Array,
+    inst_price: jax.Array,
+    inst_ckpt: jax.Array,
+    inst_res: jax.Array,
+    now: jax.Array,
+) -> jax.Array:
+    """Heterogeneous per-slot termination cost: each slot billed by ITS OWN
+    kind (``inst_cost_kind``; -1 = the policy default) through the branchless
+    ``screen_math.slot_cost_by_kind`` select.  Every branch is the verbatim
+    single-kind formula, so slot values are bit-identical to the homogeneous
+    paths kind-for-kind (the device half of the ``cost.MixedCost`` oracle)."""
+    eff = jnp.where(
+        inst_cost_kind >= 0, inst_cost_kind, jnp.int32(policy.default_kind_id)
+    )
+    return slot_cost_by_kind(
+        eff, inst_start, inst_price, inst_ckpt, inst_res[..., 0],
+        now, policy.period,
+    )
+
+
+def fleet_slot_costs(
+    state: "SoAFleetState", now: jax.Array, policy: SchedulerPolicy
+) -> jax.Array:
+    """Per-slot termination costs of a persistent fleet state under
+    ``policy``'s cost table.  Single-kind policies compile the exact
+    pre-policy program (the kind column is never read); mixed tables select
+    per slot."""
+    if not policy.mixed:
+        return slot_costs(
+            policy.cost_kind, state.inst_start, state.inst_price, now,
+            policy.period, inst_ckpt=state.inst_ckpt, inst_res=state.inst_res,
+        )
+    return mixed_slot_costs(
+        policy, state.inst_cost_kind, state.inst_start, state.inst_price,
+        state.inst_ckpt, state.inst_res, now,
+    )
+
+
 def build_fleet_state(
     hosts: Sequence[Host],
     k_slots: int = 8,
@@ -836,6 +961,7 @@ def build_fleet_state(
     inst_start = np.zeros((n, k_slots), np.float32)
     inst_price = np.ones((n, k_slots), np.float32)
     inst_ckpt = np.zeros((n, k_slots), np.float32)
+    inst_cost_kind = np.full((n, k_slots), -1, np.int32)
     inst_valid = np.zeros((n, k_slots), bool)
     slots: List[List[Optional[Instance]]] = []
     for i, pre in enumerate(pre_lists):
@@ -856,6 +982,13 @@ def build_fleet_state(
                 if inst.last_checkpoint is not None
                 else inst.start_time
             )
+            if inst.cost_kind is not None:
+                if inst.cost_kind not in COST_KIND_IDS:
+                    raise ValueError(
+                        f"instance {inst.id} bills by unknown cost kind "
+                        f"{inst.cost_kind!r}"
+                    )
+                inst_cost_kind[i, k] = COST_KIND_IDS[inst.cost_kind]
             inst_valid[i, k] = True
         slots.append(row)
     state = SoAFleetState(
@@ -868,6 +1001,7 @@ def build_fleet_state(
         inst_start=jnp.asarray(inst_start),
         inst_price=jnp.asarray(inst_price),
         inst_ckpt=jnp.asarray(inst_ckpt),
+        inst_cost_kind=jnp.asarray(inst_cost_kind),
         inst_valid=jnp.asarray(inst_valid),
     )
     return state, slots
@@ -889,6 +1023,7 @@ def _apply_decision(
     preemptible: jax.Array,   # () bool
     now: jax.Array,           # () float
     price: jax.Array,         # () float
+    cost_kind: jax.Array,     # () int32 kind id; -1 = policy default
 ) -> Tuple[SoAFleetState, jax.Array, jax.Array]:
     """Apply one decision: evacuate the winning subset, place the request.
 
@@ -929,63 +1064,57 @@ def _apply_decision(
         inst_ckpt=state.inst_ckpt.at[host_idx].set(
             jnp.where(onehot, now, state.inst_ckpt[host_idx])
         ),
+        inst_cost_kind=state.inst_cost_kind.at[host_idx].set(
+            jnp.where(
+                onehot,
+                jnp.asarray(cost_kind, jnp.int32),
+                state.inst_cost_kind[host_idx],
+            )
+        ),
     )
     return new_state, slot, kill
 
 
 def _step_core(
     state: SoAFleetState,
-    req_res, req_preemptible, req_domain, now, price,
-    cost_kind, period, use_pallas, weigher_multipliers, shortlist,
-    fused_screen, mesh,
+    req_res, req_preemptible, req_domain, now, price, req_cost_kind,
+    policy: SchedulerPolicy,
 ):
-    inst_cost = slot_costs(
-        cost_kind, state.inst_start, state.inst_price, now, period,
-        inst_ckpt=state.inst_ckpt, inst_res=state.inst_res,
-    )
+    inst_cost = fleet_slot_costs(state, now, policy)
     host_idx, mask_idx, ok, fell_back, margin = _decision_core(
         state.free_f, state.free_n, state.schedulable, state.domain,
         state.slow, state.inst_res, inst_cost, state.inst_valid,
         req_res, req_preemptible, req_domain,
-        use_pallas, weigher_multipliers, require_free_slot=True,
-        shortlist=shortlist, fused_screen=fused_screen, mesh=mesh,
+        policy, require_free_slot=True,
     )
     state, slot, kill = _apply_decision(
-        state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price
+        state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price,
+        req_cost_kind,
     )
     return state, (host_idx, slot, ok, kill, fell_back, margin)
 
 
-_STEP_STATICS = (
-    "cost_kind", "use_pallas", "weigher_multipliers", "shortlist",
-    "fused_screen", "mesh",
-)
+_STEP_STATICS = ("policy",)
 
 
 def _step_entry(state, req_res, req_preemptible, req_domain, now, price,
-                period, *, cost_kind, use_pallas, weigher_multipliers,
-                shortlist, fused_screen, mesh):
+                req_cost_kind, *, policy):
     return _step_core(
         state, req_res, req_preemptible, req_domain, now, price,
-        cost_kind, period, use_pallas, weigher_multipliers, shortlist,
-        fused_screen, mesh,
+        req_cost_kind, policy,
     )
 
 
 def _many_entry(state, req_res, req_preemptible, req_domain, req_now,
-                req_price, period, *, cost_kind, use_pallas,
-                weigher_multipliers, shortlist, fused_screen, mesh):
+                req_price, req_cost_kind, *, policy):
     def body(st, xs):
-        res, pre, dom, now, price = xs
-        return _step_core(
-            st, res, pre, dom, now, price,
-            cost_kind, period, use_pallas, weigher_multipliers, shortlist,
-            fused_screen, mesh,
-        )
+        res, pre, dom, now, price, kind = xs
+        return _step_core(st, res, pre, dom, now, price, kind, policy)
 
     return jax.lax.scan(
         body, state,
-        (req_res, req_preemptible, req_domain, req_now, req_price),
+        (req_res, req_preemptible, req_domain, req_now, req_price,
+         req_cost_kind),
     )
 
 
@@ -1006,14 +1135,10 @@ def schedule_step(
     req_domain: jax.Array,       # () int32; -1 = any
     now: jax.Array,              # () float
     price: jax.Array,            # () float
-    cost_kind: str = "period",
-    period: float = BILL_PERIOD_S,
-    use_pallas: bool = False,
-    weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
-    shortlist: Optional[int] = None,
-    fused_screen: Optional[bool] = None,
-    mesh=None,
-    donate: bool = True,
+    policy: Optional[SchedulerPolicy] = None,
+    req_cost_kind: jax.Array = -1,  # () int32 kind id; -1 = policy default
+    donate: Optional[bool] = None,
+    **legacy,
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Fused decide-and-apply on the persistent state (one dispatch/event).
 
@@ -1021,20 +1146,31 @@ def schedule_step(
     6-tuple: the winning host index, the slot a preemptible placement landed
     in, whether the request was placed at all, the (K,) bool mask of slots
     evacuated on the winner, and the two shortlist-health signals (see
-    ``_decision_core``) the adaptive controller consumes.  With
-    ``donate=True`` (default) the input state's buffers are reused for the
-    output — the caller must not touch ``state`` afterwards; pass
-    ``donate=False`` to keep the input alive (oracle comparisons, repeated
-    benchmarks).  ``mesh`` shards stage 1 host-major across devices (the
-    state should already be padded + placed via ``fleet_sharding``).
+    ``_decision_core``) the adaptive controller consumes.
+
+    ``policy`` (a ``SchedulerPolicy``) is the one static knob bundle: cost
+    table + period, weigher multipliers, shortlist M, and the execution
+    backends; equal policies share a single compile-cache entry.  The old
+    loose kwargs (``cost_kind``/``period``/``shortlist``/...) remain as
+    deprecated shims for one release.  ``req_cost_kind`` tags the billing
+    kind recorded on a preemptible placement (``COST_KIND_IDS``; -1 = the
+    policy's default) — the per-request half of the mixed-payment model.
+
+    With ``donate`` unset the policy's ``donate`` field applies (default
+    True): the input state's buffers are reused for the output — the caller
+    must not touch ``state`` afterwards; pass ``donate=False`` to keep the
+    input alive (oracle comparisons, repeated benchmarks).  ``policy.mesh``
+    shards stage 1 host-major across devices (the state should already be
+    padded + placed via ``fleet_sharding``).
     """
+    policy = resolve_policy(policy, legacy, LEGACY_STEP_KNOBS, "schedule_step")
+    if donate is None:
+        donate = policy.donate
     fn = _step_donated if donate else _step_kept
     return fn(
         state, req_res, req_preemptible, req_domain,
         jnp.asarray(now, jnp.float32), jnp.asarray(price, jnp.float32),
-        period, cost_kind=cost_kind, use_pallas=use_pallas,
-        weigher_multipliers=tuple(weigher_multipliers), shortlist=shortlist,
-        fused_screen=fused_screen, mesh=mesh,
+        jnp.asarray(req_cost_kind, jnp.int32), policy=policy,
     )
 
 
@@ -1045,14 +1181,10 @@ def schedule_many(
     req_domain: jax.Array,       # (B,) int32; -1 = any
     req_now: jax.Array,          # (B,) float — each request's arrival time
     req_price: jax.Array,        # (B,) float
-    cost_kind: str = "period",
-    period: float = BILL_PERIOD_S,
-    use_pallas: bool = False,
-    weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
-    shortlist: Optional[int] = None,
-    fused_screen: Optional[bool] = None,
-    mesh=None,
-    donate: bool = True,
+    policy: Optional[SchedulerPolicy] = None,
+    req_cost_kind: Optional[jax.Array] = None,  # (B,) int32; None = defaults
+    donate: Optional[bool] = None,
+    **legacy,
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Run a request batch through ``lax.scan`` carrying the fleet state, so
     each decision sees every earlier placement/termination in the batch —
@@ -1063,16 +1195,20 @@ def schedule_many(
     ``schedule_step``.  ``fell_back.sum()`` is the batch's
     admissibility-fallback counter and ``margin`` the per-decision headroom
     — the signals the adaptive shortlist controller steers M with.
-    Donation and ``mesh`` semantics as in ``schedule_step`` (the sharded
-    stage 1 runs inside the scan body; the carried state stays sharded).
+    ``policy`` / ``req_cost_kind`` (per-request billing kinds) / ``donate``
+    semantics as in ``schedule_step`` (the sharded stage 1 runs inside the
+    scan body; the carried state stays sharded).
     """
+    policy = resolve_policy(policy, legacy, LEGACY_STEP_KNOBS, "schedule_many")
+    if donate is None:
+        donate = policy.donate
+    if req_cost_kind is None:
+        req_cost_kind = jnp.full(jnp.shape(req_now), -1, jnp.int32)
     fn = _many_donated if donate else _many_kept
     return fn(
         state, req_res, req_preemptible, req_domain,
         jnp.asarray(req_now, jnp.float32), jnp.asarray(req_price, jnp.float32),
-        period, cost_kind=cost_kind, use_pallas=use_pallas,
-        weigher_multipliers=tuple(weigher_multipliers), shortlist=shortlist,
-        fused_screen=fused_screen, mesh=mesh,
+        jnp.asarray(req_cost_kind, jnp.int32), policy=policy,
     )
 
 
@@ -1084,6 +1220,7 @@ def apply_placement(
     preemptible: jax.Array,
     now: jax.Array,
     price: jax.Array = 1.0,
+    cost_kind: jax.Array = -1,  # () int32 kind id; -1 = policy default
 ) -> Tuple[SoAFleetState, jax.Array]:
     """Unconditionally place a request on ``host_idx`` (caller checked
     feasibility — e.g. re-applying a recorded decision, or initializing
@@ -1119,6 +1256,13 @@ def apply_placement(
         ),
         inst_ckpt=state.inst_ckpt.at[host_idx].set(
             jnp.where(onehot, jnp.asarray(now, jnp.float32), state.inst_ckpt[host_idx])
+        ),
+        inst_cost_kind=state.inst_cost_kind.at[host_idx].set(
+            jnp.where(
+                onehot,
+                jnp.asarray(cost_kind, jnp.int32),
+                state.inst_cost_kind[host_idx],
+            )
         ),
     )
     return state, slot
@@ -1233,23 +1377,22 @@ class JaxPreemptibleScheduler:
         self,
         cost_fn: Optional[CostFunction] = None,
         k_slots: int = 8,
-        use_pallas: bool = False,
-        weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
-        shortlist: Optional[int] = None,
-        fused_screen: Optional[bool] = None,
-        mesh=None,
+        policy: Optional[SchedulerPolicy] = None,
+        **legacy,
     ):
-        self.cost_fn = cost_fn or PeriodCost()
-        self.k_slots = k_slots
-        self.use_pallas = use_pallas
-        self.weigher_multipliers = weigher_multipliers
-        self.shortlist = shortlist
-        self.fused_screen = fused_screen
-        #: optional 1-D device mesh for the sharded stage-1 screen.  The
-        #: rebuild path does not pad, so sharding only engages when the host
-        #: count already divides the mesh with ≥ M+1 hosts per shard; the
+        #: the one static knob bundle; ``policy.mesh`` note: the rebuild
+        #: path does not pad, so sharding only engages when the host count
+        #: already divides the mesh with ≥ M+1 hosts per shard; the
         #: persistent path (SoAFleet(mesh=...)) pads automatically.
-        self.mesh = mesh
+        self.policy = resolve_policy(
+            policy, legacy, LEGACY_DECISION_KNOBS, "JaxPreemptibleScheduler",
+            cost_fn=cost_fn,
+        )
+        #: python cost module used to translate winning masks back into
+        #: ``TerminationPlan`` costs (and to freeze slot costs at rebuild);
+        #: derived from the policy's cost table when not given explicitly.
+        self.cost_fn = cost_fn or self.policy.make_cost_fn()
+        self.k_slots = k_slots
 
     # -- full pipeline from python objects ------------------------------------
     def schedule(
@@ -1293,9 +1436,5 @@ class JaxPreemptibleScheduler:
             req_res,
             jnp.asarray(preemptible),
             jnp.asarray(domain, jnp.int32),
-            use_pallas=self.use_pallas,
-            weigher_multipliers=self.weigher_multipliers,
-            shortlist=self.shortlist,
-            fused_screen=self.fused_screen,
-            mesh=self.mesh,
+            policy=self.policy,
         )

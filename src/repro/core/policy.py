@@ -1,0 +1,297 @@
+"""``SchedulerPolicy`` — the ONE static argument of the jit'd pipeline.
+
+Every decision path (``schedule_decision``/``schedule_step``/``schedule_many``,
+``SoAFleet``, ``SoASimulator``, ``JaxPreemptibleScheduler``, the sharded
+screen) used to thread the same knob set — cost kind, billing period, weigher
+multipliers, shortlist size, execution-backend switches — as loose static
+kwargs through nine signatures that had to change in lockstep for every new
+knob.  The policy object collapses that plumbing: one frozen, hashable
+dataclass carried as a single ``static_argnames`` entry, validated once at
+construction instead of mid-trace.
+
+Contracts the jit'd paths rely on:
+
+* **Frozen + hashable + value-equal.**  Two policies built from the same
+  field values are ``==`` and hash alike, so they hit the SAME jit cache
+  entry — constructing a fresh (equal) policy per call never retraces
+  (pinned by tests/test_policy.py::test_equal_policies_share_compile_cache).
+  Every field must therefore be hashable: tuples not lists, a
+  ``jax.sharding.Mesh`` (hashable by device layout) not a device list.
+* **Static.**  Policy fields select *which program is compiled* (multiplier
+  gating, shortlist size, cost-kind table, screen backend); none of them is
+  a traced value.  Changing any field compiles a new executable.
+* **Decision-neutral execution knobs.**  ``use_pallas`` / ``fused_screen``
+  / ``mesh`` / ``shortlist`` / ``donate`` select which path computes the
+  answer, never the answer itself (the parity suites pin every combination
+  bit-identical).  ``weigher_multipliers`` and the cost table DO define the
+  answer — they are the provider's policy proper.
+
+The **cost-kind table** (``cost_kind`` + ``cost_kinds``) is what makes mixed
+payment models expressible on the fast path: a fleet may bill some instances
+by partial period, others by count / lost revenue / recompute work, chosen
+per instance via the ``inst_cost_kind`` column of ``SoAFleetState`` (see
+``jax_scheduler.mixed_slot_costs`` and ``cost.MixedCost``, the python
+oracle).  A single-kind policy compiles the exact pre-policy program — no
+kind column is read and decisions are bit-identical to the old loose-kwarg
+path.
+
+Legacy loose kwargs are accepted for one release via thin shims that build
+the equivalent policy and raise :class:`PolicyDeprecationWarning` — CI runs
+tier-1 with that category promoted to an error, so in-repo code is fully
+migrated and only external callers ride the shims.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Tuple
+
+from .cost import (
+    BILL_PERIOD_S,
+    CostFunction,
+    CountCost,
+    MixedCost,
+    PeriodCost,
+    RecomputeCost,
+    RevenueCost,
+)
+
+#: Canonical device-resident cost kinds; position = the kind id stored in
+#: ``SoAFleetState.inst_cost_kind`` (-1 there = "use the policy default").
+COST_KINDS: Tuple[str, ...] = ("period", "count", "revenue", "recompute")
+COST_KIND_IDS = {kind: i for i, kind in enumerate(COST_KINDS)}
+
+#: Default stage-2 shortlist size when ``shortlist=None`` (auto).  Lives here
+#: (not ``jax_scheduler``) so the policy can resolve its own ceiling without
+#: an import cycle; ``jax_scheduler`` re-exports it.
+DEFAULT_SHORTLIST = 64
+
+
+class PolicyDeprecationWarning(DeprecationWarning):
+    """Raised when a deprecated loose decision kwarg is used instead of
+    ``SchedulerPolicy``.  A distinct category so CI can promote exactly
+    these to errors (`-W error::repro.core.policy.PolicyDeprecationWarning`)
+    without tripping on third-party DeprecationWarnings."""
+
+
+def _is_pow2(x: int) -> bool:
+    return x > 0 and (x & (x - 1)) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerPolicy:
+    """Frozen, hashable bundle of every static decision knob.
+
+    Fields (see docs/api.md for the full table):
+
+    * ``weigher_multipliers`` — (overcommit, termination_cost, packing,
+      straggler); the first two reproduce the paper's evaluation policy.
+    * ``cost_kind`` — the DEFAULT billing kind: used for every slot whose
+      ``inst_cost_kind`` is -1, and recorded on new placements whose request
+      carries no explicit kind.
+    * ``cost_kinds`` — extra kinds instances of this fleet may carry
+      (the mixed-payment table).  Empty = homogeneous fleet, which compiles
+      the exact single-kind program (bit-identical to the pre-policy path).
+    * ``period`` — billing quantum (seconds) of the ``period``/``revenue``
+      kinds.
+    * ``shortlist`` — stage-2 candidate count M (None = auto, 0 = full
+      enumeration).
+    * ``adaptive_shortlist`` / ``adaptive_bounds`` — host-side controller
+      resizing M between flushes within [m_min, m_max] (powers of two).
+    * ``use_pallas`` / ``fused_screen`` / ``mesh`` — execution backends
+      (stage-2 kernel, stage-1 kernel, device sharding).  With both
+      ``fused_screen=True`` and ``mesh`` set, the fused kernel runs *per
+      shard* inside ``shard_map``.
+    * ``donate`` — donate input state buffers on step/many (per-call
+      ``donate=`` overrides).
+    """
+
+    weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0)
+    cost_kind: str = "period"
+    cost_kinds: Tuple[str, ...] = ()
+    period: float = BILL_PERIOD_S
+    shortlist: Optional[int] = None
+    adaptive_shortlist: bool = False
+    adaptive_bounds: Tuple[int, int] = (16, 256)
+    use_pallas: bool = False
+    fused_screen: Optional[bool] = None
+    mesh: object = None  # Optional[jax.sharding.Mesh]; hashable by layout
+    donate: bool = True
+
+    def __post_init__(self):
+        # Tuple-normalize sequence fields so list-passing callers still get a
+        # hashable (and value-equal) policy instead of a mid-trace TypeError.
+        mult = tuple(float(m) for m in self.weigher_multipliers)
+        if len(mult) != 4:
+            raise ValueError(
+                f"weigher_multipliers needs 4 entries (overcommit, "
+                f"termination_cost, packing, straggler); got {len(mult)}"
+            )
+        object.__setattr__(self, "weigher_multipliers", mult)
+        kinds = tuple(str(k) for k in self.cost_kinds)
+        object.__setattr__(self, "cost_kinds", kinds)
+        for kind in (self.cost_kind,) + kinds:
+            if kind not in COST_KIND_IDS:
+                raise ValueError(
+                    f"unknown cost kind {kind!r}; device-resident kinds are "
+                    f"{COST_KINDS} (others must use the rebuild path)"
+                )
+        if not self.period > 0:
+            raise ValueError(f"period must be positive, got {self.period}")
+        if self.shortlist is not None and int(self.shortlist) < 0:
+            raise ValueError(f"shortlist must be >= 0 or None, got {self.shortlist}")
+        if self.shortlist is not None:
+            object.__setattr__(self, "shortlist", int(self.shortlist))
+        lo, hi = (int(b) for b in self.adaptive_bounds)
+        if not (_is_pow2(lo) and _is_pow2(hi)):
+            raise ValueError(
+                f"adaptive_bounds must be powers of two (M doubles/halves "
+                f"between them), got {self.adaptive_bounds}"
+            )
+        if lo > hi:
+            raise ValueError(f"adaptive_bounds m_min > m_max: {self.adaptive_bounds}")
+        object.__setattr__(self, "adaptive_bounds", (lo, hi))
+        if self.adaptive_shortlist and self.shortlist == 0:
+            # The starting M itself may sit outside adaptive_bounds (the
+            # pre-policy controller accepted that and clamps as it moves);
+            # only the genuinely contradictory setting is rejected.
+            raise ValueError(
+                "adaptive_shortlist=True contradicts shortlist=0 (explicit "
+                "full enumeration); pass shortlist=None or a starting M"
+            )
+        if self.fused_screen is not None and not isinstance(self.fused_screen, bool):
+            raise ValueError("fused_screen must be None (auto) or a bool")
+        if self.mesh is not None and len(getattr(self.mesh, "axis_names", ())) != 1:
+            raise ValueError(
+                "mesh must be a 1-D jax.sharding.Mesh (see fleet_sharding.fleet_mesh)"
+            )
+
+    # -- cost-kind table ------------------------------------------------------
+    @property
+    def kind_table(self) -> Tuple[str, ...]:
+        """Distinct kinds this fleet may bill, default first."""
+        extra = tuple(k for k in dict.fromkeys(self.cost_kinds) if k != self.cost_kind)
+        return (self.cost_kind,) + extra
+
+    @property
+    def mixed(self) -> bool:
+        """True when more than one billing kind is in play (the kind column
+        is read; single-kind policies never touch it)."""
+        return len(self.kind_table) > 1
+
+    @property
+    def default_kind_id(self) -> int:
+        return COST_KIND_IDS[self.cost_kind]
+
+    def max_shortlist(self) -> int:
+        """Largest M a decision under this policy can run with — the adaptive
+        ceiling when the controller is on; what sharded fleets pad for."""
+        if self.adaptive_shortlist:
+            return self.adaptive_bounds[1]
+        return DEFAULT_SHORTLIST if self.shortlist is None else self.shortlist
+
+    # -- python cost-module bridge --------------------------------------------
+    @classmethod
+    def for_cost(cls, cost_fn: Optional[CostFunction], **overrides) -> "SchedulerPolicy":
+        """Build a policy whose cost table mirrors a python cost module
+        (the inverse of :meth:`make_cost_fn`).  ``MixedCost`` maps to a
+        multi-kind table; the four single-kind modules map to themselves."""
+        cost_fn = cost_fn or PeriodCost()
+        if isinstance(cost_fn, MixedCost):
+            fields = dict(
+                cost_kind=cost_fn.default,
+                cost_kinds=tuple(cost_fn.kinds),
+                period=cost_fn.period_s,
+            )
+        elif isinstance(cost_fn, PeriodCost):
+            fields = dict(cost_kind="period", period=cost_fn.period_s)
+        elif isinstance(cost_fn, CountCost):
+            fields = dict(cost_kind="count")
+        elif isinstance(cost_fn, RevenueCost):
+            fields = dict(cost_kind="revenue", period=cost_fn.period_s)
+        elif isinstance(cost_fn, RecomputeCost):
+            fields = dict(cost_kind="recompute")
+        else:
+            raise ValueError(
+                f"cost function {cost_fn.name!r} has no device-resident "
+                "equivalent; use the rebuild path (build_soa_state + "
+                "schedule_decision)"
+            )
+        fields.update(overrides)
+        return cls(**fields)
+
+    def make_cost_fn(self) -> CostFunction:
+        """The python cost module equivalent to this policy's cost table —
+        the oracle the parity tests rebuild states with."""
+        if self.mixed:
+            return MixedCost(
+                default=self.cost_kind, kinds=self.cost_kinds, period_s=self.period
+            )
+        return {
+            "period": lambda: PeriodCost(self.period),
+            "count": CountCost,
+            "revenue": lambda: RevenueCost(self.period),
+            "recompute": RecomputeCost,
+        }[self.cost_kind]()
+
+
+#: Loose kwargs each legacy entry point may still pass (mapped 1:1 onto
+#: policy fields).  ``cost_kind``/``period`` only exist on the fleet-state
+#: paths; the rest are shared.
+LEGACY_DECISION_KNOBS = (
+    "use_pallas", "weigher_multipliers", "shortlist", "fused_screen", "mesh",
+)
+LEGACY_STEP_KNOBS = LEGACY_DECISION_KNOBS + ("cost_kind", "period")
+LEGACY_FLEET_KNOBS = LEGACY_DECISION_KNOBS + ("adaptive_shortlist",)
+
+
+def resolve_policy(
+    policy: Optional[SchedulerPolicy],
+    legacy: dict,
+    allowed: Tuple[str, ...],
+    where: str,
+    cost_fn: Optional[CostFunction] = None,
+) -> SchedulerPolicy:
+    """Shim glue for the one-release deprecation window: fold loose legacy
+    kwargs into a ``SchedulerPolicy`` (warning), or pass a given policy
+    through.  Mixing both is an error — there is one source of truth."""
+    unknown = set(legacy) - set(allowed)
+    if unknown:
+        raise TypeError(f"{where}() got unexpected keyword(s) {sorted(unknown)}")
+    if legacy and policy is not None:
+        raise TypeError(
+            f"{where}(): pass either policy= or the deprecated loose kwargs "
+            f"{sorted(legacy)}, not both"
+        )
+    if legacy:
+        warnings.warn(
+            f"{where}({', '.join(sorted(legacy))}=...) is deprecated; pass "
+            f"policy=SchedulerPolicy(...) instead (one static argument, "
+            "validated at construction)",
+            PolicyDeprecationWarning,
+            stacklevel=3,
+        )
+        return SchedulerPolicy.for_cost(cost_fn, **legacy)
+    if policy is not None:
+        if not isinstance(policy, SchedulerPolicy):
+            raise TypeError(f"{where}(): policy must be a SchedulerPolicy")
+        if cost_fn is not None:
+            # Pre-policy, the billing kind was ALWAYS derived from cost_fn;
+            # a policy that bills differently from an explicitly-passed
+            # cost_fn would silently change decisions mid-migration — make
+            # the disagreement loud instead.
+            derived = SchedulerPolicy.for_cost(cost_fn)
+            if (
+                derived.cost_kind != policy.cost_kind
+                or set(derived.kind_table) != set(policy.kind_table)
+                or derived.period != policy.period
+            ):
+                raise ValueError(
+                    f"{where}(): cost_fn={cost_fn.name!r} bills "
+                    f"{derived.kind_table} @ period={derived.period} but the "
+                    f"given policy bills {policy.kind_table} @ "
+                    f"period={policy.period}; drop cost_fn or build the "
+                    "policy with SchedulerPolicy.for_cost(cost_fn, ...)"
+                )
+        return policy
+    return SchedulerPolicy.for_cost(cost_fn)

@@ -261,6 +261,38 @@ def omega_of(
     return jnp.where(valid, w, NEG_INF)
 
 
+def slot_cost_by_kind(
+    kind_eff: jax.Array,   # int32, effective kind id per slot (no -1 left)
+    start: jax.Array,      # slot start times
+    price: jax.Array,      # slot price rates
+    ckpt: jax.Array,       # last durable-checkpoint times
+    res0: jax.Array,       # slot resource dim 0 (chips/vcpus by convention)
+    now: jax.Array,
+    period,
+) -> jax.Array:
+    """Heterogeneous per-slot termination cost: a branchless ``where`` chain
+    selecting among the four device-resident kinds by the slot's kind id
+    (0=period, 1=count, 2=revenue, 3=recompute — ``policy.COST_KIND_IDS``).
+
+    Each branch is the VERBATIM single-kind formula from
+    ``jax_scheduler.slot_costs`` evaluated fleet-wide and then selected, so a
+    slot billed by kind ``k`` gets bit-identical cost to a homogeneous
+    kind-``k`` fleet — which is what keeps mixed-kind decisions bit-exact
+    against the python ``MixedCost`` oracle on every backend (the select
+    happens before the screen, so jnp / fused-kernel / sharded paths all
+    consume the same cost array).
+
+    Elementwise over any layout — callers pass (N, K) fleets or slot-major
+    kernel rows alike.
+    """
+    part = floor_mod(now - start, period)
+    cost = part                                               # kind 0: period
+    cost = jnp.where(kind_eff == 1, jnp.ones_like(start), cost)  # count
+    cost = jnp.where(kind_eff == 2, part / period * price, cost)  # revenue
+    lost = jnp.maximum(0.0, now - ckpt) * jnp.maximum(1.0, res0)
+    return jnp.where(kind_eff == 3, lost, cost)               # recompute
+
+
 def floor_mod(x: jax.Array, period) -> jax.Array:
     """``x % period`` for non-negative x via floor — an order of magnitude
     faster than ``lax.rem``'s fmod on XLA CPU, where fmod was one of the

@@ -215,10 +215,13 @@ class SoASimulator:
     transition, and runs of consecutive arrivals are batched through one
     jit-compiled ``lax.scan`` (``schedule_many``) so consecutive decisions
     still see each other's placements exactly.  Python ``Host`` objects are
-    materialized only on demand (``fleet.sync_hosts()``).  Pass ``mesh`` (a
-    1-D device mesh, see ``fleet_sharding``) to shard the fleet state
-    host-major across devices — the whole event loop then runs on the
-    sharded stage-1 screen, bit-identical to the single-device run.
+    materialized only on demand (``fleet.sync_hosts()``).  Decision knobs
+    ride on one ``SchedulerPolicy`` (``policy=``; the pre-policy loose
+    kwargs remain as deprecated shims) — e.g. ``policy.mesh`` (a 1-D device
+    mesh, see ``fleet_sharding``) shards the fleet state host-major across
+    devices and the whole event loop then runs on the sharded stage-1
+    screen, bit-identical to the single-device run; a mixed
+    ``policy.cost_kinds`` table bills each instance by its own kind.
 
     Behavioral deltas vs ``Simulator`` (documented, both benign):
       * lifetimes are drawn at arrival time (not on placement success), so
@@ -235,12 +238,8 @@ class SoASimulator:
         cost_fn: Optional[CostFunction] = None,
         k_slots: int = 8,
         batch_max: int = 64,
-        use_pallas: bool = False,
-        weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
-        shortlist: Optional[int] = None,
-        fused_screen: Optional[bool] = None,
-        mesh=None,
-        adaptive_shortlist: bool = False,
+        policy=None,
+        **legacy,
     ):
         self.fleet = (
             hosts
@@ -249,12 +248,8 @@ class SoASimulator:
                 hosts,
                 cost_fn=cost_fn,
                 k_slots=k_slots,
-                use_pallas=use_pallas,
-                weigher_multipliers=weigher_multipliers,
-                shortlist=shortlist,
-                fused_screen=fused_screen,
-                mesh=mesh,
-                adaptive_shortlist=adaptive_shortlist,
+                policy=policy,
+                **legacy,
             )
         )
         self.workload = workload

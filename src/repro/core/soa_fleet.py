@@ -20,7 +20,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cost import CostFunction, PeriodCost
+from .cost import CostFunction
 from .jax_scheduler import (
     DEFAULT_SHORTLIST,
     SoAFleetState,
@@ -29,11 +29,17 @@ from .jax_scheduler import (
     apply_host_failure,
     apply_termination,
     build_fleet_state,
-    jax_cost_params,
+    jax_cost_params,  # noqa: F401  (back-compat re-export)
     schedule_many,
     schedule_step,
     set_schedulable,
     set_slow_factor,
+)
+from .policy import (
+    COST_KIND_IDS,
+    LEGACY_FLEET_KNOBS,
+    SchedulerPolicy,
+    resolve_policy,
 )
 from .types import Host, Instance, Request, Resources
 
@@ -60,8 +66,28 @@ class AdaptiveShortlist:
         put one weigher term in [0, 1], so 0.25 is "a quarter of a term of
         headroom beyond every non-shortlisted bound").
 
-    M stays a power of two in [m_min, m_max], so the jit cache holds at most
-    log2(m_max/m_min)+1 decision executables per request shape.
+    M stays a power of two in [m_min, m_max] (``SchedulerPolicy.
+    adaptive_bounds``, validated at construction), so the jit cache holds at
+    most log2(m_max/m_min)+1 decision executables per request shape.
+
+    Defaults (grow_after=2, shrink_after=8, wide_margin=0.25) come from the
+    ``screen_adaptive_*`` workload study in benchmarks/bench_screen.py
+    (rows in benchmarks/results/BENCH_screen.json), which sweeps the
+    thresholds over two extreme synthetic fleets at N=4096:
+
+      * *fallback-heavy* (every host's stage-1 bound undershoots, so small
+        M can never certify a winner): grow_after ≤ 2 escapes the fallback
+        storm within two flushes — 29/104 decisions fell back before the
+        controller reached an M that certifies, then zero after — while
+        grow_after=4 never grew within a 100-decision horizon and kept
+        paying the full O(N·2^K) enumeration;
+      * *calm sparse-feasibility* (the whole viable pool fits in the
+        shortlist, margins effectively infinite): shrink_after=8 steps M
+        down steadily (64→32 over ~100 decisions) without thrash, while
+        shrink_after=4 reaches the floor twice as fast but — like
+        grow_after=1 — pays a fresh XLA compile per M move (~35 ms/flush
+        amortized on the study box vs ~1 ms at the defaults), which is the
+        real cost of a twitchy controller.
 
     CPU caveat: XLA CPU rewrites ``lax.top_k`` to its fast TopK custom-call
     only for k ≤ 64, so on CPU backends growing past M=64 adds a full fleet
@@ -121,20 +147,20 @@ class SoAOutcome:
 class SoAFleet:
     """Incremental fleet view: device arrays + id bookkeeping.
 
-    Decision knobs (all threaded straight through to ``jax_scheduler``; every
-    combination produces bit-identical decisions — they select *which path
-    computes the answer*, never the answer itself):
+    All decision knobs live on ONE ``SchedulerPolicy`` (``core.policy``)
+    threaded straight through to ``jax_scheduler`` as the single static jit
+    argument.  The execution knobs (``shortlist``, ``fused_screen``,
+    ``mesh``, ``use_pallas``, ``adaptive_shortlist``) select *which path
+    computes the answer*, never the answer itself; the weigher multipliers
+    and the cost-kind table define the provider policy proper.  A mixed
+    cost table (``policy.cost_kinds`` non-empty / ``cost_fn=MixedCost``)
+    bills each instance by its own ``cost_kind`` via the state's
+    ``inst_cost_kind`` column.
 
-      * ``shortlist`` — stage-2 candidate count M (None = auto, 0 = full
-        enumeration);
-      * ``fused_screen`` — stage 1 via the fused Pallas kernel (None = auto:
-        on for TPU);
-      * ``mesh`` — a 1-D device mesh sharding the fleet host-major; the
-        state is padded (``fleet_sharding.padded_hosts``) and placed across
-        the mesh at build, and stage 1 runs per shard under ``shard_map``
-        with a bit-exact cross-shard merge;
-      * ``adaptive_shortlist`` — host-side controller resizing M between
-        flushes from the ``fell_back``/``margin`` health signals.
+    ``policy.mesh`` pads the state (``fleet_sharding.padded_hosts``) and
+    places it across the mesh at build; stage 1 then runs per shard under
+    ``shard_map`` with a bit-exact cross-shard merge.  The pre-policy loose
+    kwargs remain as deprecated shims for one release.
     """
 
     def __init__(
@@ -142,36 +168,27 @@ class SoAFleet:
         hosts: Sequence[Host],
         cost_fn: Optional[CostFunction] = None,
         k_slots: int = 8,
-        use_pallas: bool = False,
-        weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0),
-        shortlist: Optional[int] = None,
-        fused_screen: Optional[bool] = None,
-        mesh=None,
-        adaptive_shortlist: bool = False,
+        policy: Optional[SchedulerPolicy] = None,
+        **legacy,
     ):
-        self.cost_fn = cost_fn or PeriodCost()
-        self.cost_kind, self.period = jax_cost_params(self.cost_fn)
+        self.policy = resolve_policy(
+            policy, legacy, LEGACY_FLEET_KNOBS, "SoAFleet", cost_fn=cost_fn
+        )
+        self.cost_fn = cost_fn or self.policy.make_cost_fn()
         self.k_slots = k_slots
-        self.use_pallas = use_pallas
-        self.weigher_multipliers = tuple(weigher_multipliers)
-        #: stage-2 shortlist size (None = auto, 0 = full enumeration);
-        #: decisions are bit-identical either way (see jax_scheduler).
-        self.shortlist = shortlist
-        #: stage-1 screen backend (None = auto: fused Pallas kernel on TPU).
-        self.fused_screen = fused_screen
-        #: optional 1-D device mesh for the sharded stage-1 screen.
-        self.mesh = mesh
-        #: optional host-side controller steering M between flushes.
-        if adaptive_shortlist and shortlist == 0:
-            raise ValueError(
-                "adaptive_shortlist=True contradicts shortlist=0 (explicit "
-                "full enumeration); pass shortlist=None or a starting M"
-            )
+        #: optional host-side controller steering M between flushes
+        #: (bounds + starting M from the policy).
         self.adaptive: Optional[AdaptiveShortlist] = (
             AdaptiveShortlist(
-                m=DEFAULT_SHORTLIST if shortlist is None else shortlist
+                m=(
+                    DEFAULT_SHORTLIST
+                    if self.policy.shortlist is None
+                    else self.policy.shortlist
+                ),
+                m_min=self.policy.adaptive_bounds[0],
+                m_max=self.policy.adaptive_bounds[1],
             )
-            if adaptive_shortlist
+            if self.policy.adaptive_shortlist
             else None
         )
         #: admissibility-fallback totals (every flush, adaptive or not)
@@ -187,30 +204,36 @@ class SoAFleet:
         for h in hosts:
             self.domain_ids.setdefault(h.domain, len(self.domain_ids))
 
+        # Mixed-payment fleets must declare every kind they bill: an
+        # instance carrying a kind outside the policy table is a
+        # configuration error, caught here instead of mid-decision.
+        table = self.policy.kind_table
+        for h in hosts:
+            for inst in h.instances.values():
+                if inst.cost_kind is not None and inst.cost_kind not in table:
+                    raise ValueError(
+                        f"instance {inst.id} bills by {inst.cost_kind!r}, "
+                        f"not in the policy's cost-kind table {table}"
+                    )
+
         self.state, slot_rows = build_fleet_state(
             hosts, k_slots=k_slots, domain_ids=self.domain_ids
         )
-        if mesh is not None:
+        if self.policy.mesh is not None:
             # Pad to a shard-divisible host count that leaves every shard
             # room for the largest shortlist this fleet can run (the
             # adaptive ceiling when the controller is on), then place the
             # arrays host-major across the mesh.  Padding rows are invalid
             # everywhere, so decisions are unchanged (tests/test_sharded_parity).
             from .fleet_sharding import (
-                pad_fleet_state, padded_hosts, shard_fleet_state,
+                pad_fleet_state, padded_hosts_for, shard_fleet_state,
             )
 
-            m_hi = (
-                self.adaptive.m_max
-                if self.adaptive is not None
-                else (DEFAULT_SHORTLIST if shortlist is None else shortlist)
-            )
             self.state = shard_fleet_state(
                 pad_fleet_state(
-                    self.state,
-                    padded_hosts(len(hosts), mesh.size, m_keep=m_hi + 1),
+                    self.state, padded_hosts_for(len(hosts), self.policy)
                 ),
-                mesh,
+                self.policy.mesh,
             )
         #: slot → live preemptible instance id (None = free slot)
         self.slot_ids: List[List[Optional[str]]] = [
@@ -234,6 +257,35 @@ class SoAFleet:
         cap = np.stack([c.vec for c in self.capacity]) if hosts else np.zeros((0, 1))
         self._cap0_total = float(cap[:, 0].sum())
 
+    # -- back-compat views of the policy fields ------------------------------
+    @property
+    def cost_kind(self) -> str:
+        return self.policy.cost_kind
+
+    @property
+    def period(self) -> float:
+        return self.policy.period
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.policy.use_pallas
+
+    @property
+    def weigher_multipliers(self) -> Tuple[float, float, float, float]:
+        return self.policy.weigher_multipliers
+
+    @property
+    def shortlist(self) -> Optional[int]:
+        return self.policy.shortlist
+
+    @property
+    def fused_screen(self) -> Optional[bool]:
+        return self.policy.fused_screen
+
+    @property
+    def mesh(self):
+        return self.policy.mesh
+
     # -- derived metrics (device reductions; no python Host objects) ---------
     @property
     def n_hosts(self) -> int:
@@ -254,16 +306,36 @@ class SoAFleet:
     # -- scheduling ----------------------------------------------------------
     def _req_arrays(self, req: Request):
         dom = -1 if req.domain is None else self.domain_ids.get(req.domain, -1)
+        if req.cost_kind is None:
+            kind = -1
+        else:
+            if req.cost_kind not in self.policy.kind_table:
+                raise ValueError(
+                    f"request {req.id} bills by {req.cost_kind!r}, not in "
+                    f"the policy's cost-kind table {self.policy.kind_table}"
+                )
+            kind = COST_KIND_IDS[req.cost_kind]
         return (
             req.resources.vec32,
             bool(req.preemptible),
             np.int32(dom),
+            np.int32(kind),
         )
 
     @property
     def effective_shortlist(self) -> Optional[int]:
         """The M the next flush will use (controller-steered when adaptive)."""
         return self.adaptive.m if self.adaptive is not None else self.shortlist
+
+    def _flush_policy(self) -> SchedulerPolicy:
+        """The policy the next flush dispatches with: the fleet policy, with
+        M swapped in when the adaptive controller moved it.  Equal policies
+        hash alike, so this re-hits the jit cache (≤ log2(m_max/m_min)+1
+        distinct executables per request shape)."""
+        m = self.effective_shortlist
+        if m == self.policy.shortlist:
+            return self.policy
+        return dataclasses.replace(self.policy, shortlist=m)
 
     @property
     def shortlist_stats(self) -> Dict[str, int]:
@@ -299,15 +371,10 @@ class SoAFleet:
         self, req: Request, now: float, price: float = 1.0
     ) -> SoAOutcome:
         """One decide-and-apply step on the persistent state."""
-        res, pre, dom = self._req_arrays(req)
+        res, pre, dom, kind = self._req_arrays(req)
         self.state, (host_idx, slot, ok, kill, fell_back, margin) = schedule_step(
             self.state, res, pre, dom, now, price,
-            cost_kind=self.cost_kind, period=self.period,
-            use_pallas=self.use_pallas,
-            weigher_multipliers=self.weigher_multipliers,
-            shortlist=self.effective_shortlist,
-            fused_screen=self.fused_screen,
-            mesh=self.mesh,
+            policy=self._flush_policy(), req_cost_kind=kind,
         )
         self._observe(int(fell_back), float(margin), 1)
         return self._absorb(
@@ -336,18 +403,14 @@ class SoAFleet:
         dom = np.full((padded,), -1, np.int32)
         now = np.full((padded,), items[-1][1], np.float32)
         price = np.ones((padded,), np.float32)
+        kind = np.full((padded,), -1, np.int32)
         for i, (req, t, p) in enumerate(items):
-            res[i], pre[i], dom[i] = self._req_arrays(req)
+            res[i], pre[i], dom[i], kind[i] = self._req_arrays(req)
             now[i] = t
             price[i] = p
         self.state, (host_idx, slot, ok, kill, fell_back, margin) = schedule_many(
             self.state, res, pre, dom, now, price,
-            cost_kind=self.cost_kind, period=self.period,
-            use_pallas=self.use_pallas,
-            weigher_multipliers=self.weigher_multipliers,
-            shortlist=self.effective_shortlist,
-            fused_screen=self.fused_screen,
-            mesh=self.mesh,
+            policy=self._flush_policy(), req_cost_kind=kind,
         )
         host_idx, slot = np.asarray(host_idx), np.asarray(slot)
         ok, kill = np.asarray(ok), np.asarray(kill)
@@ -395,6 +458,7 @@ class SoAFleet:
             start_time=now,
             user=req.user,
             price_rate=price,
+            cost_kind=req.cost_kind,
         )
         self.instances[inst.id] = inst
         if req.preemptible:

@@ -126,6 +126,12 @@ class Request:
     #: Optional ICI-domain constraint (TPU adaptation): a job restricted to a
     #: contiguous slice domain.  ``None`` means any domain.
     domain: Optional[str] = None
+    #: Billing kind this request's instance will be scored under at
+    #: termination time ("period" | "count" | "revenue" | "recompute");
+    #: ``None`` = the fleet policy's default kind.  Mixed-payment fleets
+    #: (``SchedulerPolicy.cost_kinds`` / ``cost.MixedCost``) set this per
+    #: request; homogeneous fleets leave it None.
+    cost_kind: Optional[str] = None
     metadata: Mapping[str, object] = dataclasses.field(default_factory=dict)
 
 
@@ -145,6 +151,9 @@ class Instance:
     #: beyond-paper RecomputeCost module: preempting a job that checkpointed
     #: recently is cheap.
     last_checkpoint: Optional[float] = None
+    #: Billing kind this instance is scored under (mirrors
+    #: ``Request.cost_kind``); ``None`` = the fleet policy's default.
+    cost_kind: Optional[str] = None
     metadata: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     def run_time(self, now: float) -> float:

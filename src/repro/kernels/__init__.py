@@ -11,6 +11,8 @@ from .ops import (
     flash_attention,
     rmsnorm,
     sched_screen,
+    sched_screen_consts,
+    sched_screen_topm,
     sched_weigh,
     sched_weigh_gathered,
 )
@@ -20,6 +22,8 @@ __all__ = [
     "flash_attention",
     "rmsnorm",
     "sched_screen",
+    "sched_screen_consts",
+    "sched_screen_topm",
     "sched_weigh",
     "sched_weigh_gathered",
 ]

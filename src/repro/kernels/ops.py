@@ -9,7 +9,11 @@ from repro.core.screen_math import TIE_EPS
 
 from .flash_attention import flash_attention
 from .rmsnorm import rmsnorm
-from .sched_screen import sched_screen
+from .sched_screen import (
+    sched_screen,
+    sched_screen_consts,
+    sched_screen_topm,
+)
 from .sched_weigh import sched_weigh, sched_weigh_gathered
 
 __all__ = [
@@ -17,6 +21,8 @@ __all__ = [
     "flash_attention",
     "rmsnorm",
     "sched_screen",
+    "sched_screen_consts",
+    "sched_screen_topm",
     "sched_weigh",
     "sched_weigh_gathered",
 ]

@@ -102,17 +102,18 @@ def _fold_top(scores_ref, idx_ref, tile_scores, tile_idx, s_buf, tile):
     idx_ref[...] = idx
 
 
-def _kernel(
+def _tile_stage1(
     free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
     res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
-    scores_ref, idx_ref, consts_ref, smem,
-    *, multipliers, require_free_slot, tile, s_buf,
+    *, require_free_slot,
 ):
-    m_over, m_term, m_pack, m_strag = multipliers
-    phase = pl.program_id(0)
-    t = pl.program_id(1)
+    """One tile's stage-1 screen terms from VMEM refs — the shared
+    ``screen_math`` bounds plus the dual-view filtering (same formulas as
+    ``_decision_core``).  Returns ``(valid, cost_lb, cost_ub, over_raw,
+    pack_raw, strag_raw)``, each (T,)-shaped.  ONE definition executed by
+    all three kernels below (2-phase fused, consts-only, topm-only), which
+    is what keeps the split phases bit-identical to the fused pass."""
     k = res_ref.shape[0]
-
     pre = pre_ref[0, 0] != 0
     rdom = rdom_ref[0, 0]
     free_f = free_f_ref[...]                                     # (D, T)
@@ -148,6 +149,23 @@ def _kernel(
     over_raw = jnp.where(overcommitted, -1.0, 0.0)
     pack_raw = -jnp.sum(free_f, axis=0)
     strag_raw = -slow_ref[...][0]
+    return valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw
+
+
+def _kernel(
+    free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
+    res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
+    scores_ref, idx_ref, consts_ref, smem,
+    *, multipliers, require_free_slot, tile, s_buf,
+):
+    m_over, m_term, m_pack, m_strag = multipliers
+    phase = pl.program_id(0)
+    t = pl.program_id(1)
+    valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw = _tile_stage1(
+        free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
+        res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
+        require_free_slot=require_free_slot,
+    )
 
     # ---- phase 0: fold normalization constants into SMEM --------------------
     @pl.when((phase == 0) & (t == 0))
@@ -187,6 +205,77 @@ def _kernel(
         gidx = t * tile + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
         _fold_top(scores_ref, idx_ref, omega_ub[None, :], gidx, s_buf, tile)
         consts_ref[...] = consts.pack()[None, :]
+
+
+def _consts_kernel(
+    free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
+    res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
+    consts_ref, smem,
+    *, multipliers, require_free_slot,
+):
+    """Phase 0 alone: fold the 8 normalization constants over the fleet
+    (identical folds to ``_kernel``'s phase 0) and emit them — the
+    per-shard half of the split the sharded fused screen needs, so the
+    mesh can pmin/pmax-merge constants BEFORE any omega is scored."""
+    m_over, m_term, m_pack, m_strag = multipliers
+    t = pl.program_id(0)
+    valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw = _tile_stage1(
+        free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
+        res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
+        require_free_slot=require_free_slot,
+    )
+
+    @pl.when(t == 0)
+    def _():
+        for i in range(4):
+            smem[2 * i] = jnp.float32(POS_INF)
+            smem[2 * i + 1] = jnp.float32(NEG_INF)
+
+    smem[0] = jnp.minimum(smem[0], jnp.min(jnp.where(valid, cost_lb, POS_INF)))
+    smem[1] = jnp.maximum(smem[1], jnp.max(jnp.where(valid, cost_ub, NEG_INF)))
+    for slot, (on, raw) in enumerate(
+        [(m_over, over_raw), (m_pack, pack_raw), (m_strag, strag_raw)]
+    ):
+        if on:
+            smem[2 + 2 * slot] = jnp.minimum(
+                smem[2 + 2 * slot], jnp.min(jnp.where(valid, raw, POS_INF))
+            )
+            smem[3 + 2 * slot] = jnp.maximum(
+                smem[3 + 2 * slot], jnp.max(jnp.where(valid, raw, NEG_INF))
+            )
+    consts_ref[...] = jnp.stack([smem[i] for i in range(8)])[None, :]
+
+
+def _topm_kernel(
+    free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
+    res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref, consts_in_ref,
+    scores_ref, idx_ref,
+    *, multipliers, require_free_slot, tile, s_buf,
+):
+    """Phase 1 alone, scoring against EXTERNAL constants (``consts_in_ref``,
+    e.g. the mesh-merged ``ScreenConsts``): recompute the tile's screen
+    terms, assemble ``omega_ub``, fold the running top-M — the same ops as
+    ``_kernel``'s phase 1 reading merged constants instead of SMEM."""
+    m_over, m_term, m_pack, m_strag = multipliers
+    t = pl.program_id(0)
+    valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw = _tile_stage1(
+        free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
+        res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
+        require_free_slot=require_free_slot,
+    )
+
+    @pl.when(t == 0)
+    def _():
+        scores_ref[...] = jnp.full((1, s_buf), NEG_INF, jnp.float32)
+        idx_ref[...] = jnp.full((1, s_buf), IDX_SENTINEL, jnp.int32)
+
+    consts = ScreenConsts(*(consts_in_ref[0, i] for i in range(8)))
+    base = base_from_consts(multipliers, over_raw, pack_raw, strag_raw, consts)
+    ispan = inv_span(consts.c_lo, consts.c_hi)
+    opt_cost = cost_lb if m_term >= 0 else cost_ub
+    omega_ub = omega_of(opt_cost, base, valid, consts, ispan, m_term)
+    gidx = t * tile + jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1)
+    _fold_top(scores_ref, idx_ref, omega_ub[None, :], gidx, s_buf, tile)
 
 
 @functools.partial(
@@ -243,6 +332,131 @@ def _sched_screen_padded(
       req, pre, rdom)
 
 
+def _in_specs(k, d, tile):
+    """The fleet/request BlockSpec list shared by all three kernels (the
+    host axis is the grid's LAST dimension, so the index maps take the
+    final program id as the tile index)."""
+    host = lambda *ids: (0, ids[-1])
+    fixed = lambda *ids: (0, 0)
+    return [
+        pl.BlockSpec((d, tile), host),
+        pl.BlockSpec((d, tile), host),
+        pl.BlockSpec((1, tile), host),
+        pl.BlockSpec((1, tile), host),
+        pl.BlockSpec((1, tile), host),
+        pl.BlockSpec((k, d, tile), lambda *ids: (0, 0, ids[-1])),
+        pl.BlockSpec((k, tile), host),
+        pl.BlockSpec((k, tile), host),
+        pl.BlockSpec((d, 1), fixed),
+        pl.BlockSpec((1, 1), fixed),
+        pl.BlockSpec((1, 1), fixed),
+    ]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("multipliers", "require_free_slot", "tile", "interpret"),
+)
+def _sched_consts_padded(
+    free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
+    req, pre, rdom,
+    multipliers, require_free_slot, tile, interpret,
+):
+    k, d, n = res_t.shape
+    fixed = lambda t: (0, 0)
+    kern = functools.partial(
+        _consts_kernel,
+        multipliers=multipliers,
+        require_free_slot=require_free_slot,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=_in_specs(k, d, tile),
+        out_specs=pl.BlockSpec((1, 8), fixed),
+        out_shape=jax.ShapeDtypeStruct((1, 8), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((8,), jnp.float32)],
+        interpret=interpret,
+    )(free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
+      req, pre, rdom)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "multipliers", "require_free_slot", "s_buf", "tile", "interpret"
+    ),
+)
+def _sched_topm_padded(
+    free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
+    req, pre, rdom, consts,
+    multipliers, require_free_slot, s_buf, tile, interpret,
+):
+    k, d, n = res_t.shape
+    fixed = lambda t: (0, 0)
+    kern = functools.partial(
+        _topm_kernel,
+        multipliers=multipliers,
+        require_free_slot=require_free_slot,
+        tile=tile,
+        s_buf=s_buf,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=_in_specs(k, d, tile) + [pl.BlockSpec((1, 8), fixed)],
+        out_specs=(
+            pl.BlockSpec((1, s_buf), fixed),
+            pl.BlockSpec((1, s_buf), fixed),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, s_buf), jnp.float32),
+            jax.ShapeDtypeStruct((1, s_buf), jnp.int32),
+        ),
+        interpret=interpret,
+    )(free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
+      req, pre, rdom, consts)
+
+
+def _prep_inputs(
+    free_f, free_n, schedulable, domain, slow,
+    inst_res, inst_cost, inst_valid,
+    req_res, req_preemptible, req_domain,
+    tile: int,
+):
+    """Dtype-normalize, pad the host axis to the tile, and transpose to the
+    kernels' slot-major layout.  Padding rows are unschedulable, so they
+    can never outrank a real host."""
+    n, d = free_f.shape
+    k = inst_cost.shape[1]
+    pad = (-n) % tile
+    free_f = jnp.asarray(free_f, jnp.float32)
+    free_n = jnp.asarray(free_n, jnp.float32)
+    sched = jnp.asarray(schedulable, jnp.float32)
+    domain = jnp.asarray(domain, jnp.int32)
+    slow = jnp.asarray(slow, jnp.float32)
+    inst_res = jnp.asarray(inst_res, jnp.float32)
+    inst_cost = jnp.asarray(inst_cost, jnp.float32)
+    inst_valid = jnp.asarray(inst_valid, jnp.float32)
+    if pad:
+        zf = jnp.zeros((pad, d), jnp.float32)
+        free_f = jnp.concatenate([free_f, zf])
+        free_n = jnp.concatenate([free_n, zf])
+        sched = jnp.concatenate([sched, jnp.zeros((pad,), jnp.float32)])
+        domain = jnp.concatenate([domain, jnp.zeros((pad,), jnp.int32)])
+        slow = jnp.concatenate([slow, jnp.ones((pad,), jnp.float32)])
+        inst_res = jnp.concatenate([inst_res, jnp.zeros((pad, k, d), jnp.float32)])
+        inst_cost = jnp.concatenate([inst_cost, jnp.zeros((pad, k), jnp.float32)])
+        inst_valid = jnp.concatenate([inst_valid, jnp.zeros((pad, k), jnp.float32)])
+    return (
+        free_f.T, free_n.T, sched[None, :], domain[None, :], slow[None, :],
+        inst_res.transpose(1, 2, 0), inst_cost.T, inst_valid.T,
+        jnp.asarray(req_res, jnp.float32).reshape(d, 1),
+        jnp.asarray(req_preemptible, jnp.int32).reshape(1, 1),
+        jnp.asarray(req_domain, jnp.int32).reshape(1, 1),
+    )
+
+
 def sched_screen(
     free_f, free_n, schedulable, domain, slow,
     inst_res, inst_cost, inst_valid,
@@ -269,38 +483,18 @@ def sched_screen(
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    n, d = free_f.shape
-    k = inst_cost.shape[1]
+    n = free_f.shape[0]
     if not 1 <= m_keep <= n:
         raise ValueError(f"m_keep={m_keep} out of range for {n} hosts")
     s_buf = 1
     while s_buf < m_keep + tile:
         s_buf *= 2
-    pad = (-n) % tile
-    free_f = jnp.asarray(free_f, jnp.float32)
-    free_n = jnp.asarray(free_n, jnp.float32)
-    sched = jnp.asarray(schedulable, jnp.float32)
-    domain = jnp.asarray(domain, jnp.int32)
-    slow = jnp.asarray(slow, jnp.float32)
-    inst_res = jnp.asarray(inst_res, jnp.float32)
-    inst_cost = jnp.asarray(inst_cost, jnp.float32)
-    inst_valid = jnp.asarray(inst_valid, jnp.float32)
-    if pad:
-        zf = jnp.zeros((pad, d), jnp.float32)
-        free_f = jnp.concatenate([free_f, zf])
-        free_n = jnp.concatenate([free_n, zf])
-        sched = jnp.concatenate([sched, jnp.zeros((pad,), jnp.float32)])
-        domain = jnp.concatenate([domain, jnp.zeros((pad,), jnp.int32)])
-        slow = jnp.concatenate([slow, jnp.ones((pad,), jnp.float32)])
-        inst_res = jnp.concatenate([inst_res, jnp.zeros((pad, k, d), jnp.float32)])
-        inst_cost = jnp.concatenate([inst_cost, jnp.zeros((pad, k), jnp.float32)])
-        inst_valid = jnp.concatenate([inst_valid, jnp.zeros((pad, k), jnp.float32)])
     scores, idx, consts = _sched_screen_padded(
-        free_f.T, free_n.T, sched[None, :], domain[None, :], slow[None, :],
-        inst_res.transpose(1, 2, 0), inst_cost.T, inst_valid.T,
-        jnp.asarray(req_res, jnp.float32).reshape(d, 1),
-        jnp.asarray(req_preemptible, jnp.int32).reshape(1, 1),
-        jnp.asarray(req_domain, jnp.int32).reshape(1, 1),
+        *_prep_inputs(
+            free_f, free_n, schedulable, domain, slow,
+            inst_res, inst_cost, inst_valid,
+            req_res, req_preemptible, req_domain, tile,
+        ),
         multipliers=tuple(weigher_multipliers),
         require_free_slot=bool(require_free_slot),
         s_buf=s_buf,
@@ -308,3 +502,75 @@ def sched_screen(
         interpret=interpret,
     )
     return scores[0, :m_keep], idx[0, :m_keep], consts[0]
+
+
+def sched_screen_consts(
+    free_f, free_n, schedulable, domain, slow,
+    inst_res, inst_cost, inst_valid,
+    req_res, req_preemptible, req_domain,
+    weigher_multipliers,
+    require_free_slot: bool,
+    interpret=None,
+    tile: int = TILE_HOSTS,
+):
+    """Constants half of the split screen: fold ONLY the 8 normalization
+    scalars over the given hosts (identical folds to ``sched_screen``'s
+    phase 0).  Returns the packed (8,) ``ScreenConsts``.
+
+    The sharded fused path (``jax_scheduler._sharded_screen`` with
+    ``fused_screen=True``) runs this per shard, pmin/pmax-merges the
+    results across the mesh, and feeds them to ``sched_screen_topm`` — the
+    constants barrier the single-kernel 2-phase grid cannot cross."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    consts = _sched_consts_padded(
+        *_prep_inputs(
+            free_f, free_n, schedulable, domain, slow,
+            inst_res, inst_cost, inst_valid,
+            req_res, req_preemptible, req_domain, tile,
+        ),
+        multipliers=tuple(weigher_multipliers),
+        require_free_slot=bool(require_free_slot),
+        tile=tile,
+        interpret=interpret,
+    )
+    return consts[0]
+
+
+def sched_screen_topm(
+    free_f, free_n, schedulable, domain, slow,
+    inst_res, inst_cost, inst_valid,
+    req_res, req_preemptible, req_domain,
+    consts,
+    weigher_multipliers,
+    require_free_slot: bool,
+    m_keep: int,
+    interpret=None,
+    tile: int = TILE_HOSTS,
+):
+    """Top-M half of the split screen: score ``omega_ub`` against EXTERNAL
+    packed constants (``consts``, e.g. mesh-merged) and fold the on-chip
+    running top-``m_keep``.  Returns ``(top_scores, top_idx)`` with the
+    same ordering contract as ``sched_screen``."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = free_f.shape[0]
+    if not 1 <= m_keep <= n:
+        raise ValueError(f"m_keep={m_keep} out of range for {n} hosts")
+    s_buf = 1
+    while s_buf < m_keep + tile:
+        s_buf *= 2
+    scores, idx = _sched_topm_padded(
+        *_prep_inputs(
+            free_f, free_n, schedulable, domain, slow,
+            inst_res, inst_cost, inst_valid,
+            req_res, req_preemptible, req_domain, tile,
+        ),
+        jnp.asarray(consts, jnp.float32).reshape(1, 8),
+        multipliers=tuple(weigher_multipliers),
+        require_free_slot=bool(require_free_slot),
+        s_buf=s_buf,
+        tile=tile,
+        interpret=interpret,
+    )
+    return scores[0, :m_keep], idx[0, :m_keep]

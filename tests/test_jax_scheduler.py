@@ -109,11 +109,19 @@ def test_pallas_kernel_matches_jnp_oracle(seed):
 
 
 def test_pallas_end_to_end_decision():
+    from repro.core.policy import SchedulerPolicy
+
     rng = np.random.default_rng(7)
     hosts = random_fleet(rng, n_hosts=20)
     req = Request(id="q", resources=SIZES["medium"], preemptible=False)
-    jx = JaxPreemptibleScheduler(cost_fn=PeriodCost(), k_slots=8, use_pallas=False)
-    jp = JaxPreemptibleScheduler(cost_fn=PeriodCost(), k_slots=8, use_pallas=True)
+    jx = JaxPreemptibleScheduler(
+        cost_fn=PeriodCost(), k_slots=8,
+        policy=SchedulerPolicy(use_pallas=False),
+    )
+    jp = JaxPreemptibleScheduler(
+        cost_fn=PeriodCost(), k_slots=8,
+        policy=SchedulerPolicy(use_pallas=True),
+    )
     a = jx.schedule(req, hosts, NOW)
     b = jp.schedule(req, hosts, NOW)
     assert a.ok == b.ok and a.host == b.host and a.plan.ids == b.plan.ids

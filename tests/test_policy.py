@@ -1,0 +1,248 @@
+"""``SchedulerPolicy`` contract tests: construction-time validation, value
+equality/hashability (the property that makes it a well-behaved jit static),
+the no-retrace guarantee, and the one-release deprecation shims over the old
+loose kwargs.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cost import (
+    CountCost,
+    MixedCost,
+    PeriodCost,
+    RecomputeCost,
+    RevenueCost,
+    WeightedSumCost,
+)
+from repro.core.jax_scheduler import (
+    _decision_entry,
+    _step_kept,
+    build_soa_state,
+    schedule_decision,
+    schedule_step,
+)
+from repro.core.policy import (
+    COST_KIND_IDS,
+    COST_KINDS,
+    PolicyDeprecationWarning,
+    SchedulerPolicy,
+)
+from repro.core.soa_fleet import SoAFleet
+from repro.core.types import VM_SPEC, Host, Request
+
+CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=160)
+SMALL = VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20)
+
+
+# ---------------------------------------------------------------------------
+# Construction-time validation (consolidated from the old per-call checks)
+# ---------------------------------------------------------------------------
+
+
+def test_defaults_are_todays_behavior():
+    p = SchedulerPolicy()
+    assert p.weigher_multipliers == (1.0, 1.0, 0.0, 0.0)
+    assert p.cost_kind == "period" and p.kind_table == ("period",)
+    assert not p.mixed and p.shortlist is None and p.donate
+
+
+def test_multipliers_tuple_normalized_and_hashable():
+    p = SchedulerPolicy(weigher_multipliers=[1, 2, 0, 0])  # list + ints
+    assert p.weigher_multipliers == (1.0, 2.0, 0.0, 0.0)
+    assert isinstance(p.weigher_multipliers, tuple)
+    hash(p)  # must not raise
+
+
+def test_rejects_wrong_arity_multipliers():
+    with pytest.raises(ValueError, match="4 entries"):
+        SchedulerPolicy(weigher_multipliers=(1.0, 1.0))
+
+
+@pytest.mark.parametrize("field", ["cost_kind", "cost_kinds"])
+def test_rejects_unknown_cost_kind(field):
+    kw = {"cost_kind": "karma"} if field == "cost_kind" else {
+        "cost_kinds": ("count", "karma")
+    }
+    with pytest.raises(ValueError, match="unknown cost kind"):
+        SchedulerPolicy(**kw)
+
+
+def test_rejects_non_power_of_two_adaptive_bounds():
+    with pytest.raises(ValueError, match="powers of two"):
+        SchedulerPolicy(adaptive_bounds=(12, 64))
+    with pytest.raises(ValueError, match="m_min > m_max"):
+        SchedulerPolicy(adaptive_bounds=(64, 16))
+
+
+def test_rejects_adaptive_contradictions():
+    with pytest.raises(ValueError, match="contradicts shortlist=0"):
+        SchedulerPolicy(adaptive_shortlist=True, shortlist=0)
+
+
+def test_adaptive_start_outside_bounds_is_legal_and_flushes():
+    """The starting M may sit outside adaptive_bounds (pre-policy behavior:
+    the controller clamps as it moves) — construction AND the first flush
+    must both work, including when shortlist=None resolves to a default
+    below m_min."""
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(6)]
+    for policy in (
+        SchedulerPolicy(adaptive_shortlist=True, shortlist=4),       # < m_min
+        SchedulerPolicy(adaptive_shortlist=True,
+                        adaptive_bounds=(128, 256)),                 # 64 < 128
+    ):
+        fleet = SoAFleet(hosts, policy=policy)
+        out = fleet.schedule_request(
+            Request(id="r", resources=SMALL), now=60.0
+        )
+        assert out.ok
+
+
+def test_cost_fn_policy_disagreement_is_loud():
+    """Pre-policy, billing was always derived from cost_fn; passing a
+    policy that bills differently from an explicit cost_fn must raise, not
+    silently reprice decisions."""
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(4)]
+    with pytest.raises(ValueError, match="drop cost_fn"):
+        SoAFleet(hosts, cost_fn=RevenueCost(), policy=SchedulerPolicy())
+    # agreeing pairs stay fine
+    SoAFleet(hosts, cost_fn=RevenueCost(),
+             policy=SchedulerPolicy.for_cost(RevenueCost(), shortlist=8))
+
+
+def test_rejects_bad_period_and_shortlist():
+    with pytest.raises(ValueError, match="period"):
+        SchedulerPolicy(period=0.0)
+    with pytest.raises(ValueError, match="shortlist"):
+        SchedulerPolicy(shortlist=-3)
+
+
+def test_kind_table_dedups_and_leads_with_default():
+    p = SchedulerPolicy(cost_kind="revenue", cost_kinds=("count", "revenue", "count"))
+    assert p.kind_table == ("revenue", "count")
+    assert p.mixed and p.default_kind_id == COST_KIND_IDS["revenue"]
+
+
+def test_for_cost_roundtrip():
+    for fn in (PeriodCost(1800.0), CountCost(), RevenueCost(), RecomputeCost()):
+        p = SchedulerPolicy.for_cost(fn)
+        assert type(p.make_cost_fn()) is type(fn)
+        assert not p.mixed
+    mixed = MixedCost(default="count", kinds=("revenue",), period_s=900.0)
+    p = SchedulerPolicy.for_cost(mixed)
+    assert p.mixed and p.kind_table == ("count", "revenue") and p.period == 900.0
+    back = p.make_cost_fn()
+    assert isinstance(back, MixedCost) and back.default == "count"
+    with pytest.raises(ValueError, match="no device-resident"):
+        SchedulerPolicy.for_cost(WeightedSumCost([(1.0, CountCost())]))
+
+
+def test_value_equality_across_constructions():
+    a = SchedulerPolicy(shortlist=8, cost_kinds=["count"])
+    b = SchedulerPolicy(shortlist=8, cost_kinds=("count",))
+    assert a == b and hash(a) == hash(b)
+    assert a != dataclasses.replace(a, shortlist=16)
+
+
+# ---------------------------------------------------------------------------
+# The no-retrace guard: equal policies must hit ONE compile-cache entry
+# ---------------------------------------------------------------------------
+
+
+def _fresh_policy():
+    # built from scratch each time — equality must be by value, not identity
+    return SchedulerPolicy(
+        weigher_multipliers=[1.0, 1.0, 0.0, 0.0], shortlist=4,
+        cost_kinds=("count",),
+    )
+
+
+def test_equal_policies_share_compile_cache_decision():
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(12)]
+    state, _ = build_soa_state(hosts, 100.0, PeriodCost(), k_slots=4)
+    req = jnp.asarray(SMALL.vec, jnp.float32)
+    before = _decision_entry._cache_size()
+    a = schedule_decision(state, req, False, -1, policy=_fresh_policy())
+    mid = _decision_entry._cache_size()
+    b = schedule_decision(state, req, False, -1, policy=_fresh_policy())
+    after = _decision_entry._cache_size()
+    assert mid == before + 1, "first call must compile exactly once"
+    assert after == mid, "an equal (distinct) policy object must NOT retrace"
+    assert tuple(map(int, a)) == tuple(map(int, b))
+
+
+def test_equal_policies_share_compile_cache_step():
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(12)]
+    fleet = SoAFleet(hosts, k_slots=4, policy=_fresh_policy())
+    req = np.asarray(SMALL.vec, np.float32)
+    before = _step_kept._cache_size()
+    schedule_step(fleet.state, req, False, np.int32(-1), 60.0, 1.0,
+                  policy=_fresh_policy(), donate=False)
+    mid = _step_kept._cache_size()
+    schedule_step(fleet.state, req, False, np.int32(-1), 120.0, 1.0,
+                  policy=_fresh_policy(), donate=False)
+    after = _step_kept._cache_size()
+    assert mid == before + 1 and after == mid
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: loose kwargs warn, still work, and cannot be mixed
+# ---------------------------------------------------------------------------
+
+
+def test_loose_kwargs_warn_and_match_policy():
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(10)]
+    state, _ = build_soa_state(hosts, 100.0, PeriodCost(), k_slots=4)
+    req = jnp.asarray(SMALL.vec, jnp.float32)
+    want = schedule_decision(
+        state, req, False, -1, policy=SchedulerPolicy(shortlist=2)
+    )
+    with pytest.warns(PolicyDeprecationWarning):
+        got = schedule_decision(state, req, False, -1, shortlist=2)
+    assert tuple(map(int, got)) == tuple(map(int, want))
+
+
+def test_fleet_loose_kwargs_warn():
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(4)]
+    with pytest.warns(PolicyDeprecationWarning):
+        fleet = SoAFleet(hosts, cost_fn=RevenueCost(), shortlist=4)
+    assert fleet.policy.cost_kind == "revenue" and fleet.policy.shortlist == 4
+    out = fleet.schedule_request(Request(id="r", resources=SMALL), now=60.0)
+    assert out.ok
+
+
+def test_policy_plus_loose_kwargs_is_an_error():
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(4)]
+    with pytest.raises(TypeError, match="not both"):
+        SoAFleet(hosts, policy=SchedulerPolicy(), shortlist=4)
+
+
+def test_unknown_kwargs_rejected():
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(4)]
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        SoAFleet(hosts, shortliist=4)  # typo must not pass silently
+
+
+# ---------------------------------------------------------------------------
+# Request/fleet kind-table enforcement
+# ---------------------------------------------------------------------------
+
+
+def test_request_kind_outside_table_rejected():
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(4)]
+    fleet = SoAFleet(hosts, policy=SchedulerPolicy())  # period only
+    with pytest.raises(ValueError, match="cost-kind table"):
+        fleet.schedule_request(
+            Request(id="r", resources=SMALL, preemptible=True,
+                    cost_kind="revenue"),
+            now=60.0,
+        )
+
+
+def test_all_known_kinds_are_registered():
+    assert COST_KINDS == ("period", "count", "revenue", "recompute")
+    assert [COST_KIND_IDS[k] for k in COST_KINDS] == [0, 1, 2, 3]

@@ -27,6 +27,7 @@ from repro.core.jax_scheduler import (
     screen_terms,
     slot_costs,
 )
+from repro.core.policy import SchedulerPolicy
 from repro.core.screen_math import (
     EPS,
     base_from_consts,
@@ -165,6 +166,70 @@ def test_fused_screen_all_cost_kinds(kind):
     _assert_screen_parity(a, req, False, -1, DEFAULT_MULT, True, 65)
 
 
+def test_fused_screen_mixed_cost_kinds():
+    """Heterogeneous billing: slot costs derived per-slot through the
+    kind-table select (``mixed_slot_costs``) feed the kernel exactly like a
+    homogeneous column — the select runs upstream of every screen backend,
+    so the kernel's shortlist must stay bit-equal to the jnp screen's on a
+    fleet mixing all four kinds."""
+    from repro.core.jax_scheduler import mixed_slot_costs
+
+    rng = np.random.default_rng(4242)
+    n, k = 150, 8
+    a = _rand_arrays(rng, n, k)
+    now = 500_000.0
+    start = now - rng.integers(10, 500, (n, k)).astype(np.float32) * 60.0
+    price = rng.integers(1, 5, (n, k)).astype(np.float32)
+    ckpt = start + rng.integers(0, 100, (n, k)).astype(np.float32) * 60.0
+    kind_col = rng.integers(-1, 4, (n, k)).astype(np.int32)  # -1 = default
+    policy = SchedulerPolicy(cost_kinds=("count", "revenue", "recompute"))
+    a["inst_cost"] = np.asarray(mixed_slot_costs(
+        policy, jnp.asarray(kind_col), jnp.asarray(start), jnp.asarray(price),
+        jnp.asarray(ckpt), jnp.asarray(a["inst_res"]), now,
+    ))
+    req = rng.integers(2, 14, (3,)).astype(np.float32)
+    _assert_screen_parity(a, req, False, -1, DEFAULT_MULT, True, 65)
+    # sanity: the select really produced per-kind values (a homogeneous
+    # column would make this test vacuous)
+    per = np.asarray(slot_costs("period", jnp.asarray(start), jnp.asarray(price),
+                                now, 3600.0, inst_ckpt=jnp.asarray(ckpt),
+                                inst_res=jnp.asarray(a["inst_res"])))
+    assert not np.array_equal(a["inst_cost"], per)
+
+
+@pytest.mark.parametrize("n", [37, 200])
+def test_split_phase_kernels_match_fused(n):
+    """The consts-only + topm-only kernel pair (what the sharded fused
+    screen runs per shard, split at the constants barrier) must reproduce
+    the 2-phase fused kernel bit-for-bit when fed its own constants."""
+    from repro.kernels.sched_screen import sched_screen_consts, sched_screen_topm
+
+    rng = np.random.default_rng(n)
+    a = _rand_arrays(rng, n, 6)
+    req = rng.integers(2, 10, (3,)).astype(np.float32)
+    args = (
+        a["free_f"], a["free_n"], a["schedulable"], a["domain"], a["slow"],
+        a["inst_res"], a["inst_cost"], a["inst_valid"],
+        req, jnp.asarray(False), jnp.asarray(-1, jnp.int32),
+    )
+    m_keep = min(33, n)
+    ref_s, ref_i, ref_c = sched_screen(
+        *args, weigher_multipliers=DEFAULT_MULT, require_free_slot=True,
+        m_keep=m_keep, interpret=True,
+    )
+    consts = sched_screen_consts(
+        *args, weigher_multipliers=DEFAULT_MULT, require_free_slot=True,
+        interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(consts), np.asarray(ref_c))
+    s, i = sched_screen_topm(
+        *args, consts=consts, weigher_multipliers=DEFAULT_MULT,
+        require_free_slot=True, m_keep=m_keep, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+
+
 def _soa_state(a):
     return SoAHostState(
         free_f=jnp.asarray(a["free_f"]),
@@ -190,14 +255,14 @@ def test_fused_decision_parity():
         pre = bool(trial % 2)
         full = schedule_decision(
             state, req, jnp.asarray(pre), jnp.asarray(-1, jnp.int32),
-            shortlist=0, fused_screen=False,
+            policy=SchedulerPolicy(shortlist=0, fused_screen=False),
         )
         full = tuple(np.asarray(x).item() for x in full)
         for m in (4, 16):
             for fused in (False, True):
                 got = schedule_decision(
                     state, req, jnp.asarray(pre), jnp.asarray(-1, jnp.int32),
-                    shortlist=m, fused_screen=fused,
+                    policy=SchedulerPolicy(shortlist=m, fused_screen=fused),
                 )
                 assert tuple(np.asarray(x).item() for x in got) == full, (
                     f"trial={trial} m={m} fused={fused} pre={pre}"
@@ -224,12 +289,16 @@ def test_fused_fallback_on_loose_bound():
     args = (state, req, jnp.asarray(False), jnp.asarray(-1, jnp.int32))
     full = tuple(
         np.asarray(x).item()
-        for x in schedule_decision(*args, shortlist=0, fused_screen=False)
+        for x in schedule_decision(
+            *args, policy=SchedulerPolicy(shortlist=0, fused_screen=False)
+        )
     )
     assert full[0] == 1 and full[2]          # B's single 15-cost slot wins
     got = tuple(
         np.asarray(x).item()
-        for x in schedule_decision(*args, shortlist=1, fused_screen=True)
+        for x in schedule_decision(
+            *args, policy=SchedulerPolicy(shortlist=1, fused_screen=True)
+        )
     )
     assert got == full
 

@@ -17,6 +17,8 @@ skip and only the pure-math merge tests run.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -36,7 +38,8 @@ from repro.core.jax_scheduler import (
     schedule_many,
     schedule_step,
 )
-from repro.core.cost import PeriodCost, RevenueCost
+from repro.core.cost import MixedCost, PeriodCost, RevenueCost
+from repro.core.policy import SchedulerPolicy
 from repro.core.screen_math import NEG_INF
 from repro.core.soa_fleet import SoAFleet
 from repro.core.types import VM_SPEC, Host, Instance, Request
@@ -179,8 +182,9 @@ def test_padded_state_decisions_unchanged(preemptible):
     padded = pad_fleet_state(state, 40)
     req = jnp.asarray(SIZES[1].vec, jnp.float32)
     for m in (0, 4, 16):
-        a = schedule_decision(state, req, preemptible, -1, shortlist=m)
-        b = schedule_decision(padded, req, preemptible, -1, shortlist=m)
+        pol = SchedulerPolicy(shortlist=m)
+        a = schedule_decision(state, req, preemptible, -1, policy=pol)
+        b = schedule_decision(padded, req, preemptible, -1, policy=pol)
         assert tuple(map(int, a)) == tuple(map(int, b))
 
 
@@ -192,21 +196,28 @@ def test_padded_state_decisions_unchanged(preemptible):
 @multi_device
 @pytest.mark.parametrize("n_hosts", [37, 64, 101])  # 37/101 ∤ any shard count
 @pytest.mark.parametrize("m", [8, 16])
-def test_sharded_step_parity(n_hosts, m):
+@pytest.mark.parametrize("fused", [False, True])
+def test_sharded_step_parity(n_hosts, m, fused):
     """schedule_step: all six outputs (decision + kill mask + health
     signals) bit-equal between the sharded and unsharded screens, across
-    fleets whose size does and does not divide the mesh."""
+    fleets whose size does and does not divide the mesh.  ``fused=True``
+    runs the per-shard screen through the split Pallas kernel (interpret
+    mode on CPU) — the kernel+mesh combination that used to be mutually
+    exclusive."""
     rng = np.random.default_rng(n_hosts)
     padded, sharded, mesh = _sharded_pair(_random_fleet(rng, n_hosts), m)
     for step, pre in ((0, False), (1, True), (2, False)):
         req = np.asarray(SIZES[step % 3].vec, np.float32)
         _, ref = schedule_step(
             padded, req, pre, np.int32(-1), NOW + 60.0 * step, 1.0,
-            shortlist=m, donate=False,
+            policy=SchedulerPolicy(shortlist=m), donate=False,
         )
         _, got = schedule_step(
             sharded, req, pre, np.int32(-1), NOW + 60.0 * step, 1.0,
-            shortlist=m, mesh=mesh, donate=False,
+            policy=SchedulerPolicy(
+                shortlist=m, mesh=mesh, fused_screen=fused or None
+            ),
+            donate=False,
         )
         for a, b in zip(ref, got):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -228,11 +239,12 @@ def test_sharded_many_parity_and_state():
     now = NOW + 60.0 * np.arange(b, dtype=np.float32)
     price = np.ones((b,), np.float32)
     ref_state, ref = schedule_many(
-        padded, res, pre, dom, now, price, shortlist=8, donate=False
+        padded, res, pre, dom, now, price,
+        policy=SchedulerPolicy(shortlist=8), donate=False,
     )
     got_state, got = schedule_many(
-        sharded, res, pre, dom, now, price, shortlist=8, mesh=mesh,
-        donate=False,
+        sharded, res, pre, dom, now, price,
+        policy=SchedulerPolicy(shortlist=8, mesh=mesh), donate=False,
     )
     for a, c in zip(ref, got):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(c))
@@ -273,9 +285,15 @@ def test_sharded_fallback_parity():
     padded = pad_fleet_state(state, padded_hosts(2, mesh.size, m_keep=2))
     sharded = shard_fleet_state(padded, mesh)
     req = jnp.asarray([4.0, 4.0], jnp.float32)
-    ref = schedule_decision(padded, req, False, -1, shortlist=1)
-    got = schedule_decision(sharded, req, False, -1, shortlist=1, mesh=mesh)
-    assert tuple(map(int, got)) == tuple(map(int, ref))
+    ref = schedule_decision(
+        padded, req, False, -1, policy=SchedulerPolicy(shortlist=1)
+    )
+    for fused in (None, True):
+        got = schedule_decision(
+            sharded, req, False, -1,
+            policy=SchedulerPolicy(shortlist=1, mesh=mesh, fused_screen=fused),
+        )
+        assert tuple(map(int, got)) == tuple(map(int, ref)), f"fused={fused}"
     assert int(ref[0]) == 1 and bool(ref[2])  # B's single 15-cost slot wins
 
 
@@ -288,10 +306,16 @@ def test_sharded_fleet_end_to_end():
     tolerance is live."""
     rng = np.random.default_rng(23)
     hosts = _random_fleet(rng, 43)
-    plain = SoAFleet(hosts, cost_fn=RevenueCost(), k_slots=8, shortlist=8)
+    plain = SoAFleet(
+        hosts, cost_fn=RevenueCost(), k_slots=8,
+        policy=SchedulerPolicy.for_cost(RevenueCost(), shortlist=8),
+    )
     sharded = SoAFleet(
         _random_fleet(np.random.default_rng(23), 43),
-        cost_fn=RevenueCost(), k_slots=8, shortlist=8, mesh=fleet_mesh(),
+        cost_fn=RevenueCost(), k_slots=8,
+        policy=SchedulerPolicy.for_cost(
+            RevenueCost(), shortlist=8, mesh=fleet_mesh()
+        ),
     )
     assert sharded.state.n_hosts % sharded.mesh.size == 0
 
@@ -326,6 +350,49 @@ def test_sharded_fleet_end_to_end():
 
 
 @multi_device
+@pytest.mark.parametrize("fused", [False, True])
+def test_sharded_mixed_cost_parity(fused):
+    """Heterogeneous billing on the sharded path: a fleet mixing all four
+    cost kinds (per-instance ``cost_kind``) must make bit-identical
+    decisions sharded vs unsharded — the kind-table select runs upstream of
+    the screen, so sharding (and the per-shard fused kernel) must be
+    transparent to it."""
+    kinds = ("period", "count", "revenue", "recompute")
+    rng = np.random.default_rng(77)
+    hosts = _random_fleet(rng, 41)
+    for h in hosts:
+        for inst in h.preemptible_instances():
+            inst.cost_kind = kinds[int(rng.integers(4))]
+            inst.last_checkpoint = inst.start_time + 120.0
+    policy = SchedulerPolicy.for_cost(
+        MixedCost(default="period", kinds=kinds), shortlist=8
+    )
+    mesh = fleet_mesh()
+    state, _ = build_fleet_state(hosts, k_slots=8)
+    padded = pad_fleet_state(state, padded_hosts(41, mesh.size, m_keep=9))
+    sharded = shard_fleet_state(padded, mesh)
+    for step, pre in ((0, False), (1, True), (2, False)):
+        req = np.asarray(SIZES[step % 3].vec, np.float32)
+        kind = np.int32(step % 4)
+        _, ref = schedule_step(
+            padded, req, pre, np.int32(-1), NOW + 60.0 * step, 1.0,
+            policy=policy, req_cost_kind=kind, donate=False,
+        )
+        _, got = schedule_step(
+            sharded, req, pre, np.int32(-1), NOW + 60.0 * step, 1.0,
+            policy=dataclasses.replace(
+                policy, mesh=mesh, fused_screen=fused or None
+            ),
+            req_cost_kind=kind, donate=False,
+        )
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the mixed column actually varies (otherwise this test is vacuous)
+    col = np.asarray(padded.inst_cost_kind)[np.asarray(padded.inst_valid)]
+    assert len(np.unique(col)) == 4
+
+
+@multi_device
 def test_sharded_simulator_smoke():
     """SoASimulator(mesh=...) runs the whole event loop on the sharded state
     and produces identical metrics to the unsharded simulator (same seed ⇒
@@ -343,7 +410,8 @@ def test_sharded_simulator_smoke():
     for mesh in (None, fleet_mesh()):
         sim = SoASimulator(
             make_uniform_fleet(44, node), workload, seed=5,
-            cost_fn=PeriodCost(), k_slots=8, shortlist=8, mesh=mesh,
+            cost_fn=PeriodCost(), k_slots=8,
+            policy=SchedulerPolicy(shortlist=8, mesh=mesh),
         )
         summary = sim.run(1800.0).summary()
         # sched_latency_* are wall-clock timings — everything else is a pure

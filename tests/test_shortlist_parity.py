@@ -26,6 +26,7 @@ from repro.core.jax_scheduler import (
     schedule_decision,
     schedule_step,
 )
+from repro.core.policy import SchedulerPolicy
 from repro.core.soa_fleet import AdaptiveShortlist, SoAFleet
 from repro.core.types import VM_SPEC, Host, Instance, Request
 
@@ -68,8 +69,9 @@ def _decide(state, req_vec, preemptible, shortlist, multipliers=(1.0, 1.0, 0.0, 
         jnp.asarray(req_vec, jnp.float32),
         jnp.asarray(preemptible),
         jnp.asarray(-1, jnp.int32),
-        weigher_multipliers=multipliers,
-        shortlist=shortlist,
+        policy=SchedulerPolicy(
+            weigher_multipliers=multipliers, shortlist=shortlist
+        ),
     )
     return int(h), int(m), bool(ok)
 
@@ -106,14 +108,14 @@ def test_shortlist_parity_on_fleet_state_step(cost_fn):
         req = np.asarray(SIZES[step % 3].vec, np.float32)
         _, full = schedule_step(
             fleet.state, req, pre, np.int32(-1), now, 1.0,
-            cost_kind=fleet.cost_kind, period=fleet.period,
-            shortlist=0, donate=False,
+            policy=dataclasses.replace(fleet.policy, shortlist=0),
+            donate=False,
         )
         for m in (2, 8):
             _, got = schedule_step(
                 fleet.state, req, pre, np.int32(-1), now, 1.0,
-                cost_kind=fleet.cost_kind, period=fleet.period,
-                shortlist=m, donate=False,
+                policy=dataclasses.replace(fleet.policy, shortlist=m),
+                donate=False,
             )
             # decision outputs only — the trailing (fell_back, margin)
             # health signals differ between shortlist settings by design
@@ -195,9 +197,16 @@ def test_adaptive_fleet_decisions_and_counters():
     fallback/decision counters through shortlist_stats."""
     rng = np.random.default_rng(11)
     hosts = _random_fleet(rng, 24)
-    static = SoAFleet(hosts, cost_fn=PeriodCost(), k_slots=8, shortlist=4)
-    adaptive = SoAFleet(hosts, cost_fn=PeriodCost(), k_slots=8, shortlist=4,
-                        adaptive_shortlist=True)
+    static = SoAFleet(
+        hosts, cost_fn=PeriodCost(), k_slots=8,
+        policy=SchedulerPolicy(shortlist=4),
+    )
+    # starting M below adaptive_bounds is legal (pre-policy behavior: the
+    # controller clamps as it moves)
+    adaptive = SoAFleet(
+        hosts, cost_fn=PeriodCost(), k_slots=8,
+        policy=SchedulerPolicy(shortlist=4, adaptive_shortlist=True),
+    )
     assert adaptive.effective_shortlist == 4
     items = [
         (Request(id=f"r{i}", resources=SIZES[i % 3],

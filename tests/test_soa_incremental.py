@@ -47,7 +47,7 @@ def _assert_states_equal(state, oracle, msg=""):
             np.asarray(getattr(oracle, field)),
             err_msg=f"{msg}: {field}",
         )
-    for field in ("inst_start", "inst_price", "inst_ckpt"):
+    for field in ("inst_start", "inst_price", "inst_ckpt", "inst_cost_kind"):
         np.testing.assert_array_equal(
             np.asarray(getattr(state, field)) * valid,
             np.asarray(getattr(oracle, field)) * valid,
@@ -85,6 +85,7 @@ class _PyMirror:
                 host=host.name,
                 start_time=outcome.instance.start_time,
                 price_rate=outcome.instance.price_rate,
+                cost_kind=outcome.instance.cost_kind,
             )
         )
 
@@ -120,10 +121,10 @@ def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
                 py.hosts, k_slots=K, domain_ids=fleet.domain_ids,
                 slot_assignment=fleet.slot_assignment(),
             )
-            res, pre, dom = fleet._req_arrays(req)
+            res, pre, dom, kind = fleet._req_arrays(req)
             _, (oh, oslot, ook, okill, _fb, _mg) = schedule_step(
                 oracle, res, pre, dom, now, price,
-                cost_kind=fleet.cost_kind, period=fleet.period,
+                policy=fleet.policy, req_cost_kind=kind,
             )
             # victims the oracle decision implies, read from the slot map
             # BEFORE the fast path mutates it
@@ -212,13 +213,13 @@ def test_schedule_many_bit_identical_to_sequential_steps():
         state_seq, o = schedule_step(
             state_seq, res[i], bool(pre[i]), dom[i], float(now[i]),
             float(price[i]),
-            cost_kind=fleet.cost_kind, period=fleet.period,
+            policy=fleet.policy,
         )
         outs.append([np.asarray(x) for x in o])
 
     state_scan, (h, s, ok, kill, _fb, _mg) = schedule_many(
         fleet.state, res, pre, dom, now, price,
-        cost_kind=fleet.cost_kind, period=fleet.period,
+        policy=fleet.policy,
     )
     np.testing.assert_array_equal(np.asarray(h), [o[0] for o in outs])
     np.testing.assert_array_equal(np.asarray(ok), [o[2] for o in outs])
