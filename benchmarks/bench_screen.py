@@ -31,6 +31,17 @@ Rows (emitted to BENCH_screen.json via the common REPRO_BENCH_OUT sink):
                                 ``SchedulerPolicy``) vs the single-kind
                                 column above — the mixed-payment overhead is
                                 the extra elementwise selects only;
+  * ``screen_sustained_*``    — the streaming admission front end under a
+                                sustained arrival stream: requests flow
+                                through ``submit`` → double-buffered
+                                non-blocking ``drain`` at admit_batch B.
+                                ``mean_us``/``p50_us`` are the wall-clock
+                                admission latency per request (submit →
+                                outcome absorbed); the derived field records
+                                decisions/sec (``dps=``) and the tail
+                                (``p99_us=``).  Uncontended fleet — this
+                                measures the admission plane's overhead, not
+                                retry/backfill behavior;
   * ``screen_adaptive_*``     — the AdaptiveShortlist workload study: a
                                 fallback-heavy fleet (loose stage-1 bounds
                                 on every host, so small M cannot certify its
@@ -80,7 +91,7 @@ from repro.core.soa_fleet import SoAFleet
 from repro.core.types import VM_SPEC, Host, Instance, Request
 
 from .bench_fig2_latency import _packed_state
-from .common import NOW, TINY, emit, time_call, write_bench_json
+from .common import NOW, SIZES, TINY, emit, time_call, write_bench_json
 
 MULT = (1.0, 1.0, 0.0, 0.0)
 M_KEEP = 65
@@ -286,6 +297,61 @@ def _bench_adaptive(repeats: int) -> None:
             )
 
 
+def _bench_sustained() -> None:
+    """Sustained throughput of the streaming admission plane: wall-clock
+    submit→absorbed latency and decisions/sec through the double-buffered
+    non-blocking drain path, at two batch sizes.
+
+    The fleet is large enough that every request admits on its first
+    attempt — these rows price the admission machinery itself (queue push,
+    lexicographic select, the ``_step_core`` scan, outcome absorption), not
+    retry/backfill churn.  One warmup pass on a throwaway fleet compiles
+    both drain shapes; equal policies share the compile cache, so the
+    measured fleet starts hot."""
+    n = 256 if TINY else 4096
+    n_reqs = 64 if TINY else 1024
+
+    def stream(fleet, b):
+        rng = np.random.default_rng(7)
+        now = NOW
+        for i0 in range(0, n_reqs, b):
+            for j in range(i0, min(i0 + b, n_reqs)):
+                now += 1.0
+                fleet.submit(
+                    Request(
+                        id=f"s{j}", resources=SIZES["medium"],
+                        preemptible=bool(rng.random() < 0.5),
+                    ),
+                    now,
+                )
+            fleet.drain(now, block=False)  # double-buffered dispatch
+        fleet.drain_all(now + 1.0)
+        fleet.admission.sync()
+
+    for b in (16, 64):
+        policy = SchedulerPolicy(
+            queue_capacity=4 * b, admit_batch=b, max_retries=4
+        )
+        hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(n)]
+        stream(SoAFleet(hosts, k_slots=8, policy=policy), b)  # warmup/compile
+        hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(n)]
+        fleet = SoAFleet(hosts, k_slots=8, policy=policy)
+        t0 = time.perf_counter()
+        stream(fleet, b)
+        elapsed_s = time.perf_counter() - t0
+        st = fleet.admission.stats
+        assert st.admitted == n_reqs, "sustained bench must stay uncontended"
+        wall_us = np.asarray(st.wall_wait_s) * 1e6
+        dps = st.admitted / elapsed_s
+        emit(
+            f"screen_sustained_n{n}_b{b}",
+            float(wall_us.mean()),
+            f"dps={dps:.0f};p99_us={float(np.percentile(wall_us, 99)):.1f};"
+            f"reqs={n_reqs};admitted={st.admitted}",
+            p50_us=float(np.percentile(wall_us, 50)),
+        )
+
+
 def _fused(state, req_res, m_keep, interpret):
     from repro.kernels.sched_screen import sched_screen
 
@@ -379,6 +445,8 @@ def run() -> None:
     _bench_sharded(k=8, repeats=repeats)
     # Adaptive-shortlist workload study (fallback-heavy vs calm fleets).
     _bench_adaptive(repeats=repeats)
+    # Streaming admission sustained-throughput rows (PR 6).
+    _bench_sustained()
     write_bench_json("screen")
 
 

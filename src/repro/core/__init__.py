@@ -5,6 +5,16 @@ Python reference implementation (oracle + paper-faithful):
 Vectorized beyond-paper implementation:
     jax_scheduler.JaxPreemptibleScheduler  (jit; optional Pallas hot path)
 """
+from .admission import (
+    AdmissionFrontEnd,
+    AdmissionQueueState,
+    AdmissionStats,
+    DrainResult,
+    queue_init,
+    queue_pop,
+    queue_push,
+    queue_select,
+)
 from .cluster import Cluster, make_uniform_fleet
 from .cost import CountCost, MixedCost, PeriodCost, RecomputeCost, RevenueCost
 from .fleet_sharding import (
@@ -17,7 +27,6 @@ from .fleet_sharding import (
 )
 from .policy import (
     COST_KINDS,
-    PolicyDeprecationWarning,
     SchedulerPolicy,
 )
 from .preemption import PreemptAck, PreemptionController
@@ -43,9 +52,11 @@ from .types import (
 )
 
 __all__ = [
+    "AdmissionFrontEnd", "AdmissionQueueState", "AdmissionStats",
+    "DrainResult", "queue_init", "queue_pop", "queue_push", "queue_select",
     "Cluster", "make_uniform_fleet",
     "CountCost", "MixedCost", "PeriodCost", "RecomputeCost", "RevenueCost",
-    "COST_KINDS", "PolicyDeprecationWarning", "SchedulerPolicy",
+    "COST_KINDS", "SchedulerPolicy",
     "fleet_mesh", "merge_shortlists", "pad_fleet_state", "padded_hosts",
     "padded_hosts_for", "shard_fleet_state",
     "PreemptAck", "PreemptionController",

@@ -90,10 +90,8 @@ from .cost import (
 from .policy import (
     COST_KIND_IDS,
     DEFAULT_SHORTLIST,
-    LEGACY_DECISION_KNOBS,
-    LEGACY_STEP_KNOBS,
     SchedulerPolicy,
-    resolve_policy,
+    ensure_policy,
 )
 from .screen_math import (
     EPS,
@@ -771,7 +769,6 @@ def schedule_decision(
     req_preemptible: jax.Array,  # () bool
     req_domain: jax.Array,       # () int32; -1 = any
     policy: Optional[SchedulerPolicy] = None,
-    **legacy,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One scheduling decision.  Returns (host_idx, term_mask_idx, ok).
 
@@ -783,12 +780,9 @@ def schedule_decision(
     TPU, jnp elsewhere); ``mesh`` = optional 1-D device mesh sharding
     stage 1 host-major (see ``fleet_sharding``); any setting returns the
     same decision (see ``_decision_core``).  Equal policies hit one jit
-    cache entry.  The pre-policy loose kwargs still work as deprecated
-    shims for one release (``PolicyDeprecationWarning``).
+    cache entry.
     """
-    policy = resolve_policy(
-        policy, legacy, LEGACY_DECISION_KNOBS, "schedule_decision"
-    )
+    policy = ensure_policy(policy, "schedule_decision")
     return _decision_entry(
         state, req_res, req_preemptible, req_domain, policy=policy
     )
@@ -1138,7 +1132,6 @@ def schedule_step(
     policy: Optional[SchedulerPolicy] = None,
     req_cost_kind: jax.Array = -1,  # () int32 kind id; -1 = policy default
     donate: Optional[bool] = None,
-    **legacy,
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Fused decide-and-apply on the persistent state (one dispatch/event).
 
@@ -1150,11 +1143,10 @@ def schedule_step(
 
     ``policy`` (a ``SchedulerPolicy``) is the one static knob bundle: cost
     table + period, weigher multipliers, shortlist M, and the execution
-    backends; equal policies share a single compile-cache entry.  The old
-    loose kwargs (``cost_kind``/``period``/``shortlist``/...) remain as
-    deprecated shims for one release.  ``req_cost_kind`` tags the billing
-    kind recorded on a preemptible placement (``COST_KIND_IDS``; -1 = the
-    policy's default) — the per-request half of the mixed-payment model.
+    backends; equal policies share a single compile-cache entry.
+    ``req_cost_kind`` tags the billing kind recorded on a preemptible
+    placement (``COST_KIND_IDS``; -1 = the policy's default) — the
+    per-request half of the mixed-payment model.
 
     With ``donate`` unset the policy's ``donate`` field applies (default
     True): the input state's buffers are reused for the output — the caller
@@ -1163,7 +1155,7 @@ def schedule_step(
     shards stage 1 host-major across devices (the state should already be
     padded + placed via ``fleet_sharding``).
     """
-    policy = resolve_policy(policy, legacy, LEGACY_STEP_KNOBS, "schedule_step")
+    policy = ensure_policy(policy, "schedule_step")
     if donate is None:
         donate = policy.donate
     fn = _step_donated if donate else _step_kept
@@ -1184,7 +1176,6 @@ def schedule_many(
     policy: Optional[SchedulerPolicy] = None,
     req_cost_kind: Optional[jax.Array] = None,  # (B,) int32; None = defaults
     donate: Optional[bool] = None,
-    **legacy,
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Run a request batch through ``lax.scan`` carrying the fleet state, so
     each decision sees every earlier placement/termination in the batch —
@@ -1199,7 +1190,7 @@ def schedule_many(
     semantics as in ``schedule_step`` (the sharded stage 1 runs inside the
     scan body; the carried state stays sharded).
     """
-    policy = resolve_policy(policy, legacy, LEGACY_STEP_KNOBS, "schedule_many")
+    policy = ensure_policy(policy, "schedule_many")
     if donate is None:
         donate = policy.donate
     if req_cost_kind is None:
@@ -1378,15 +1369,13 @@ class JaxPreemptibleScheduler:
         cost_fn: Optional[CostFunction] = None,
         k_slots: int = 8,
         policy: Optional[SchedulerPolicy] = None,
-        **legacy,
     ):
         #: the one static knob bundle; ``policy.mesh`` note: the rebuild
         #: path does not pad, so sharding only engages when the host count
         #: already divides the mesh with ≥ M+1 hosts per shard; the
         #: persistent path (SoAFleet(mesh=...)) pads automatically.
-        self.policy = resolve_policy(
-            policy, legacy, LEGACY_DECISION_KNOBS, "JaxPreemptibleScheduler",
-            cost_fn=cost_fn,
+        self.policy = ensure_policy(
+            policy, "JaxPreemptibleScheduler", cost_fn=cost_fn
         )
         #: python cost module used to translate winning masks back into
         #: ``TerminationPlan`` costs (and to freeze slot costs at rebuild);

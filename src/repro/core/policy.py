@@ -35,15 +35,20 @@ oracle).  A single-kind policy compiles the exact pre-policy program — no
 kind column is read and decisions are bit-identical to the old loose-kwarg
 path.
 
-Legacy loose kwargs are accepted for one release via thin shims that build
-the equivalent policy and raise :class:`PolicyDeprecationWarning` — CI runs
-tier-1 with that category promoted to an error, so in-repo code is fully
-migrated and only external callers ride the shims.
+The **admission knobs** (``queue_capacity``, ``admit_batch``,
+``slo_target_s``, ``max_retries``, ``n_classes``) configure the streaming
+admission front end (``core.admission``): a device-resident wait queue with
+priority classes and backfill retries in front of the decision pipeline.
+``queue_capacity=0`` (the default) disables the admission plane entirely —
+every driver behaves exactly as before.
+
+The pre-policy loose decision kwargs were removed one release after their
+deprecation (the old ``resolve_policy`` shims and
+``PolicyDeprecationWarning``); every entry point now takes ``policy=`` only.
 """
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional, Tuple
 
 from .cost import (
@@ -65,13 +70,6 @@ COST_KIND_IDS = {kind: i for i, kind in enumerate(COST_KINDS)}
 #: (not ``jax_scheduler``) so the policy can resolve its own ceiling without
 #: an import cycle; ``jax_scheduler`` re-exports it.
 DEFAULT_SHORTLIST = 64
-
-
-class PolicyDeprecationWarning(DeprecationWarning):
-    """Raised when a deprecated loose decision kwarg is used instead of
-    ``SchedulerPolicy``.  A distinct category so CI can promote exactly
-    these to errors (`-W error::repro.core.policy.PolicyDeprecationWarning`)
-    without tripping on third-party DeprecationWarnings."""
 
 
 def _is_pow2(x: int) -> bool:
@@ -104,6 +102,16 @@ class SchedulerPolicy:
       shard* inside ``shard_map``.
     * ``donate`` — donate input state buffers on step/many (per-call
       ``donate=`` overrides).
+    * ``queue_capacity`` — slots in the device-resident admission queue
+      (0 = admission plane off; ``core.admission`` untouched).
+    * ``admit_batch`` — decisions per drain (the ``schedule_many`` batch the
+      front end accumulates toward).
+    * ``slo_target_s`` — admission-latency SLO (sim-time seconds): a drain
+      is forced once the oldest waiting arrival has waited this long.
+    * ``max_retries`` — placement attempts per queued request before it is
+      rejected (1 = no backfill retry).
+    * ``n_classes`` — priority classes; class 0 (interactive) drains first,
+      class ``n_classes - 1`` (batch) last.
     """
 
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0)
@@ -117,6 +125,11 @@ class SchedulerPolicy:
     fused_screen: Optional[bool] = None
     mesh: object = None  # Optional[jax.sharding.Mesh]; hashable by layout
     donate: bool = True
+    queue_capacity: int = 0
+    admit_batch: int = 32
+    slo_target_s: float = 60.0
+    max_retries: int = 8
+    n_classes: int = 2
 
     def __post_init__(self):
         # Tuple-normalize sequence fields so list-passing callers still get a
@@ -165,6 +178,31 @@ class SchedulerPolicy:
             raise ValueError(
                 "mesh must be a 1-D jax.sharding.Mesh (see fleet_sharding.fleet_mesh)"
             )
+        # -- admission plane --------------------------------------------------
+        qc, ab = int(self.queue_capacity), int(self.admit_batch)
+        mr, nc = int(self.max_retries), int(self.n_classes)
+        if qc < 0:
+            raise ValueError(f"queue_capacity must be >= 0 (0 = off), got {qc}")
+        if ab < 1:
+            raise ValueError(f"admit_batch must be >= 1, got {ab}")
+        if qc and ab > qc:
+            raise ValueError(
+                f"admit_batch ({ab}) cannot exceed queue_capacity ({qc}); a "
+                "drain selects at most the whole queue"
+            )
+        if not float(self.slo_target_s) > 0:
+            raise ValueError(
+                f"slo_target_s must be positive, got {self.slo_target_s}"
+            )
+        if mr < 1:
+            raise ValueError(f"max_retries must be >= 1, got {mr}")
+        if nc < 1:
+            raise ValueError(f"n_classes must be >= 1, got {nc}")
+        object.__setattr__(self, "queue_capacity", qc)
+        object.__setattr__(self, "admit_batch", ab)
+        object.__setattr__(self, "slo_target_s", float(self.slo_target_s))
+        object.__setattr__(self, "max_retries", mr)
+        object.__setattr__(self, "n_classes", nc)
 
     # -- cost-kind table ------------------------------------------------------
     @property
@@ -235,63 +273,36 @@ class SchedulerPolicy:
         }[self.cost_kind]()
 
 
-#: Loose kwargs each legacy entry point may still pass (mapped 1:1 onto
-#: policy fields).  ``cost_kind``/``period`` only exist on the fleet-state
-#: paths; the rest are shared.
-LEGACY_DECISION_KNOBS = (
-    "use_pallas", "weigher_multipliers", "shortlist", "fused_screen", "mesh",
-)
-LEGACY_STEP_KNOBS = LEGACY_DECISION_KNOBS + ("cost_kind", "period")
-LEGACY_FLEET_KNOBS = LEGACY_DECISION_KNOBS + ("adaptive_shortlist",)
-
-
-def resolve_policy(
+def ensure_policy(
     policy: Optional[SchedulerPolicy],
-    legacy: dict,
-    allowed: Tuple[str, ...],
     where: str,
     cost_fn: Optional[CostFunction] = None,
 ) -> SchedulerPolicy:
-    """Shim glue for the one-release deprecation window: fold loose legacy
-    kwargs into a ``SchedulerPolicy`` (warning), or pass a given policy
-    through.  Mixing both is an error — there is one source of truth."""
-    unknown = set(legacy) - set(allowed)
-    if unknown:
-        raise TypeError(f"{where}() got unexpected keyword(s) {sorted(unknown)}")
-    if legacy and policy is not None:
-        raise TypeError(
-            f"{where}(): pass either policy= or the deprecated loose kwargs "
-            f"{sorted(legacy)}, not both"
-        )
-    if legacy:
-        warnings.warn(
-            f"{where}({', '.join(sorted(legacy))}=...) is deprecated; pass "
-            f"policy=SchedulerPolicy(...) instead (one static argument, "
-            "validated at construction)",
-            PolicyDeprecationWarning,
-            stacklevel=3,
-        )
-        return SchedulerPolicy.for_cost(cost_fn, **legacy)
-    if policy is not None:
-        if not isinstance(policy, SchedulerPolicy):
-            raise TypeError(f"{where}(): policy must be a SchedulerPolicy")
-        if cost_fn is not None:
-            # Pre-policy, the billing kind was ALWAYS derived from cost_fn;
-            # a policy that bills differently from an explicitly-passed
-            # cost_fn would silently change decisions mid-migration — make
-            # the disagreement loud instead.
-            derived = SchedulerPolicy.for_cost(cost_fn)
-            if (
-                derived.cost_kind != policy.cost_kind
-                or set(derived.kind_table) != set(policy.kind_table)
-                or derived.period != policy.period
-            ):
-                raise ValueError(
-                    f"{where}(): cost_fn={cost_fn.name!r} bills "
-                    f"{derived.kind_table} @ period={derived.period} but the "
-                    f"given policy bills {policy.kind_table} @ "
-                    f"period={policy.period}; drop cost_fn or build the "
-                    "policy with SchedulerPolicy.for_cost(cost_fn, ...)"
-                )
-        return policy
-    return SchedulerPolicy.for_cost(cost_fn)
+    """Validate/derive the policy an entry point will compile against.
+
+    ``None`` derives a policy from ``cost_fn`` (or the all-defaults policy).
+    An explicit policy passes through type-checked — and, when ``cost_fn``
+    is ALSO given, checked for billing agreement: billing was historically
+    derived from ``cost_fn``, so a policy that bills differently from an
+    explicitly-passed cost module would silently reprice decisions — make
+    the disagreement loud instead.
+    """
+    if policy is None:
+        return SchedulerPolicy.for_cost(cost_fn)
+    if not isinstance(policy, SchedulerPolicy):
+        raise TypeError(f"{where}(): policy must be a SchedulerPolicy")
+    if cost_fn is not None:
+        derived = SchedulerPolicy.for_cost(cost_fn)
+        if (
+            derived.cost_kind != policy.cost_kind
+            or set(derived.kind_table) != set(policy.kind_table)
+            or derived.period != policy.period
+        ):
+            raise ValueError(
+                f"{where}(): cost_fn={cost_fn.name!r} bills "
+                f"{derived.kind_table} @ period={derived.period} but the "
+                f"given policy bills {policy.kind_table} @ "
+                f"period={policy.period}; drop cost_fn or build the "
+                "policy with SchedulerPolicy.for_cost(cost_fn, ...)"
+            )
+    return policy

@@ -33,7 +33,8 @@ from .types import Host, Instance, Request, Resources
 class _Event:
     time: float
     seq: int
-    kind: str = dataclasses.field(compare=False)          # arrival|departure|fail_host|heal_host
+    # arrival|departure|fail_host|heal_host|drain (drain = admission SLO tick)
+    kind: str = dataclasses.field(compare=False)
     payload: object = dataclasses.field(compare=False, default=None)
 
 
@@ -216,18 +217,30 @@ class SoASimulator:
     jit-compiled ``lax.scan`` (``schedule_many``) so consecutive decisions
     still see each other's placements exactly.  Python ``Host`` objects are
     materialized only on demand (``fleet.sync_hosts()``).  Decision knobs
-    ride on one ``SchedulerPolicy`` (``policy=``; the pre-policy loose
-    kwargs remain as deprecated shims) — e.g. ``policy.mesh`` (a 1-D device
-    mesh, see ``fleet_sharding``) shards the fleet state host-major across
-    devices and the whole event loop then runs on the sharded stage-1
-    screen, bit-identical to the single-device run; a mixed
+    ride on one ``SchedulerPolicy`` (``policy=``) — e.g. ``policy.mesh``
+    (a 1-D device mesh, see ``fleet_sharding``) shards the fleet state
+    host-major across devices and the whole event loop then runs on the
+    sharded stage-1 screen, bit-identical to the single-device run; a mixed
     ``policy.cost_kinds`` table bills each instance by its own kind.
+
+    With ``policy.queue_capacity > 0`` the loop runs in **streaming
+    admission mode**: arrivals ``submit`` into the fleet's admission front
+    end instead of being decided inline, and queue-drain events fire on the
+    three triggers of ``core.admission`` — a full ``admit_batch``, the
+    ``slo_target_s`` deadline of the oldest waiting arrival, and any
+    capacity-freeing event (departure / host failure / heal) while requests
+    wait (the backfill path).  Drains dispatch non-blocking
+    (double-buffered: the host accumulates the next batch while the device
+    decides this one); rejected requests (queue overflow or
+    ``max_retries`` exhausted) count as failures, and
+    ``metrics.sched_latency_s`` then holds each placement's wall-clock
+    admission latency (submit → outcome absorbed).
 
     Behavioral deltas vs ``Simulator`` (documented, both benign):
       * lifetimes are drawn at arrival time (not on placement success), so
         the rng streams differ once a request fails;
       * with ``stop_on_normal_failure`` the loop stops at the end of the
-        batch containing the failure, not mid-batch.
+        batch (or drain) containing the failure, not mid-batch.
     """
 
     def __init__(
@@ -239,18 +252,11 @@ class SoASimulator:
         k_slots: int = 8,
         batch_max: int = 64,
         policy=None,
-        **legacy,
     ):
         self.fleet = (
             hosts
             if isinstance(hosts, SoAFleet)
-            else SoAFleet(
-                hosts,
-                cost_fn=cost_fn,
-                k_slots=k_slots,
-                policy=policy,
-                **legacy,
-            )
+            else SoAFleet(hosts, cost_fn=cost_fn, k_slots=k_slots, policy=policy)
         )
         self.workload = workload
         self.batch_max = batch_max
@@ -263,6 +269,9 @@ class SoASimulator:
         #: buffered (arrival_time, request, lifetime) awaiting one scan flush
         self._pending: List[Tuple[float, Request, float]] = []
         self._min_dep = float("inf")
+        #: request id → lifetime drawn at arrival (streaming mode: the
+        #: departure is scheduled only once the drain places the request)
+        self._lifetimes: Dict[str, float] = {}
 
     # -- event helpers (identical draws to Simulator) -------------------------
     _push = Simulator._push
@@ -276,6 +285,10 @@ class SoASimulator:
         stop_on_normal_failure: bool = False,
         sample_every_s: float = 300.0,
     ) -> SimMetrics:
+        if self.fleet.admission is not None:
+            return self._run_streaming(
+                duration_s, stop_on_normal_failure, sample_every_s
+            )
         self._push(self.rng.exponential(1.0 / self.workload.arrival_rate_per_s), "arrival")
         next_sample = 0.0
         while self._heap:
@@ -347,6 +360,94 @@ class SoASimulator:
             self._push(t + lifetime, "departure", out.instance.id)
         self._pending.clear()
         self._min_dep = float("inf")
+        return failed_normal
+
+    # -- streaming admission mode (policy.queue_capacity > 0) ------------------
+    def _run_streaming(
+        self,
+        duration_s: float,
+        stop_on_normal_failure: bool,
+        sample_every_s: float,
+    ) -> SimMetrics:
+        front = self.fleet.admission
+        self._push(self.rng.exponential(1.0 / self.workload.arrival_rate_per_s), "arrival")
+        next_sample = 0.0
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.time > duration_s:
+                break
+            self.now = ev.time
+            if self.now >= next_sample:
+                front.sync()  # mirror current before observing state
+                self._sample()
+                next_sample = self.now + sample_every_s
+            if ev.kind == "arrival":
+                req = self._draw_request()
+                self._lifetimes[req.id] = self._draw_lifetime()
+                front.submit(req, self.now)
+                # SLO tick: by this time the arrival must have been drained
+                self._push(self.now + front.policy.slo_target_s, "drain")
+                self._push(
+                    self.now + self.rng.exponential(1.0 / self.workload.arrival_rate_per_s),
+                    "arrival",
+                )
+                if front.batch_ready():
+                    front.drain(self.now, block=False)
+            elif ev.kind == "drain":
+                deadline = front.next_deadline()
+                if deadline is not None and deadline <= self.now + 1e-9:
+                    front.drain(self.now, block=False)
+            elif ev.kind == "departure":
+                front.sync()  # instance ids must exist in the mirror
+                self.fleet.depart(ev.payload)
+                if front.waiting:  # backfill the freed capacity
+                    front.drain(self.now, block=False)
+            elif ev.kind == "fail_host":
+                front.sync()
+                self.fleet.fail_host(ev.payload)
+                if front.waiting:
+                    front.drain(self.now, block=False)
+            elif ev.kind == "heal_host":
+                self.fleet.heal_host(ev.payload)
+                if front.waiting:
+                    front.drain(self.now, block=False)
+            failed_normal = self._handle_drain_results(front.take_results())
+            if failed_normal and stop_on_normal_failure:
+                break
+        # end-of-run epilogue: every still-waiting request gets its retries.
+        # drain_all's blocking drains return their results directly; any
+        # still-in-flight async drain got banked by its first sync() —
+        # take_results() first keeps the fold chronological.
+        epilogue = front.drain_all(self.now)
+        self._handle_drain_results(front.take_results() + epilogue)
+        self._sample()
+        # in streaming mode the honest per-request latency is the wall-clock
+        # admission latency (submit → outcome absorbed), not a per-flush mean
+        self.metrics.sched_latency_s = list(front.stats.wall_wait_s)
+        return self.metrics
+
+    def _handle_drain_results(self, results) -> bool:
+        """Fold absorbed drain results into metrics + departure events.
+        Returns True when a normal request was rejected (stop signal)."""
+        failed_normal = False
+        for dr in results:
+            for out in dr.outcomes:
+                req = out.request
+                self.metrics.preemptions += len(out.victims)
+                if req.preemptible:
+                    self.metrics.placed_preemptible += 1
+                else:
+                    self.metrics.placed_normal += 1
+                lifetime = self._lifetimes.pop(req.id, None)
+                if lifetime is not None:
+                    self._push(dr.now + lifetime, "departure", out.instance.id)
+            for req in dr.rejected:
+                self._lifetimes.pop(req.id, None)
+                if req.preemptible:
+                    self.metrics.failures_preemptible += 1
+                else:
+                    self.metrics.failures_normal += 1
+                    failed_normal = True
         return failed_normal
 
     # -- fault injection -------------------------------------------------------

@@ -20,6 +20,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .admission import AdmissionFrontEnd, DrainResult, PAD_RES
 from .cost import CostFunction
 from .jax_scheduler import (
     DEFAULT_SHORTLIST,
@@ -37,14 +38,14 @@ from .jax_scheduler import (
 )
 from .policy import (
     COST_KIND_IDS,
-    LEGACY_FLEET_KNOBS,
     SchedulerPolicy,
-    resolve_policy,
+    ensure_policy,
 )
 from .types import Host, Instance, Request, Resources
 
-#: Padding sentinel for batched scheduling: a request no host can fit.
-_PAD_RES = 1e30
+#: Padding sentinel for batched scheduling: a request no host can fit
+#: (shared with the admission drain's untaken rows).
+_PAD_RES = PAD_RES
 
 
 @dataclasses.dataclass
@@ -159,8 +160,14 @@ class SoAFleet:
 
     ``policy.mesh`` pads the state (``fleet_sharding.padded_hosts``) and
     places it across the mesh at build; stage 1 then runs per shard under
-    ``shard_map`` with a bit-exact cross-shard merge.  The pre-policy loose
-    kwargs remain as deprecated shims for one release.
+    ``shard_map`` with a bit-exact cross-shard merge.
+
+    With ``policy.queue_capacity > 0`` the fleet additionally carries a
+    streaming admission front end (``core.admission``): arrivals go through
+    ``submit`` (admit-or-queue) and decisions happen at ``drain`` time in
+    priority order with backfill retries; the direct entry points
+    (``schedule_request``/``schedule_batch``) stay available and bypass the
+    queue.
     """
 
     def __init__(
@@ -169,11 +176,8 @@ class SoAFleet:
         cost_fn: Optional[CostFunction] = None,
         k_slots: int = 8,
         policy: Optional[SchedulerPolicy] = None,
-        **legacy,
     ):
-        self.policy = resolve_policy(
-            policy, legacy, LEGACY_FLEET_KNOBS, "SoAFleet", cost_fn=cost_fn
-        )
+        self.policy = ensure_policy(policy, "SoAFleet", cost_fn=cost_fn)
         self.cost_fn = cost_fn or self.policy.make_cost_fn()
         self.k_slots = k_slots
         #: optional host-side controller steering M between flushes
@@ -256,6 +260,11 @@ class SoAFleet:
         self._ids = itertools.count()
         cap = np.stack([c.vec for c in self.capacity]) if hosts else np.zeros((0, 1))
         self._cap0_total = float(cap[:, 0].sum())
+
+        #: streaming admission front end (None = admission plane off)
+        self.admission: Optional[AdmissionFrontEnd] = (
+            AdmissionFrontEnd(self) if self.policy.queue_capacity else None
+        )
 
     # -- back-compat views of the policy fields ------------------------------
     @property
@@ -470,6 +479,35 @@ class SoAFleet:
         return SoAOutcome(
             request=req, host=name, instance=inst, victims=tuple(victims)
         )
+
+    # -- streaming admission (policy.queue_capacity > 0) ---------------------
+    def _front(self) -> AdmissionFrontEnd:
+        if self.admission is None:
+            raise RuntimeError(
+                "admission plane is off; build the fleet with "
+                "SchedulerPolicy(queue_capacity=...) to use submit/drain"
+            )
+        return self.admission
+
+    def submit(self, req: Request, now: float, price: float = 1.0) -> None:
+        """Admit-or-queue: accept an arrival into the admission plane (the
+        decision happens at the next drain, in priority order)."""
+        self._front().submit(req, now, price=price)
+
+    def drain(self, now: float, block: bool = True) -> Optional[DrainResult]:
+        """Run one admission drain (see ``AdmissionFrontEnd.drain``)."""
+        return self._front().drain(now, block=block)
+
+    def drain_all(self, now: float) -> List[DrainResult]:
+        """Drain until the queue empties or retries exhaust."""
+        return self._front().drain_all(now)
+
+    @property
+    def admission_stats(self) -> Dict[str, float]:
+        """Counters + latency percentiles of the admission plane."""
+        front = self._front()
+        front.sync()
+        return front.stats.summary()
 
     # -- lifecycle transitions ----------------------------------------------
     def depart(self, instance_id: str) -> bool:

@@ -132,6 +132,12 @@ class Request:
     #: (``SchedulerPolicy.cost_kinds`` / ``cost.MixedCost``) set this per
     #: request; homogeneous fleets leave it None.
     cost_kind: Optional[str] = None
+    #: Admission-priority class for the streaming front end
+    #: (``core.admission``): 0 = highest (interactive), larger = lower.
+    #: ``None`` derives the class from ``preemptible`` — normal requests are
+    #: interactive (class 0), preemptible requests are batch (the lowest
+    #: class).  Ignored by the direct (unqueued) entry points.
+    priority: Optional[int] = None
     metadata: Mapping[str, object] = dataclasses.field(default_factory=dict)
 
 

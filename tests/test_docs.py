@@ -39,6 +39,7 @@ def _headings(md: str):
 def test_doc_files_exist():
     assert (REPO / "docs" / "architecture.md").is_file()
     assert (REPO / "docs" / "api.md").is_file()
+    assert (REPO / "docs" / "admission.md").is_file()
     assert (REPO / "docs" / "tpu_validation.md").is_file()
 
 

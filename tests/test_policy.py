@@ -1,7 +1,8 @@
 """``SchedulerPolicy`` contract tests: construction-time validation, value
 equality/hashability (the property that makes it a well-behaved jit static),
-the no-retrace guarantee, and the one-release deprecation shims over the old
-loose kwargs.
+the no-retrace guarantee, and the post-removal contract of the old loose
+kwargs (they are plain ``TypeError`` now — the one-release deprecation shims
+are gone).
 """
 from __future__ import annotations
 
@@ -29,7 +30,6 @@ from repro.core.jax_scheduler import (
 from repro.core.policy import (
     COST_KIND_IDS,
     COST_KINDS,
-    PolicyDeprecationWarning,
     SchedulerPolicy,
 )
 from repro.core.soa_fleet import SoAFleet
@@ -190,41 +190,61 @@ def test_equal_policies_share_compile_cache_step():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shims: loose kwargs warn, still work, and cannot be mixed
+# Post-deprecation contract: the loose kwargs are GONE (plain TypeError),
+# and policy= remains the only knob channel
 # ---------------------------------------------------------------------------
 
 
-def test_loose_kwargs_warn_and_match_policy():
+def test_loose_kwargs_are_gone():
     hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(10)]
     state, _ = build_soa_state(hosts, 100.0, PeriodCost(), k_slots=4)
     req = jnp.asarray(SMALL.vec, jnp.float32)
-    want = schedule_decision(
-        state, req, False, -1, policy=SchedulerPolicy(shortlist=2)
-    )
-    with pytest.warns(PolicyDeprecationWarning):
-        got = schedule_decision(state, req, False, -1, shortlist=2)
-    assert tuple(map(int, got)) == tuple(map(int, want))
-
-
-def test_fleet_loose_kwargs_warn():
-    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(4)]
-    with pytest.warns(PolicyDeprecationWarning):
-        fleet = SoAFleet(hosts, cost_fn=RevenueCost(), shortlist=4)
-    assert fleet.policy.cost_kind == "revenue" and fleet.policy.shortlist == 4
-    out = fleet.schedule_request(Request(id="r", resources=SMALL), now=60.0)
-    assert out.ok
-
-
-def test_policy_plus_loose_kwargs_is_an_error():
-    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(4)]
-    with pytest.raises(TypeError, match="not both"):
-        SoAFleet(hosts, policy=SchedulerPolicy(), shortlist=4)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        schedule_decision(state, req, False, -1, shortlist=2)
+    with pytest.raises(TypeError, match="unexpected keyword"):
+        SoAFleet(hosts, cost_fn=RevenueCost(), shortlist=4)
 
 
 def test_unknown_kwargs_rejected():
     hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(4)]
     with pytest.raises(TypeError, match="unexpected keyword"):
         SoAFleet(hosts, shortliist=4)  # typo must not pass silently
+
+
+def test_policy_must_be_a_policy():
+    hosts = [Host(name=f"h{i}", capacity=CAP) for i in range(4)]
+    with pytest.raises(TypeError, match="must be a SchedulerPolicy"):
+        SoAFleet(hosts, policy={"shortlist": 4})
+
+
+# ---------------------------------------------------------------------------
+# Admission-plane knob validation (queue_capacity & co.)
+# ---------------------------------------------------------------------------
+
+
+def test_admission_defaults_are_off():
+    p = SchedulerPolicy()
+    assert p.queue_capacity == 0 and p.admit_batch == 32
+    assert p.slo_target_s == 60.0 and p.max_retries == 8 and p.n_classes == 2
+
+
+def test_admission_knob_validation():
+    with pytest.raises(ValueError, match="queue_capacity"):
+        SchedulerPolicy(queue_capacity=-1)
+    with pytest.raises(ValueError, match="admit_batch"):
+        SchedulerPolicy(admit_batch=0)
+    with pytest.raises(ValueError, match="cannot exceed queue_capacity"):
+        SchedulerPolicy(queue_capacity=8, admit_batch=16)
+    with pytest.raises(ValueError, match="slo_target_s"):
+        SchedulerPolicy(slo_target_s=0.0)
+    with pytest.raises(ValueError, match="max_retries"):
+        SchedulerPolicy(max_retries=0)
+    with pytest.raises(ValueError, match="n_classes"):
+        SchedulerPolicy(n_classes=0)
+    # queued policies stay hashable/value-equal (the jit-static contract)
+    a = SchedulerPolicy(queue_capacity=64, admit_batch=16)
+    b = SchedulerPolicy(queue_capacity=64, admit_batch=16)
+    assert a == b and hash(a) == hash(b)
 
 
 # ---------------------------------------------------------------------------
