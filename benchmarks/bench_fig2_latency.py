@@ -98,7 +98,11 @@ def _packed_state(n: int, k: int, seed: int = 0):
         inst_price=jnp.ones((n, k), jnp.float32),
         inst_ckpt=jnp.zeros((n, k), jnp.float32),
         inst_cost_kind=jnp.full((n, k), -1, jnp.int32),
+        inst_period=jnp.full((n, k), -1.0, jnp.float32),
         inst_valid=jnp.ones((n, k), bool),
+        host_zone=jnp.zeros((n,), jnp.int32),
+        zone_term=jnp.zeros((1,), jnp.float32),
+        zone_up=jnp.zeros((1,), jnp.float32),
     )
     free_vcpus = int(cap[0]) - k * int(small[0])
     req = VM_SPEC.make(

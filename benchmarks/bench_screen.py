@@ -42,6 +42,17 @@ Rows (emitted to BENCH_screen.json via the common REPRO_BENCH_OUT sink):
                                 (``p99_us=``).  Uncontended fleet — this
                                 measures the admission plane's overhead, not
                                 retry/backfill behavior;
+  * ``screen_storm_*``        — the failure-domain study: the same seeded
+                                preemption-storm workload (one hot zone
+                                driven by a Markov churn regime) run
+                                churn-blind vs churn-aware
+                                (``churn_multiplier`` + ``churn_threshold``)
+                                at equal fleet size.  The row value is the
+                                per-decision latency; the note records storm
+                                kills, utilization, and placements — the
+                                aware row must show FEWER kills at
+                                equivalent utilization (asserted), which is
+                                the whole point of learning ẑ online;
   * ``screen_adaptive_*``     — the AdaptiveShortlist workload study: a
                                 fallback-heavy fleet (loose stage-1 bounds
                                 on every host, so small M cannot certify its
@@ -80,6 +91,7 @@ from repro.core.jax_scheduler import (
     slot_costs,
 )
 from repro.core.policy import SchedulerPolicy
+from repro.core.simulator import SoASimulator, WorkloadSpec
 from repro.core.screen_math import (
     base_from_consts,
     consts_of,
@@ -352,6 +364,77 @@ def _bench_sustained() -> None:
         )
 
 
+def _bench_storm() -> None:
+    """Failure-domain study: does learning ẑ online actually save instances?
+
+    One zone of three is hot — a Markov churn regime fires ``kill_frac=0.5``
+    reclaim waves while "on", seeded identically for both runs.  The blind
+    policy spreads preemptible work uniformly (ties → lowest index), so a
+    third of the fleet's instances sit in the blast radius at every storm;
+    the aware policy reads the learned per-zone ẑ after the first wave and
+    steers subsequent placements to the calm zones (weigher penalty) or
+    refuses the hot zone outright (threshold — learned rates are per-second,
+    so the gate sits at 1e-4, well under any stormed zone's ẑ and above the
+    exact 0.0 of a calm one).  The arrival rate keeps steady-state occupancy
+    under the calm zones' capacity, so avoidance costs no placements."""
+    n = 12 if TINY else 48
+    duration = 1500.0 if TINY else 7200.0
+    # steady state ≈ rate × mean lifetime, kept under the CALM zones'
+    # capacity (2/3 · n · 4 mediums/host) so zone avoidance is free
+    spec = WorkloadSpec(
+        arrival_rate_per_s=(1 / 25.0 if TINY else 1 / 20.0),
+        lifetime_min_s=(300.0 if TINY else 600.0),
+        lifetime_mean_s=(600.0 if TINY else 1800.0),
+        lifetime_max_s=(1200.0 if TINY else 3600.0),
+        preemptible_fraction=1.0,   # storms are the only kill source
+        flavors=(("medium", MEDIUM),),
+    )
+
+    def run_one(policy):
+        hosts = [
+            Host(name=f"h{i}", capacity=CAP, zone=f"z{i % 3}")
+            for i in range(n)
+        ]
+        sim = SoASimulator(hosts, spec, seed=11, k_slots=8, policy=policy)
+        # early one-shot wave seeds the learning; the regime keeps storming
+        sim.inject_zone_storm("z2", at_s=duration * 0.05, kill_frac=0.8)
+        sim.inject_churn_regime(
+            "z2", until_s=duration, mean_on_s=duration / 8.0,
+            mean_off_s=duration / 8.0, storm_every_s=duration / 50.0,
+            kill_frac=0.5, start_s=0.0,
+        )
+        m = sim.run(duration, sample_every_s=duration / 24.0)
+        return sim, m
+
+    results = {}
+    policies = (
+        ("blind", SchedulerPolicy()),
+        ("aware", SchedulerPolicy(churn_multiplier=2.0, churn_threshold=1e-4)),
+    )
+    for tag, policy in policies:
+        sim, m = run_one(policy)
+        s = m.summary()
+        lat = np.asarray(m.sched_latency_s) * 1e6
+        emit(
+            f"screen_storm_{tag}_n{n}",
+            float(lat.mean()),
+            (
+                f"per_decision;kills={m.storm_kills};storms={m.storms};"
+                f"util={s['mean_utilization']:.3f};"
+                f"placed={m.placed_preemptible};"
+                f"failed={m.failures_preemptible};"
+                f"fleet_churn={sim.fleet.fleet_churn_rate():.2e}"
+            ),
+            p50_us=float(np.percentile(lat, 50)) if lat.size else 0.0,
+        )
+        results[tag] = m
+    assert results["aware"].storm_kills < results["blind"].storm_kills, (
+        "churn-aware policy must take fewer storm kills than churn-blind "
+        f"(aware={results['aware'].storm_kills}, "
+        f"blind={results['blind'].storm_kills})"
+    )
+
+
 def _fused(state, req_res, m_keep, interpret):
     from repro.kernels.sched_screen import sched_screen
 
@@ -447,6 +530,8 @@ def run() -> None:
     _bench_adaptive(repeats=repeats)
     # Streaming admission sustained-throughput rows (PR 6).
     _bench_sustained()
+    # Failure-domain storm study: churn-aware vs churn-blind (PR 7).
+    _bench_storm()
     write_bench_json("screen")
 
 

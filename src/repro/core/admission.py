@@ -57,6 +57,7 @@ import numpy as np
 
 from .jax_scheduler import SoAFleetState, _step_core
 from .policy import COST_KIND_IDS, SchedulerPolicy
+from .screen_math import CHURN_EPS
 from .types import Request
 
 #: Padding sentinel for untaken drain rows: a request no host can fit, so
@@ -89,6 +90,7 @@ class AdmissionQueueState:
     preemptible: jax.Array  # (Q,)   bool
     domain: jax.Array       # (Q,)   i32; -1 = any
     cost_kind: jax.Array    # (Q,)   i32 kind id; -1 = policy default
+    period: jax.Array       # (Q,)   f32 contract period; -1 = policy default
     klass: jax.Array        # (Q,)   i32 priority class; 0 = highest
     price: jax.Array        # (Q,)   f32
     enq_t: jax.Array        # (Q,)   f32 enqueue (arrival) time
@@ -115,6 +117,7 @@ def queue_init(capacity: int, n_dims: int) -> AdmissionQueueState:
         preemptible=jnp.zeros((q,), bool),
         domain=jnp.full((q,), -1, jnp.int32),
         cost_kind=jnp.full((q,), -1, jnp.int32),
+        period=jnp.full((q,), -1.0, jnp.float32),
         klass=jnp.zeros((q,), jnp.int32),
         price=jnp.ones((q,), jnp.float32),
         enq_t=jnp.zeros((q,), jnp.float32),
@@ -131,6 +134,7 @@ def queue_push(
     preemptible: jax.Array,  # () bool
     domain: jax.Array,       # () i32
     cost_kind: jax.Array,    # () i32
+    period: jax.Array,       # () f32; -1 = policy default
     klass: jax.Array,        # () i32
     enq_t: jax.Array,        # () f32
     price: jax.Array,        # () f32
@@ -152,6 +156,7 @@ def queue_push(
         preemptible=jnp.where(sel, preemptible, q.preemptible),
         domain=jnp.where(sel, jnp.asarray(domain, jnp.int32), q.domain),
         cost_kind=jnp.where(sel, jnp.asarray(cost_kind, jnp.int32), q.cost_kind),
+        period=jnp.where(sel, jnp.asarray(period, jnp.float32), q.period),
         klass=jnp.where(sel, jnp.asarray(klass, jnp.int32), q.klass),
         price=jnp.where(sel, jnp.asarray(price, jnp.float32), q.price),
         enq_t=jnp.where(sel, jnp.asarray(enq_t, jnp.float32), q.enq_t),
@@ -164,7 +169,10 @@ def queue_push(
 
 
 def queue_select(
-    q: AdmissionQueueState, batch: int
+    q: AdmissionQueueState,
+    batch: int,
+    now: Optional[jax.Array] = None,
+    aging_rate: float = 0.0,
 ) -> Tuple[jax.Array, jax.Array]:
     """Pick the next ``batch`` entries in drain order.
 
@@ -173,8 +181,22 @@ def queue_select(
     entry re-drains ahead of everything that arrived after it.  Returns
     ``(idx (B,), take (B,))``; rows with ``take=False`` gathered an invalid
     entry (queue shorter than the batch) and must be treated as padding.
+
+    With ``aging_rate > 0`` (``policy.aging_rate``; a static knob, so the
+    branch is compile-time) an entry's *effective* class decays with its
+    queue wait — ``max(0, klass - floor(aging_rate * (now - enq_t)))`` —
+    so long-waiting batch entries eventually drain ahead of fresh
+    interactive load instead of starving (and stop burning retries against
+    a fleet that keeps serving class 0 first).  The secondary ``seq`` key
+    is untouched: FIFO within an effective class, and ``aging_rate=0``
+    compiles to the exact pre-aging selection.
     """
-    k_key = jnp.where(q.valid, q.klass, _BIG)
+    klass = q.klass
+    if aging_rate and now is not None:
+        waited = jnp.maximum(jnp.asarray(now, jnp.float32) - q.enq_t, 0.0)
+        decay = jnp.floor(jnp.float32(aging_rate) * waited).astype(jnp.int32)
+        klass = jnp.maximum(klass - decay, 0)
+    k_key = jnp.where(q.valid, klass, _BIG)
     s_key = jnp.where(q.valid, q.seq, _BIG)
     order = jnp.lexsort((s_key, k_key))  # primary k_key, secondary s_key
     idx = order[: int(batch)].astype(jnp.int32)
@@ -220,6 +242,7 @@ def _drain_entry(
     new_pre,     # (A,) bool
     new_dom,     # (A,) i32
     new_kind,    # (A,) i32
+    new_period,  # (A,) f32; -1 = policy default
     new_cls,     # (A,) i32
     new_t,       # (A,) f32 arrival times
     new_price,   # (A,) f32
@@ -234,6 +257,14 @@ def _drain_entry(
     ``now`` (the drain time), so a drained queue is bit-exact against
     feeding the same requests to the unqueued pipeline in drain order.
     Untaken rows carry the ``PAD_RES`` sentinel and no-op.
+
+    Graceful degradation (``policy.storm_threshold``): when the fleet-wide
+    observed churn rate ΣT/max(ΣU, eps) — read off the state's zone
+    accumulators — exceeds the threshold, this drain's preemptible rows are
+    demoted to non-preemptible *for this attempt* (spot capacity is being
+    reclaimed fleet-wide, so handing out more spot placements just feeds
+    the storm).  The demotion is reported per row (``degraded``) so the
+    host mirror books the placement under the demoted request.
     """
 
     def push_body(qs, xs):
@@ -242,32 +273,46 @@ def _drain_entry(
 
     q, (new_slot, pushed) = jax.lax.scan(
         push_body, q,
-        (new_res, new_pre, new_dom, new_kind, new_cls, new_t, new_price,
-         new_live),
+        (new_res, new_pre, new_dom, new_kind, new_period, new_cls, new_t,
+         new_price, new_live),
     )
 
-    idx, take = queue_select(q, policy.admit_batch)
+    idx, take = queue_select(
+        q, policy.admit_batch, now=now, aging_rate=policy.aging_rate
+    )
     b = idx.shape[0]
     b_res = jnp.where(take[:, None], q.res[idx], PAD_RES)
     b_pre = jnp.where(take, q.preemptible[idx], False)
     b_dom = jnp.where(take, q.domain[idx], -1)
     b_kind = jnp.where(take, q.cost_kind[idx], -1)
+    b_period = jnp.where(take, q.period[idx], -1.0)
     b_price = jnp.where(take, q.price[idx], 1.0)
     b_now = jnp.full((b,), now, jnp.float32)
 
+    if policy.storm_threshold is not None:
+        churn = jnp.sum(fleet_state.zone_term) / jnp.maximum(
+            jnp.sum(fleet_state.zone_up), jnp.float32(CHURN_EPS)
+        )
+        storm = churn > jnp.float32(policy.storm_threshold)
+        degraded = b_pre & storm
+        b_pre = b_pre & ~storm
+    else:
+        degraded = jnp.zeros_like(b_pre)
+
     def body(st, xs):
-        res, pre, dom, t, price, kind = xs
-        return _step_core(st, res, pre, dom, t, price, kind, policy)
+        res, pre, dom, t, price, kind, period = xs
+        return _step_core(st, res, pre, dom, t, price, kind, period, policy)
 
     fleet_state, (host_idx, slot, ok, kill, fell_back, margin) = jax.lax.scan(
-        body, fleet_state, (b_res, b_pre, b_dom, b_now, b_price, b_kind)
+        body, fleet_state,
+        (b_res, b_pre, b_dom, b_now, b_price, b_kind, b_period),
     )
     placed = ok & take
     wait = jnp.where(placed, now - q.enq_t[idx], 0.0)
     q, dropped = queue_pop(q, idx, take, placed, policy.max_retries)
     return fleet_state, q, (
         new_slot, pushed, idx, take, placed, host_idx, slot, kill,
-        fell_back, margin, wait, dropped, q.depth,
+        fell_back, margin, wait, dropped, degraded, q.depth,
     )
 
 
@@ -301,6 +346,8 @@ class AdmissionStats:
     rejected_retry: int = 0
     drains: int = 0
     retries: int = 0
+    #: preemptible attempts demoted to non-preemptible by storm degradation
+    degraded: int = 0
     queue_depth: int = 0
     #: sim-time admission latency (drain time - arrival time) per placement
     wait_s: List[float] = dataclasses.field(default_factory=list)
@@ -325,6 +372,7 @@ class AdmissionStats:
             "rejected_retry": self.rejected_retry,
             "drains": self.drains,
             "retries": self.retries,
+            "degraded": self.degraded,
             "queue_depth": self.queue_depth,
             "wait_p50_s": self._pct(self.wait_s, 50),
             "wait_p99_s": self._pct(self.wait_s, 99),
@@ -470,20 +518,21 @@ class AdmissionFrontEnd:
         pre = np.zeros((a,), bool)
         dom = np.full((a,), -1, np.int32)
         kind = np.full((a,), -1, np.int32)
+        per = np.full((a,), -1.0, np.float32)
         cls = np.zeros((a,), np.int32)
         enq = np.zeros((a,), np.float32)
         price = np.ones((a,), np.float32)
         live = np.zeros((a,), bool)
         for i, w in enumerate(pend):
-            r, p, dm, kd = self.fleet._req_arrays(w.request)
-            res[i], pre[i], dom[i], kind[i] = r, p, dm, kd
+            r, p, dm, kd, pd = self.fleet._req_arrays(w.request)
+            res[i], pre[i], dom[i], kind[i], per[i] = r, p, dm, kd, pd
             cls[i], enq[i], price[i], live[i] = w.klass, w.enq_t, w.price, True
 
         policy = self.fleet._flush_policy()
         fn = _drain_donated if policy.donate else _drain_kept
         self.fleet.state, self.qstate, aux = fn(
             self.fleet.state, self.qstate,
-            res, pre, dom, kind, cls, enq, price, live,
+            res, pre, dom, kind, per, cls, enq, price, live,
             jnp.asarray(now, jnp.float32), policy=policy,
         )
         self._inflight = (pend, float(now), aux)
@@ -497,7 +546,9 @@ class AdmissionFrontEnd:
         pend, now, aux = self._inflight
         self._inflight = None
         (new_slot, pushed, idx, take, placed, host_idx, slot, kill,
-         fell_back, margin, wait, dropped, depth) = (np.asarray(x) for x in aux)
+         fell_back, margin, wait, dropped, degraded, depth) = (
+            np.asarray(x) for x in aux
+        )
         wall_now = time.perf_counter()
 
         rejected: List[Request] = []
@@ -516,11 +567,17 @@ class AdmissionFrontEnd:
             row = int(idx[j])
             w = self.slots[row]
             assert w is not None, "drained an empty queue row"
-            attempts.append((w.request, bool(placed[j])))
+            # Storm degradation demoted this attempt on device; mirror the
+            # demotion so the python bookkeeping matches what actually ran.
+            req = w.request
+            if degraded[j]:
+                req = dataclasses.replace(req, preemptible=False)
+                self.stats.degraded += 1
+            attempts.append((req, bool(placed[j])))
             if placed[j]:
                 self.slots[row] = None
                 out = self.fleet._absorb(
-                    w.request, now, w.price, int(host_idx[j]), int(slot[j]),
+                    req, now, w.price, int(host_idx[j]), int(slot[j]),
                     True, kill[j],
                 )
                 outcomes.append(out)

@@ -41,7 +41,11 @@ class PeriodCost(CostFunction):
         self.period_s = float(period_s)
 
     def cost(self, instances: Sequence[Instance], now: float) -> float:
-        return sum(i.run_time(now) % self.period_s for i in instances)
+        # an instance carrying its own contract period bills by it
+        # (``Instance.period``; the device path's ``inst_period`` column)
+        return sum(
+            i.run_time(now) % (i.period or self.period_s) for i in instances
+        )
 
 
 class CountCost(CostFunction):
@@ -63,10 +67,13 @@ class RevenueCost(CostFunction):
         self.period_s = float(period_s)
 
     def cost(self, instances: Sequence[Instance], now: float) -> float:
-        return sum(
-            (i.run_time(now) % self.period_s) / self.period_s * i.price_rate
-            for i in instances
-        )
+        # per-instance contract periods (``Instance.period``) override the
+        # shared billing quantum, exactly like the ``inst_period`` column
+        def one(i: Instance) -> float:
+            p = i.period or self.period_s
+            return (i.run_time(now) % p) / p * i.price_rate
+
+        return sum(one(i) for i in instances)
 
 
 class RecomputeCost(CostFunction):

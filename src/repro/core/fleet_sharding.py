@@ -7,7 +7,7 @@ array *host-major* over a 1-D device mesh and runs the unchanged
 ``screen_math`` bounds per shard under ``jax.shard_map``
 (``jax_scheduler._sharded_screen``); only two things ever cross shards:
 
-  * the 8 weigher-normalization scalars (``ScreenConsts``) — merged with
+  * the 10 weigher-normalization scalars (``ScreenConsts``) — merged with
     ``lax.pmin``/``lax.pmax``, which are reassociation-free, so the merged
     constants are bitwise equal to the unsharded fleet-wide folds;
   * each shard's top-M shortlist plus its admissibility witness — merged by
@@ -30,6 +30,7 @@ bit-identical to the unpadded ones.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Optional, Sequence, Tuple
 
@@ -42,6 +43,12 @@ from .screen_math import POS_INF
 
 #: Mesh axis name of the host partition (the only axis the scheduler shards).
 HOST_AXIS = "hosts"
+
+#: State fields indexed by ZONE, not by host: never padded with the host
+#: rows, and replicated (not partitioned) across the mesh.  Matched by field
+#: NAME — zone count Z can coincide with the host count N, so shape-based
+#: dispatch would silently corrupt the accumulators.
+ZONE_FIELDS = frozenset({"zone_term", "zone_up"})
 
 
 def fleet_mesh(
@@ -97,7 +104,11 @@ def pad_fleet_state(state, n_padded: int):
 
     Zero rows are inert: ``schedulable``/``inst_valid`` pad as False, so the
     screen marks padding invalid (omega = NEG_INF) and transitions never
-    touch it.  Returns ``state`` unchanged when already at least as large."""
+    touch it.  Zero-id ``host_zone`` padding is equally inert — padding
+    hosts never host instances, so they feed the zone accumulators nothing.
+    The per-zone ``ZONE_FIELDS`` accumulators are not host-indexed and pass
+    through unpadded.  Returns ``state`` unchanged when already at least as
+    large."""
     n = state.free_f.shape[0]
     if n_padded <= n:
         return state
@@ -106,7 +117,13 @@ def pad_fleet_state(state, n_padded: int):
         widths = [(0, n_padded - n)] + [(0, 0)] * (x.ndim - 1)
         return jnp.pad(x, widths)
 
-    return jax.tree_util.tree_map(pad, state)
+    updates = {}
+    for f in dataclasses.fields(state):
+        x = getattr(state, f.name)
+        if x is None or f.name in ZONE_FIELDS:
+            continue
+        updates[f.name] = pad(x)
+    return dataclasses.replace(state, **updates)
 
 
 def host_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
@@ -118,7 +135,10 @@ def host_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
 def shard_fleet_state(state, mesh: Mesh):
     """Place every leaf of a state dataclass host-major across ``mesh``.
 
-    The row count must already be a multiple of the mesh size (see
+    The per-zone ``ZONE_FIELDS`` accumulators are replicated instead (every
+    shard reads the full zone table to derive its hosts' ẑ; the updates are
+    scalar scatters the replication keeps consistent).  The row count must
+    already be a multiple of the mesh size (see
     ``padded_hosts``/``pad_fleet_state``)."""
     n = state.free_f.shape[0]
     if n % mesh.size:
@@ -126,9 +146,17 @@ def shard_fleet_state(state, mesh: Mesh):
             f"fleet size {n} does not divide across {mesh.size} shards; "
             "pad with pad_fleet_state(state, padded_hosts(...)) first"
         )
-    return jax.tree_util.tree_map(
-        lambda x: jax.device_put(x, host_sharding(mesh, x.ndim)), state
-    )
+    replicated = NamedSharding(mesh, P())
+    updates = {}
+    for f in dataclasses.fields(state):
+        x = getattr(state, f.name)
+        if x is None:
+            continue
+        sharding = (
+            replicated if f.name in ZONE_FIELDS else host_sharding(mesh, x.ndim)
+        )
+        updates[f.name] = jax.device_put(x, sharding)
+    return dataclasses.replace(state, **updates)
 
 
 def merge_shortlists(

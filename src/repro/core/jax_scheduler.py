@@ -19,7 +19,7 @@ Stage 1 itself has two executions sharing ONE definition of the bounds math
 (``core.screen_math``): the pure-jnp assembly below (the oracle, and the CPU
 default), and the fused Pallas kernel ``repro.kernels.sched_screen`` that
 computes every screen term per 128-host tile and keeps the running top-M
-resident on chip, emitting only the (M+1,) shortlist + 8 normalization
+resident on chip, emitting only the (M+1,) shortlist + 10 normalization
 scalars — one pass over the fleet instead of a dozen HBM round-trips
 (``fused_screen``: None = auto, on for TPU backends, interpret-capable
 elsewhere; pinned bit-exact against the jnp screen by
@@ -100,6 +100,7 @@ from .screen_math import (
     TIE_EPS,
     ScreenConsts,
     base_from_consts,
+    churn_of,
     consts_of,
     floor_mod,
     inv_span,
@@ -143,6 +144,10 @@ class SoAHostState:
     inst_res: jax.Array     # (N, K, D) preemptible instance resources (padded)
     inst_cost: jax.Array    # (N, K)    per-instance termination cost
     inst_valid: jax.Array   # (N, K)    bool
+    #: optional per-host learned zone-churn rate ẑ (None = churn-blind;
+    #: the persistent path derives it from the zone accumulators per step,
+    #: the rebuild oracle freezes it at build via ``zone_rates``).
+    churn: Optional[jax.Array] = None  # (N,) float32
 
     @property
     def n_hosts(self) -> int:
@@ -197,11 +202,17 @@ def build_soa_state(
     cost_fn: Optional[CostFunction] = None,
     k_slots: int = 8,
     domain_ids: Optional[Dict[str, int]] = None,
+    zone_rates: Optional[Dict[str, float]] = None,
 ) -> Tuple[SoAHostState, List[List[Instance]]]:
     """Convert python ``Host`` objects to device arrays.
 
     Returns the state plus the per-host preemptible instance lists (slot
     order), needed to translate a winning mask back into instance ids.
+
+    ``zone_rates`` optionally freezes a per-zone churn rate ẑ (zone name →
+    rate; missing zones read 0.0) into the state's ``churn`` column — the
+    rebuild oracle's counterpart of the persistent path's online-learned
+    zone accumulators.
     """
     cost_fn = cost_fn or PeriodCost()
     n = len(hosts)
@@ -218,6 +229,11 @@ def build_soa_state(
             inst_res[i, k] = inst.resources.vec
             inst_cost[i, k] = cost_fn.cost([inst], now)
             inst_valid[i, k] = True
+    churn = None
+    if zone_rates is not None:
+        churn = jnp.asarray(
+            [float(zone_rates.get(h.zone, 0.0)) for h in hosts], jnp.float32
+        )
     state = SoAHostState(
         free_f=jnp.asarray(free_f),
         free_n=jnp.asarray(free_n),
@@ -227,6 +243,7 @@ def build_soa_state(
         inst_res=jnp.asarray(inst_res),
         inst_cost=jnp.asarray(inst_cost),
         inst_valid=jnp.asarray(inst_valid),
+        churn=churn,
     )
     return state, slots
 
@@ -336,6 +353,8 @@ def _stage1_rows(
     req_preemptible: jax.Array,
     req_domain: jax.Array,
     require_free_slot: bool,
+    churn: Optional[jax.Array] = None,
+    churn_threshold: Optional[float] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, Tuple[jax.Array, ...]]:
     """Stage-1 screen assembly on row-major host arrays: the dual-view fit
     mask (the paper's trick), the shared ``screen_math`` bounds, and the raw
@@ -347,12 +366,25 @@ def _stage1_rows(
     see identical elementwise outputs, which is what keeps every stage-1
     backend bit-exact with the others.
 
-    Returns ``(valid, cost_lb, cost_ub, raw)``.
+    ``churn`` (per-host learned zone-churn rate ẑ, see ``churn_of``) adds
+    the churn-penalty raw term; a static ``churn_threshold`` additionally
+    steers preemptible placements off hot zones entirely (the graceful-
+    degradation hard filter — normal requests are unaffected).
+
+    Returns ``(valid, cost_lb, cost_ub, raw)`` (``raw`` grows a 4th entry
+    when churn-aware).
     """
     view = jnp.where(req_preemptible, free_f, free_n)
     fits = jnp.all(view >= req_res[None, :] - EPS, axis=-1)
     fits &= schedulable
     fits &= (req_domain < 0) | (domain == req_domain)
+    if churn_threshold is not None and churn is not None:
+        # Hot-zone steering: preemptible work avoids zones whose learned
+        # churn rate crossed the policy threshold (normal work still lands —
+        # its instances are not the ones zone churn kills).
+        fits &= jnp.where(
+            req_preemptible, churn <= jnp.float32(churn_threshold), True
+        )
     if require_free_slot:
         # Persistent state carries K slots per host: a preemptible request
         # needs an empty slot (the rebuild path raises on overflow instead).
@@ -365,8 +397,17 @@ def _stage1_rows(
     cost_ub = jnp.where(req_preemptible, 0.0, cost_ub)
     feas = jnp.where(req_preemptible, fits, feas)
     valid = fits & feas
-    raw = raw_base_terms(jnp.sum(free_f, axis=-1), slow, overcommitted)
+    raw = raw_base_terms(jnp.sum(free_f, axis=-1), slow, overcommitted, churn)
     return valid, cost_lb, cost_ub, raw
+
+
+def _base_of(mult, raw, consts: ScreenConsts) -> jax.Array:
+    """``base_from_consts`` over a 3- or 4-entry ``raw`` tuple (the 4th is
+    the churn term) — the one unpacking every assembly site shares."""
+    churn_raw = raw[3] if len(raw) > 3 else None
+    return base_from_consts(
+        mult, raw[0], raw[1], raw[2], consts, churn_raw=churn_raw
+    )
 
 
 def _sharded_screen(
@@ -374,10 +415,12 @@ def _sharded_screen(
     free_f, free_n, schedulable, domain, slow,
     inst_res, inst_cost, inst_valid,
     req_res, req_preemptible, req_domain,
-    mult: Tuple[float, float, float, float],
+    mult: Tuple[float, ...],
     require_free_slot: bool,
     m_cand: int,
     use_fused: bool = False,
+    churn: Optional[jax.Array] = None,
+    churn_threshold: Optional[float] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Stage-1 screen per host-major shard under ``jax.shard_map``.
 
@@ -392,9 +435,14 @@ def _sharded_screen(
         admissibility witness (masked argmax, ties to the lowest index),
         tagged with GLOBAL host indices and ``all_gather``-ed.
 
-    Returns replicated ``(scores (S·(M+1),), idxs (S·(M+1),), consts (8,))``
+    Returns replicated ``(scores (S·(M+1),), idxs (S·(M+1),), consts (10,))``
     for ``fleet_sharding.merge_shortlists`` to reduce into the global
     shortlist.  Callers guarantee ``N % S == 0`` and ``N/S ≥ m_cand + 1``.
+    ``churn`` (optional per-host ẑ, sharded host-major like the other rows)
+    and a static ``churn_threshold`` thread the failure-domain terms through
+    the per-shard screen — the merged churn-normalization scalars come out
+    of the same pmin/pmax folds, so churn-aware sharded decisions stay
+    bit-exact with the unsharded screen.
 
     ``use_fused`` runs the shard-local screen through the fused Pallas
     kernel instead of the jnp assembly, split at the constants barrier
@@ -417,7 +465,7 @@ def _sharded_screen(
 
     def shard_fn(free_f, free_n, schedulable, domain, slow,
                  inst_res, inst_cost, inst_valid,
-                 req_res, req_preemptible, req_domain):
+                 req_res, req_preemptible, req_domain, churn=None):
         t = free_f.shape[0]  # hosts per shard
         offset = (jax.lax.axis_index(axis) * t).astype(jnp.int32)
         if use_fused:
@@ -435,12 +483,15 @@ def _sharded_screen(
                 *kern_args,
                 weigher_multipliers=mult,
                 require_free_slot=require_free_slot,
+                churn=churn,
+                churn_threshold=churn_threshold,
             ))
         else:
             valid, cost_lb, cost_ub, raw = _stage1_rows(
                 free_f, free_n, schedulable, domain, slow,
                 inst_res, inst_cost, inst_valid,
                 req_res, req_preemptible, req_domain, require_free_slot,
+                churn=churn, churn_threshold=churn_threshold,
             )
             local = consts_of(mult, valid, cost_lb, cost_ub, *raw)
         consts = ScreenConsts(
@@ -448,6 +499,7 @@ def _sharded_screen(
             jax.lax.pmin(local.over_lo, axis), jax.lax.pmax(local.over_hi, axis),
             jax.lax.pmin(local.pack_lo, axis), jax.lax.pmax(local.pack_hi, axis),
             jax.lax.pmin(local.strag_lo, axis), jax.lax.pmax(local.strag_hi, axis),
+            jax.lax.pmin(local.churn_lo, axis), jax.lax.pmax(local.churn_hi, axis),
         )
         if use_fused:
             # Kernel top-(M+1) from the MERGED constants; entry M is the
@@ -460,11 +512,13 @@ def _sharded_screen(
                 weigher_multipliers=mult,
                 require_free_slot=require_free_slot,
                 m_keep=m_cand + 1,
+                churn=churn,
+                churn_threshold=churn_threshold,
             )
             scores = s_all
             idxs = i_all.astype(jnp.int32) + offset
         else:
-            base = base_from_consts(mult, *raw, consts)
+            base = _base_of(mult, raw, consts)
             ispan_ub = inv_span(consts.c_lo, consts.c_hi)
             opt_cost = cost_lb if m_term >= 0 else cost_ub
             omega_ub = omega_of(opt_cost, base, valid, consts, ispan_ub, m_term)
@@ -483,17 +537,23 @@ def _sharded_screen(
 
     row = P(axis)
     rep = P()
-    return shard_map(
-        shard_fn,
-        mesh=mesh,
-        in_specs=(row,) * 8 + (rep, rep, rep),
-        out_specs=(rep, rep, rep),
-        check_rep=False,
-    )(
+    operands = (
         free_f, free_n, schedulable, domain, slow,
         inst_res, inst_cost, inst_valid,
         req_res, req_preemptible, req_domain,
     )
+    in_specs = (row,) * 8 + (rep, rep, rep)
+    if churn is not None:
+        # The churn column shards host-major like every other per-host row.
+        operands += (churn,)
+        in_specs += (row,)
+    return shard_map(
+        shard_fn,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(rep, rep, rep),
+        check_rep=False,
+    )(*operands)
 
 
 def _plan_terms(use_pallas: bool, gathered: bool = False):
@@ -520,6 +580,7 @@ def _decision_core(
     req_domain: jax.Array,
     policy: SchedulerPolicy,
     require_free_slot: bool,
+    churn: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """The two-stage decision pipeline on raw SoA arrays (shared by the
     rebuild path, the persistent fast path, and the batched ``lax.scan``
@@ -573,7 +634,14 @@ def _decision_core(
     m_cand = min(int(shortlist), n_hosts)
     if fused_screen is None:
         fused_screen = jax.default_backend() == "tpu" and mesh is None
-    mult = policy.weigher_multipliers
+    # Failure-domain plane: churn-aware only when the caller supplied the ẑ
+    # column AND the policy turns a churn knob — otherwise both are dropped
+    # statically and the compiled program is the exact churn-blind one.
+    churn_on = churn is not None and policy.churn_aware
+    if not churn_on:
+        churn = None
+    mult = policy.all_multipliers if churn_on else policy.weigher_multipliers
+    thr = policy.churn_threshold if churn_on else None
     m_term = mult[1]
     use_mesh = (
         mesh is not None
@@ -583,7 +651,7 @@ def _decision_core(
     )
 
     def stage1_of(free_f, free_n, schedulable, domain, slow, inst_res,
-                  inst_cost, inst_valid):
+                  inst_cost, inst_valid, churn=None):
         """Stage-1 screen assembly on row-major arrays (the shared
         ``_stage1_rows`` with this decision's request closed over) — used
         for the full fleet (jnp screen / fallback) and for gathered
@@ -594,6 +662,7 @@ def _decision_core(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid,
             req_res, req_preemptible, req_domain, require_free_slot,
+            churn=churn, churn_threshold=thr,
         )
 
     def full_decision(_):
@@ -603,10 +672,10 @@ def _decision_core(
         — bit-identical to the ``shortlist=0`` result either way)."""
         valid, cost_lb, cost_ub, raw = stage1_of(
             free_f, free_n, schedulable, domain, slow,
-            inst_res, inst_cost, inst_valid,
+            inst_res, inst_cost, inst_valid, churn,
         )
         consts = consts_of(mult, valid, cost_lb, cost_ub, *raw)
-        base = base_from_consts(mult, *raw, consts)
+        base = _base_of(mult, raw, consts)
         ispan = inv_span(consts.c_lo, consts.c_hi)
         best_cost, best_mask, _ = _plan_terms(use_pallas)(
             free_f, inst_res, inst_cost, inst_valid, req_res, masks
@@ -640,6 +709,7 @@ def _decision_core(
             req_res, req_preemptible, req_domain,
             mult, require_free_slot, m_cand,
             use_fused=bool(fused_screen),
+            churn=churn, churn_threshold=thr,
         )
         consts = ScreenConsts.unpack(consts_arr)
         cand, u, j_u = merge_shortlists(all_s, all_i, m_cand)
@@ -648,10 +718,11 @@ def _decision_core(
         valid_c, _, _, raw_c = stage1_of(
             free_f[cand], free_n[cand], schedulable[cand], domain[cand],
             slow[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
+            churn[cand] if churn_on else None,
         )
-        base_c = base_from_consts(mult, *raw_c, consts)
+        base_c = _base_of(mult, raw_c, consts)
     elif fused_screen:
-        # One fused pass over the fleet; only the (M+1,) shortlist and the 8
+        # One fused pass over the fleet; only the (M+1,) shortlist and the 10
         # normalization scalars come back.  Entry M is the best omega_ub
         # outside the shortlist with lax.top_k tie ordering — the (u, j_u)
         # admissibility witness.
@@ -664,6 +735,8 @@ def _decision_core(
             weigher_multipliers=mult,
             require_free_slot=require_free_slot,
             m_keep=m_cand + 1,
+            churn=churn,
+            churn_threshold=thr,
         )
         consts = ScreenConsts.unpack(consts_arr)
         cand = top_i[:m_cand]
@@ -674,15 +747,16 @@ def _decision_core(
         valid_c, _, _, raw_c = stage1_of(
             free_f[cand], free_n[cand], schedulable[cand], domain[cand],
             slow[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
+            churn[cand] if churn_on else None,
         )
-        base_c = base_from_consts(mult, *raw_c, consts)
+        base_c = _base_of(mult, raw_c, consts)
     else:
         valid, cost_lb, cost_ub, raw = stage1_of(
             free_f, free_n, schedulable, domain, slow,
-            inst_res, inst_cost, inst_valid,
+            inst_res, inst_cost, inst_valid, churn,
         )
         consts = consts_of(mult, valid, cost_lb, cost_ub, *raw)
-        base = base_from_consts(mult, *raw, consts)
+        base = _base_of(mult, raw, consts)
         ispan_ub = inv_span(consts.c_lo, consts.c_hi)
         opt_cost = cost_lb if m_term >= 0 else cost_ub
         omega_ub = omega_of(opt_cost, base, valid, consts, ispan_ub, m_term)
@@ -755,11 +829,16 @@ def _decision_entry(
     *,
     policy: SchedulerPolicy,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    churn = state.churn
+    if churn is None and policy.churn_aware:
+        # Churn-aware policy over a state built without rates: all-zero ẑ
+        # (every host equally calm — the weigher term normalizes away).
+        churn = jnp.zeros_like(state.slow)
     return _decision_core(
         state.free_f, state.free_n, state.schedulable, state.domain,
         state.slow, state.inst_res, state.inst_cost, state.inst_valid,
         req_res, req_preemptible, req_domain,
-        policy, require_free_slot=False,
+        policy, require_free_slot=False, churn=churn,
     )[:3]
 
 
@@ -824,7 +903,18 @@ class SoAFleetState:
     inst_ckpt: jax.Array    # (N, K)    last durable-checkpoint times
     inst_cost_kind: jax.Array  # (N, K) int32 billing-kind id (COST_KIND_IDS;
                                #        -1 = the policy's default kind)
+    inst_period: jax.Array  # (N, K) per-slot billing period (s) for the
+                            #        period/revenue kinds; -1 = policy default
     inst_valid: jax.Array   # (N, K)    bool
+    #: Failure-domain plane: each host belongs to one zone (cloud AZ / rack),
+    #: and the involuntary-termination (T) and accumulated-uptime (U)
+    #: counters are tracked PER ZONE, updated in place by the transitions
+    #: below.  The learned zone churn rate ẑ = T / max(U, ε) feeds the
+    #: churn-penalty weigher and the hot-zone steering filter
+    #: (``SchedulerPolicy.churn_multiplier`` / ``churn_threshold``).
+    host_zone: jax.Array    # (N,)   int32 zone id
+    zone_term: jax.Array    # (Z,)   float32 involuntary terminations (T)
+    zone_up: jax.Array      # (Z,)   float32 accumulated uptime seconds (U)
 
     @property
     def n_hosts(self) -> int:
@@ -833,6 +923,10 @@ class SoAFleetState:
     @property
     def k_slots(self) -> int:
         return self.inst_res.shape[1]
+
+    @property
+    def n_zones(self) -> int:
+        return self.zone_term.shape[0]
 
 
 def jax_cost_params(cost_fn: CostFunction) -> Tuple[str, float]:
@@ -901,18 +995,24 @@ def mixed_slot_costs(
     inst_ckpt: jax.Array,
     inst_res: jax.Array,
     now: jax.Array,
+    inst_period: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Heterogeneous per-slot termination cost: each slot billed by ITS OWN
     kind (``inst_cost_kind``; -1 = the policy default) through the branchless
     ``screen_math.slot_cost_by_kind`` select.  Every branch is the verbatim
     single-kind formula, so slot values are bit-identical to the homogeneous
-    paths kind-for-kind (the device half of the ``cost.MixedCost`` oracle)."""
+    paths kind-for-kind (the device half of the ``cost.MixedCost`` oracle).
+    ``inst_period`` (optional, -1 sentinel = policy default) carries per-slot
+    contract periods for the period/revenue kinds."""
     eff = jnp.where(
         inst_cost_kind >= 0, inst_cost_kind, jnp.int32(policy.default_kind_id)
     )
+    period = jnp.float32(policy.period)
+    if inst_period is not None:
+        period = jnp.where(inst_period > 0, inst_period, period)
     return slot_cost_by_kind(
         eff, inst_start, inst_price, inst_ckpt, inst_res[..., 0],
-        now, policy.period,
+        now, period,
     )
 
 
@@ -922,15 +1022,21 @@ def fleet_slot_costs(
     """Per-slot termination costs of a persistent fleet state under
     ``policy``'s cost table.  Single-kind policies compile the exact
     pre-policy program (the kind column is never read); mixed tables select
-    per slot."""
+    per slot.  The ``inst_period`` column overrides the policy's shared
+    billing period per slot (-1 sentinel = default); with every slot at the
+    sentinel the select yields elementwise-identical values to the shared
+    period, so homogeneous parity is bitwise."""
+    period = jnp.where(
+        state.inst_period > 0, state.inst_period, jnp.float32(policy.period)
+    )
     if not policy.mixed:
         return slot_costs(
             policy.cost_kind, state.inst_start, state.inst_price, now,
-            policy.period, inst_ckpt=state.inst_ckpt, inst_res=state.inst_res,
+            period, inst_ckpt=state.inst_ckpt, inst_res=state.inst_res,
         )
     return mixed_slot_costs(
         policy, state.inst_cost_kind, state.inst_start, state.inst_price,
-        state.inst_ckpt, state.inst_res, now,
+        state.inst_ckpt, state.inst_res, now, inst_period=state.inst_period,
     )
 
 
@@ -939,6 +1045,10 @@ def build_fleet_state(
     k_slots: int = 8,
     domain_ids: Optional[Dict[str, int]] = None,
     slot_assignment: Optional[Sequence[Dict[str, int]]] = None,
+    zone_ids: Optional[Dict[str, int]] = None,
+    n_zones: Optional[int] = None,
+    zone_term: Optional[np.ndarray] = None,
+    zone_up: Optional[np.ndarray] = None,
 ) -> Tuple[SoAFleetState, List[List[Optional[Instance]]]]:
     """Convert python ``Host`` objects to a persistent ``SoAFleetState``.
 
@@ -946,16 +1056,45 @@ def build_fleet_state(
     instance per host (id → slot); the default packs them sorted by id.  The
     parity tests use it to rebuild with the exact slot layout the incremental
     path produced, making the comparison bit-exact.
+
+    ``zone_ids`` optionally fixes the zone-name → id mapping (default:
+    insertion order of ``Host.zone``); ``n_zones`` widens the accumulator
+    arrays beyond the mapped zones.  ``zone_term``/``zone_up`` seed the
+    per-zone T/U churn accumulators (both (Z,) float32; default zeros) —
+    oracle rebuilds pass the incremental path's accumulator history here so
+    churn-aware decisions compare bit-exact.
     """
     n = len(hosts)
     d, free_f, free_n, schedulable, domain, slow, pre_lists = _hosts_to_arrays(
         hosts, k_slots, domain_ids
     )
+    if zone_ids is None:
+        zone_ids = {}
+        for h in hosts:
+            zone_ids.setdefault(h.zone, len(zone_ids))
+    host_zone = np.zeros((n,), np.int32)
+    for i, h in enumerate(hosts):
+        if h.zone not in zone_ids:
+            raise ValueError(
+                f"host {h.name} is in unknown zone {h.zone!r}; "
+                f"known: {sorted(zone_ids)}"
+            )
+        host_zone[i] = zone_ids[h.zone]
+    z = int(n_zones) if n_zones is not None else max(len(zone_ids), 1)
+    if zone_ids and max(zone_ids.values()) >= z:
+        raise ValueError(
+            f"zone id {max(zone_ids.values())} out of range for n_zones={z}"
+        )
+    if zone_term is None:
+        zone_term = np.zeros((z,), np.float32)
+    if zone_up is None:
+        zone_up = np.zeros((z,), np.float32)
     inst_res = np.zeros((n, k_slots, d), np.float32)
     inst_start = np.zeros((n, k_slots), np.float32)
     inst_price = np.ones((n, k_slots), np.float32)
     inst_ckpt = np.zeros((n, k_slots), np.float32)
     inst_cost_kind = np.full((n, k_slots), -1, np.int32)
+    inst_period = np.full((n, k_slots), -1.0, np.float32)
     inst_valid = np.zeros((n, k_slots), bool)
     slots: List[List[Optional[Instance]]] = []
     for i, pre in enumerate(pre_lists):
@@ -983,6 +1122,8 @@ def build_fleet_state(
                         f"{inst.cost_kind!r}"
                     )
                 inst_cost_kind[i, k] = COST_KIND_IDS[inst.cost_kind]
+            if inst.period is not None:
+                inst_period[i, k] = float(inst.period)
             inst_valid[i, k] = True
         slots.append(row)
     state = SoAFleetState(
@@ -996,7 +1137,13 @@ def build_fleet_state(
         inst_price=jnp.asarray(inst_price),
         inst_ckpt=jnp.asarray(inst_ckpt),
         inst_cost_kind=jnp.asarray(inst_cost_kind),
+        inst_period=jnp.asarray(inst_period),
         inst_valid=jnp.asarray(inst_valid),
+        host_zone=jnp.asarray(host_zone),
+        # copy, never alias: callers seed these with a LIVE state's buffers
+        # (oracle rebuilds), and the transitions donate their inputs
+        zone_term=jnp.array(np.asarray(zone_term), dtype=jnp.float32),
+        zone_up=jnp.array(np.asarray(zone_up), dtype=jnp.float32),
     )
     return state, slots
 
@@ -1018,12 +1165,17 @@ def _apply_decision(
     now: jax.Array,           # () float
     price: jax.Array,         # () float
     cost_kind: jax.Array,     # () int32 kind id; -1 = policy default
+    period: jax.Array,        # () float billing period; -1 = policy default
 ) -> Tuple[SoAFleetState, jax.Array, jax.Array]:
     """Apply one decision: evacuate the winning subset, place the request.
 
     Returns ``(state', slot, kill)`` where ``slot`` is the slot index a
     preemptible placement landed in (undefined for normal/failed requests)
     and ``kill`` the (K,) bool mask of terminated slots on ``host_idx``.
+
+    Scheduler-driven evacuations are involuntary from the victims' point of
+    view, so the winner's zone T/U accumulators absorb the kill count and
+    the victims' accrued uptime — the same churn signal storms feed.
     """
     k = state.k_slots
     row_valid = state.inst_valid[host_idx]                       # (K,)
@@ -1041,6 +1193,11 @@ def _apply_decision(
     slot = jnp.argmin(valid_after).astype(jnp.int32)             # first free
     place = ok & preemptible
     onehot = (jnp.arange(k) == slot) & place                     # (K,)
+    z = state.host_zone[host_idx]
+    n_kill = jnp.sum(kill.astype(jnp.float32))
+    lost_up = jnp.sum(
+        jnp.where(kill, now - state.inst_start[host_idx], 0.0)
+    )
     new_state = dataclasses.replace(
         state,
         free_f=free_f,
@@ -1065,6 +1222,15 @@ def _apply_decision(
                 state.inst_cost_kind[host_idx],
             )
         ),
+        inst_period=state.inst_period.at[host_idx].set(
+            jnp.where(
+                onehot,
+                jnp.asarray(period, jnp.float32),
+                state.inst_period[host_idx],
+            )
+        ),
+        zone_term=state.zone_term.at[z].add(n_kill),
+        zone_up=state.zone_up.at[z].add(lost_up),
     )
     return new_state, slot, kill
 
@@ -1072,18 +1238,26 @@ def _apply_decision(
 def _step_core(
     state: SoAFleetState,
     req_res, req_preemptible, req_domain, now, price, req_cost_kind,
-    policy: SchedulerPolicy,
+    req_period, policy: SchedulerPolicy,
 ):
     inst_cost = fleet_slot_costs(state, now, policy)
+    # The learned per-host churn rate ẑ is derived from the zone T/U
+    # accumulators fresh each step (statically dropped for churn-blind
+    # policies — the compiled program is then the exact pre-churn one).
+    churn = (
+        churn_of(state.zone_term, state.zone_up, state.host_zone)
+        if policy.churn_aware
+        else None
+    )
     host_idx, mask_idx, ok, fell_back, margin = _decision_core(
         state.free_f, state.free_n, state.schedulable, state.domain,
         state.slow, state.inst_res, inst_cost, state.inst_valid,
         req_res, req_preemptible, req_domain,
-        policy, require_free_slot=True,
+        policy, require_free_slot=True, churn=churn,
     )
     state, slot, kill = _apply_decision(
         state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price,
-        req_cost_kind,
+        req_cost_kind, req_period,
     )
     return state, (host_idx, slot, ok, kill, fell_back, margin)
 
@@ -1092,23 +1266,23 @@ _STEP_STATICS = ("policy",)
 
 
 def _step_entry(state, req_res, req_preemptible, req_domain, now, price,
-                req_cost_kind, *, policy):
+                req_cost_kind, req_period, *, policy):
     return _step_core(
         state, req_res, req_preemptible, req_domain, now, price,
-        req_cost_kind, policy,
+        req_cost_kind, req_period, policy,
     )
 
 
 def _many_entry(state, req_res, req_preemptible, req_domain, req_now,
-                req_price, req_cost_kind, *, policy):
+                req_price, req_cost_kind, req_period, *, policy):
     def body(st, xs):
-        res, pre, dom, now, price, kind = xs
-        return _step_core(st, res, pre, dom, now, price, kind, policy)
+        res, pre, dom, now, price, kind, period = xs
+        return _step_core(st, res, pre, dom, now, price, kind, period, policy)
 
     return jax.lax.scan(
         body, state,
         (req_res, req_preemptible, req_domain, req_now, req_price,
-         req_cost_kind),
+         req_cost_kind, req_period),
     )
 
 
@@ -1132,6 +1306,7 @@ def schedule_step(
     policy: Optional[SchedulerPolicy] = None,
     req_cost_kind: jax.Array = -1,  # () int32 kind id; -1 = policy default
     donate: Optional[bool] = None,
+    req_period: jax.Array = -1.0,  # () float period (s); -1 = policy default
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Fused decide-and-apply on the persistent state (one dispatch/event).
 
@@ -1146,7 +1321,9 @@ def schedule_step(
     backends; equal policies share a single compile-cache entry.
     ``req_cost_kind`` tags the billing kind recorded on a preemptible
     placement (``COST_KIND_IDS``; -1 = the policy's default) — the
-    per-request half of the mixed-payment model.
+    per-request half of the mixed-payment model.  ``req_period`` likewise
+    records the request's contract billing period (seconds; -1 = the
+    policy's shared ``period``) into the ``inst_period`` column.
 
     With ``donate`` unset the policy's ``donate`` field applies (default
     True): the input state's buffers are reused for the output — the caller
@@ -1162,7 +1339,8 @@ def schedule_step(
     return fn(
         state, req_res, req_preemptible, req_domain,
         jnp.asarray(now, jnp.float32), jnp.asarray(price, jnp.float32),
-        jnp.asarray(req_cost_kind, jnp.int32), policy=policy,
+        jnp.asarray(req_cost_kind, jnp.int32),
+        jnp.asarray(req_period, jnp.float32), policy=policy,
     )
 
 
@@ -1176,6 +1354,7 @@ def schedule_many(
     policy: Optional[SchedulerPolicy] = None,
     req_cost_kind: Optional[jax.Array] = None,  # (B,) int32; None = defaults
     donate: Optional[bool] = None,
+    req_period: Optional[jax.Array] = None,  # (B,) float; None = defaults
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Run a request batch through ``lax.scan`` carrying the fleet state, so
     each decision sees every earlier placement/termination in the batch —
@@ -1195,11 +1374,14 @@ def schedule_many(
         donate = policy.donate
     if req_cost_kind is None:
         req_cost_kind = jnp.full(jnp.shape(req_now), -1, jnp.int32)
+    if req_period is None:
+        req_period = jnp.full(jnp.shape(req_now), -1.0, jnp.float32)
     fn = _many_donated if donate else _many_kept
     return fn(
         state, req_res, req_preemptible, req_domain,
         jnp.asarray(req_now, jnp.float32), jnp.asarray(req_price, jnp.float32),
-        jnp.asarray(req_cost_kind, jnp.int32), policy=policy,
+        jnp.asarray(req_cost_kind, jnp.int32),
+        jnp.asarray(req_period, jnp.float32), policy=policy,
     )
 
 
@@ -1212,6 +1394,7 @@ def apply_placement(
     now: jax.Array,
     price: jax.Array = 1.0,
     cost_kind: jax.Array = -1,  # () int32 kind id; -1 = policy default
+    period: jax.Array = -1.0,   # () float period (s); -1 = policy default
 ) -> Tuple[SoAFleetState, jax.Array]:
     """Unconditionally place a request on ``host_idx`` (caller checked
     feasibility — e.g. re-applying a recorded decision, or initializing
@@ -1255,28 +1438,60 @@ def apply_placement(
                 state.inst_cost_kind[host_idx],
             )
         ),
+        inst_period=state.inst_period.at[host_idx].set(
+            jnp.where(
+                onehot,
+                jnp.asarray(period, jnp.float32),
+                state.inst_period[host_idx],
+            )
+        ),
     )
     return state, slot
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
+@functools.partial(jax.jit, donate_argnums=(0,), static_argnames=("involuntary",))
 def apply_termination(
     state: SoAFleetState,
     host_idx: jax.Array,
     slot_mask: jax.Array,  # (K,) bool — slots to evacuate (preempt/depart)
+    now: Optional[jax.Array] = None,
+    involuntary: bool = False,
 ) -> SoAFleetState:
     """Free the given preemptible slots on ``host_idx`` (h_n untouched —
-    preemptible instances never counted there)."""
+    preemptible instances never counted there).
+
+    With ``now`` given, the host's zone churn accumulators learn from the
+    event: the evacuated slots' accrued uptime always feeds U, and
+    ``involuntary=True`` (preemption storms, spot reclaims — anything the
+    customer didn't ask for) additionally counts the kills into T.
+    Voluntary departures therefore DILUTE the zone's learned churn rate ẑ =
+    T/U, exactly as gce-manager's per-zone preemption rates behave.  Callers
+    that omit ``now`` (legacy call sites) compile the exact pre-churn
+    program and leave the accumulators untouched.
+    """
     row_valid = state.inst_valid[host_idx]
     kill = slot_mask & row_valid
     freed = jnp.sum(
         jnp.where(kill[:, None], state.inst_res[host_idx], 0.0), axis=0
     )
-    return dataclasses.replace(
-        state,
+    updates = dict(
         free_f=state.free_f.at[host_idx].add(freed),
         inst_valid=state.inst_valid.at[host_idx].set(row_valid & ~kill),
     )
+    if now is not None:
+        z = state.host_zone[host_idx]
+        up = jnp.sum(
+            jnp.where(
+                kill,
+                jnp.asarray(now, jnp.float32) - state.inst_start[host_idx],
+                0.0,
+            )
+        )
+        updates["zone_up"] = state.zone_up.at[z].add(up)
+        if involuntary:
+            n_kill = jnp.sum(kill.astype(jnp.float32))
+            updates["zone_term"] = state.zone_term.at[z].add(n_kill)
+    return dataclasses.replace(state, **updates)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -1333,15 +1548,20 @@ def apply_host_failure(
     state: SoAFleetState,
     host_idx: jax.Array,
     normal_res: jax.Array,  # (D,) total resources of the host's NORMAL instances
+    now: Optional[jax.Array] = None,
 ) -> SoAFleetState:
     """Hard host failure: mark unschedulable, evacuate every slot, release
-    the normal aggregate (the python mirror terminates the Instance records)."""
+    the normal aggregate (the python mirror terminates the Instance records).
+
+    With ``now`` given the failure is learned as involuntary churn in the
+    host's zone: every occupied slot's accrued uptime feeds U and its kill
+    feeds T (callers omitting ``now`` keep the legacy churn-blind program).
+    """
     row_valid = state.inst_valid[host_idx]
     freed = jnp.sum(
         jnp.where(row_valid[:, None], state.inst_res[host_idx], 0.0), axis=0
     )
-    return dataclasses.replace(
-        state,
+    updates = dict(
         schedulable=state.schedulable.at[host_idx].set(False),
         free_f=state.free_f.at[host_idx].add(freed + normal_res),
         free_n=state.free_n.at[host_idx].add(normal_res),
@@ -1349,6 +1569,20 @@ def apply_host_failure(
             jnp.zeros_like(row_valid)
         ),
     )
+    if now is not None:
+        z = state.host_zone[host_idx]
+        up = jnp.sum(
+            jnp.where(
+                row_valid,
+                jnp.asarray(now, jnp.float32) - state.inst_start[host_idx],
+                0.0,
+            )
+        )
+        updates["zone_up"] = state.zone_up.at[z].add(up)
+        updates["zone_term"] = state.zone_term.at[z].add(
+            jnp.sum(row_valid.astype(jnp.float32))
+        )
+    return dataclasses.replace(state, **updates)
 
 
 # ---------------------------------------------------------------------------
@@ -1369,6 +1603,7 @@ class JaxPreemptibleScheduler:
         cost_fn: Optional[CostFunction] = None,
         k_slots: int = 8,
         policy: Optional[SchedulerPolicy] = None,
+        zone_rates: Optional[Dict[str, float]] = None,
     ):
         #: the one static knob bundle; ``policy.mesh`` note: the rebuild
         #: path does not pad, so sharding only engages when the host count
@@ -1382,13 +1617,18 @@ class JaxPreemptibleScheduler:
         #: derived from the policy's cost table when not given explicitly.
         self.cost_fn = cost_fn or self.policy.make_cost_fn()
         self.k_slots = k_slots
+        #: frozen per-zone churn rates ẑ (zone name → rate) baked into each
+        #: rebuild's ``churn`` column — the oracle counterpart of the
+        #: persistent path's online-learned zone accumulators.
+        self.zone_rates = dict(zone_rates) if zone_rates is not None else None
 
     # -- full pipeline from python objects ------------------------------------
     def schedule(
         self, req: Request, hosts: Sequence[Host], now: float
     ) -> ScheduleResult:
         state, slots = build_soa_state(
-            hosts, now, cost_fn=self.cost_fn, k_slots=self.k_slots
+            hosts, now, cost_fn=self.cost_fn, k_slots=self.k_slots,
+            zone_rates=self.zone_rates,
         )
         domains = {h.domain: i for i, h in enumerate({h.domain: h for h in hosts}.values())}
         dom = -1

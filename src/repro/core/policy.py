@@ -112,9 +112,26 @@ class SchedulerPolicy:
       rejected (1 = no backfill retry).
     * ``n_classes`` — priority classes; class 0 (interactive) drains first,
       class ``n_classes - 1`` (batch) last.
+    * ``churn_multiplier`` — weight of the failure-domain churn weigher:
+      hosts in zones with a high learned churn rate ẑ = T/max(U, ε) are
+      penalized.  0 (default) compiles the exact churn-blind program.
+    * ``churn_threshold`` — hard steering: zones whose ẑ exceeds this are
+      filtered out for PREEMPTIBLE placements (normal work still lands).
+      ``None`` = off.
+    * ``storm_threshold`` — graceful degradation in the admission front
+      end: when the FLEET-WIDE churn rate exceeds this, pending preemptible
+      requests are admitted as non-preemptible instead of being exposed to
+      the storm.  ``None`` = off.
+    * ``aging_rate`` — anti-starvation aging (classes per second of queue
+      wait): a queued entry's effective class decays toward 0 the longer it
+      waits, as one more ``queue_select`` lexsort column.  0 = strict
+      (class, seq) order, the pre-aging program.
     """
 
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0)
+    churn_multiplier: float = 0.0
+    churn_threshold: Optional[float] = None
+    storm_threshold: Optional[float] = None
     cost_kind: str = "period"
     cost_kinds: Tuple[str, ...] = ()
     period: float = BILL_PERIOD_S
@@ -130,6 +147,7 @@ class SchedulerPolicy:
     slo_target_s: float = 60.0
     max_retries: int = 8
     n_classes: int = 2
+    aging_rate: float = 0.0
 
     def __post_init__(self):
         # Tuple-normalize sequence fields so list-passing callers still get a
@@ -141,6 +159,17 @@ class SchedulerPolicy:
                 f"termination_cost, packing, straggler); got {len(mult)}"
             )
         object.__setattr__(self, "weigher_multipliers", mult)
+        object.__setattr__(self, "churn_multiplier", float(self.churn_multiplier))
+        for name in ("churn_threshold", "storm_threshold"):
+            val = getattr(self, name)
+            if val is not None:
+                val = float(val)
+                if not val > 0:
+                    raise ValueError(f"{name} must be positive or None, got {val}")
+                object.__setattr__(self, name, val)
+        if float(self.aging_rate) < 0:
+            raise ValueError(f"aging_rate must be >= 0, got {self.aging_rate}")
+        object.__setattr__(self, "aging_rate", float(self.aging_rate))
         kinds = tuple(str(k) for k in self.cost_kinds)
         object.__setattr__(self, "cost_kinds", kinds)
         for kind in (self.cost_kind,) + kinds:
@@ -203,6 +232,19 @@ class SchedulerPolicy:
         object.__setattr__(self, "slo_target_s", float(self.slo_target_s))
         object.__setattr__(self, "max_retries", mr)
         object.__setattr__(self, "n_classes", nc)
+
+    # -- weigher multipliers ---------------------------------------------------
+    @property
+    def all_multipliers(self) -> Tuple[float, float, float, float, float]:
+        """The public 4-tuple extended with the churn multiplier — the 5-slot
+        form every screen backend consumes (``screen_math``)."""
+        return self.weigher_multipliers + (self.churn_multiplier,)
+
+    @property
+    def churn_aware(self) -> bool:
+        """True when decisions read the zone-churn plane at all (weigher or
+        hard steering) — gates the extra stage-1 input statically."""
+        return bool(self.churn_multiplier) or self.churn_threshold is not None
 
     # -- cost-kind table ------------------------------------------------------
     @property

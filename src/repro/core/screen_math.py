@@ -142,10 +142,10 @@ class ScreenConsts(NamedTuple):
     """Global normalization constants of one decision (all f32 scalars).
 
     ``c_lo``/``c_hi`` bracket the termination-cost envelope over the valid
-    set; the three ``*_lo``/``*_hi`` pairs are the min/max of the raw
-    overcommit / packing / straggler weigher terms.  Terms whose multiplier
-    is 0 keep the fold identities (+inf, -inf) — both screens gate
-    identically on the static multipliers."""
+    set; the four ``*_lo``/``*_hi`` pairs are the min/max of the raw
+    overcommit / packing / straggler / zone-churn weigher terms.  Terms
+    whose multiplier is 0 keep the fold identities (+inf, -inf) — both
+    screens gate identically on the static multipliers."""
 
     c_lo: jax.Array
     c_hi: jax.Array
@@ -155,44 +155,80 @@ class ScreenConsts(NamedTuple):
     pack_hi: jax.Array
     strag_lo: jax.Array
     strag_hi: jax.Array
+    churn_lo: jax.Array = POS_INF
+    churn_hi: jax.Array = NEG_INF
 
     def pack(self) -> jax.Array:
-        return jnp.stack(list(self))
+        return jnp.stack([jnp.asarray(x, jnp.float32) for x in self])
 
     @classmethod
     def unpack(cls, arr: jax.Array) -> "ScreenConsts":
-        return cls(*(arr[i] for i in range(8)))
+        return cls(*(arr[i] for i in range(10)))
+
+
+#: number of packed ``ScreenConsts`` scalars (SMEM scratch / consts blocks).
+N_CONSTS = 10
+
+#: uptime floor of the churn rate ẑ = T / max(U, CHURN_EPS): zones with no
+#: observed uptime read as zero-churn rather than dividing by zero.
+CHURN_EPS = 1e-6
+
+
+def churn_of(
+    zone_term: jax.Array, zone_up: jax.Array, host_zone: jax.Array
+) -> jax.Array:
+    """Per-host learned churn rate: the zone accumulators' ẑ = T/max(U, ε)
+    (terminations per accumulated uptime second — the gce-manager rate)
+    gathered onto hosts by their zone id.  ONE definition so every decision
+    path derives bit-identical churn inputs from the same (T, U) state."""
+    rate = zone_term / jnp.maximum(zone_up, CHURN_EPS)
+    return rate[host_zone]
 
 
 def raw_base_terms(
-    free_f_sum: jax.Array, slow: jax.Array, overcommitted: jax.Array
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    free_f_sum: jax.Array,
+    slow: jax.Array,
+    overcommitted: jax.Array,
+    churn: jax.Array = None,
+) -> Tuple[jax.Array, ...]:
     """Raw (pre-normalization) enumeration-free weigher terms.
 
     ``free_f_sum`` is the per-host sum of free_f over resource dims (callers
-    reduce their own layout); returns (over_raw, pack_raw, strag_raw)."""
+    reduce their own layout); returns (over_raw, pack_raw, strag_raw) and,
+    when a per-host ``churn`` rate is given, appends ``churn_raw = -churn``
+    (negated: a positive churn multiplier must *penalize* hot zones)."""
     over_raw = jnp.where(overcommitted, -1.0, 0.0)
-    return over_raw, -free_f_sum, -slow
+    out = (over_raw, -free_f_sum, -slow)
+    if churn is None:
+        return out
+    return out + (-churn,)
+
+
+def _m_churn(multipliers) -> float:
+    """5th (churn) multiplier of a 4- or 5-tuple; 0 when absent."""
+    return multipliers[4] if len(multipliers) > 4 else 0.0
 
 
 def consts_of(
-    multipliers: Tuple[float, float, float, float],
+    multipliers: Tuple[float, ...],
     valid: jax.Array,
     cost_lb: jax.Array,
     cost_ub: jax.Array,
     over_raw: jax.Array,
     pack_raw: jax.Array,
     strag_raw: jax.Array,
+    churn_raw: jax.Array = None,
 ) -> ScreenConsts:
     """Fold the per-host terms into ``ScreenConsts`` (pure-jnp reduction;
     the Pallas screen folds the same min/maxes tile-by-tile into SMEM —
     min/max are reassociation-free, so the two agree bitwise)."""
-    m_over, _, m_pack, m_strag = multipliers
+    m_over, _, m_pack, m_strag = multipliers[:4]
+    m_churn = _m_churn(multipliers)
     pos = jnp.float32(POS_INF)
     neg = jnp.float32(NEG_INF)
 
     def fold(w, on):
-        if not on:
+        if not on or w is None:
             return pos, neg
         return (
             jnp.min(jnp.where(valid, w, POS_INF)),
@@ -204,8 +240,9 @@ def consts_of(
     over_lo, over_hi = fold(over_raw, m_over)
     pack_lo, pack_hi = fold(pack_raw, m_pack)
     strag_lo, strag_hi = fold(strag_raw, m_strag)
+    churn_lo, churn_hi = fold(churn_raw, m_churn)
     return ScreenConsts(c_lo, c_hi, over_lo, over_hi, pack_lo, pack_hi,
-                        strag_lo, strag_hi)
+                        strag_lo, strag_hi, churn_lo, churn_hi)
 
 
 def norm01(w: jax.Array, lo: jax.Array, hi: jax.Array) -> jax.Array:
@@ -224,15 +261,18 @@ def inv_span(c_lo: jax.Array, c_hi: jax.Array) -> jax.Array:
 
 
 def base_from_consts(
-    multipliers: Tuple[float, float, float, float],
+    multipliers: Tuple[float, ...],
     over_raw: jax.Array,
     pack_raw: jax.Array,
     strag_raw: jax.Array,
     consts: ScreenConsts,
+    churn_raw: jax.Array = None,
 ) -> jax.Array:
     """Enumeration-free weigher terms, summed in the ONE fixed order every
-    path shares (bit-exact parity requires identical float ops)."""
-    m_over, _, m_pack, m_strag = multipliers
+    path shares (bit-exact parity requires identical float ops); the churn
+    term is added LAST so churn-off programs are unchanged."""
+    m_over, _, m_pack, m_strag = multipliers[:4]
+    m_churn = _m_churn(multipliers)
     base = jnp.zeros_like(over_raw)
     if m_over:
         base = base + m_over * norm01(over_raw, consts.over_lo, consts.over_hi)
@@ -240,6 +280,8 @@ def base_from_consts(
         base = base + m_pack * norm01(pack_raw, consts.pack_lo, consts.pack_hi)
     if m_strag:
         base = base + m_strag * norm01(strag_raw, consts.strag_lo, consts.strag_hi)
+    if m_churn and churn_raw is not None:
+        base = base + m_churn * norm01(churn_raw, consts.churn_lo, consts.churn_hi)
     return base
 
 

@@ -62,6 +62,9 @@ class SimMetrics:
     placed_normal: int = 0
     placed_preemptible: int = 0
     preemptions: int = 0
+    #: correlated zone-level preemption storms fired / instances they killed
+    storms: int = 0
+    storm_kills: int = 0
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -74,6 +77,8 @@ class SimMetrics:
             "placed_normal": float(self.placed_normal),
             "placed_preemptible": float(self.placed_preemptible),
             "preemptions": float(self.preemptions),
+            "storms": float(self.storms),
+            "storm_kills": float(self.storm_kills),
         }
 
 
@@ -325,11 +330,16 @@ class SoASimulator:
                     "arrival",
                 )
             elif ev.kind == "departure":
-                self.fleet.depart(ev.payload)
+                self.fleet.depart(ev.payload, now=self.now)
             elif ev.kind == "fail_host":
-                self.fleet.fail_host(ev.payload)
+                self.fleet.fail_host(ev.payload, now=self.now)
             elif ev.kind == "heal_host":
                 self.fleet.heal_host(ev.payload)
+            elif ev.kind == "zone_storm":
+                zone, kill_frac = ev.payload
+                self._zone_storm(zone, kill_frac)
+            elif ev.kind == "regime_on":
+                self._regime_on(ev.payload)
         if self._pending:
             self._flush()
         self._sample()
@@ -399,18 +409,26 @@ class SoASimulator:
                     front.drain(self.now, block=False)
             elif ev.kind == "departure":
                 front.sync()  # instance ids must exist in the mirror
-                self.fleet.depart(ev.payload)
+                self.fleet.depart(ev.payload, now=self.now)
                 if front.waiting:  # backfill the freed capacity
                     front.drain(self.now, block=False)
             elif ev.kind == "fail_host":
                 front.sync()
-                self.fleet.fail_host(ev.payload)
+                self.fleet.fail_host(ev.payload, now=self.now)
                 if front.waiting:
                     front.drain(self.now, block=False)
             elif ev.kind == "heal_host":
                 self.fleet.heal_host(ev.payload)
                 if front.waiting:
                     front.drain(self.now, block=False)
+            elif ev.kind == "zone_storm":
+                front.sync()  # mirror must be current before mass preemption
+                zone, kill_frac = ev.payload
+                self._zone_storm(zone, kill_frac)
+                if front.waiting:  # storms free capacity → backfill
+                    front.drain(self.now, block=False)
+            elif ev.kind == "regime_on":
+                self._regime_on(ev.payload)
             failed_normal = self._handle_drain_results(front.take_results())
             if failed_normal and stop_on_normal_failure:
                 break
@@ -460,6 +478,95 @@ class SoASimulator:
         n = max(1, int(self.fleet.n_hosts * fraction))
         for h in self.rng.choice(self.fleet.n_hosts, size=n, replace=False):
             self.fleet.set_slow(self.fleet.names[int(h)], slow_factor)
+
+    def inject_zone_storm(
+        self, zone: str, at_s: float, kill_frac: float = 1.0
+    ) -> None:
+        """Schedule one correlated preemption storm: at ``at_s`` a seeded
+        ``kill_frac`` of the zone's live preemptible instances are reclaimed
+        at once (``SoAFleet.preempt_instance``), charging the zone's churn
+        accumulators — the spot-market reclaim wave the churn weigher and
+        the admission plane's graceful degradation are built to ride out."""
+        if zone not in self.fleet.zone_ids:
+            raise ValueError(
+                f"unknown zone {zone!r}; fleet zones: "
+                f"{sorted(self.fleet.zone_ids)}"
+            )
+        if not 0.0 < kill_frac <= 1.0:
+            raise ValueError(f"kill_frac must be in (0, 1], got {kill_frac}")
+        self._push(at_s, "zone_storm", (zone, float(kill_frac)))
+
+    def inject_churn_regime(
+        self,
+        zone: str,
+        until_s: float,
+        mean_on_s: float = 600.0,
+        mean_off_s: float = 3600.0,
+        storm_every_s: float = 120.0,
+        kill_frac: float = 0.25,
+        start_s: float = 0.0,
+    ) -> None:
+        """Markov on/off churn regime for one zone: the zone alternates
+        between a calm phase (exponential, mean ``mean_off_s``) and a stormy
+        phase (exponential, mean ``mean_on_s``) during which a
+        ``kill_frac`` reclaim wave fires every ``storm_every_s`` — the
+        bursty, time-correlated preemption process real spot markets show,
+        as opposed to the i.i.d. per-instance reclaims of
+        ``inject_host_failure``.  Deterministic given the simulator seed."""
+        if zone not in self.fleet.zone_ids:
+            raise ValueError(
+                f"unknown zone {zone!r}; fleet zones: "
+                f"{sorted(self.fleet.zone_ids)}"
+            )
+        payload = {
+            "zone": zone,
+            "until_s": float(until_s),
+            "mean_on_s": float(mean_on_s),
+            "mean_off_s": float(mean_off_s),
+            "storm_every_s": float(storm_every_s),
+            "kill_frac": float(kill_frac),
+        }
+        self._push(
+            start_s + self.rng.exponential(payload["mean_off_s"]),
+            "regime_on", payload,
+        )
+
+    def _regime_on(self, payload: Dict[str, float]) -> None:
+        """Enter one stormy phase: lay down its storm ticks, then schedule
+        the next phase after a calm gap."""
+        if self.now >= payload["until_s"]:
+            return
+        end = min(
+            self.now + self.rng.exponential(payload["mean_on_s"]),
+            payload["until_s"],
+        )
+        t = self.now
+        while t < end:
+            self._push(t, "zone_storm", (payload["zone"], payload["kill_frac"]))
+            t += payload["storm_every_s"]
+        nxt = end + self.rng.exponential(payload["mean_off_s"])
+        if nxt < payload["until_s"]:
+            self._push(nxt, "regime_on", payload)
+
+    def _zone_storm(self, zone: str, kill_frac: float) -> int:
+        """Reclaim a seeded ``kill_frac`` of the zone's live preemptible
+        instances right now.  Returns the kill count."""
+        fleet = self.fleet
+        victims = sorted(
+            iid
+            for iid, (h, slot) in fleet.locator.items()
+            if slot is not None and fleet.zones[h] == zone
+        )
+        self.metrics.storms += 1
+        if not victims:
+            return 0
+        n = max(1, int(round(len(victims) * kill_frac)))
+        picks = self.rng.choice(len(victims), size=min(n, len(victims)), replace=False)
+        killed = 0
+        for i in np.sort(picks):
+            killed += bool(fleet.preempt_instance(victims[int(i)], now=self.now))
+        self.metrics.storm_kills += killed
+        return killed
 
     def _sample(self) -> None:
         self.metrics.t.append(self.now)

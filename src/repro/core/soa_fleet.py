@@ -41,6 +41,7 @@ from .policy import (
     SchedulerPolicy,
     ensure_policy,
 )
+from .screen_math import CHURN_EPS
 from .types import Host, Instance, Request, Resources
 
 #: Padding sentinel for batched scheduling: a request no host can fit
@@ -207,6 +208,13 @@ class SoAFleet:
         self.domain_ids: Dict[str, int] = {}
         for h in hosts:
             self.domain_ids.setdefault(h.domain, len(self.domain_ids))
+        #: failure-domain (zone) plane: zone label per host + insertion-order
+        #: zone ids, mirroring the state's ``host_zone`` column and the
+        #: per-zone churn accumulators (``zone_term``/``zone_up``).
+        self.zones: List[str] = [h.zone for h in hosts]
+        self.zone_ids: Dict[str, int] = {}
+        for h in hosts:
+            self.zone_ids.setdefault(h.zone, len(self.zone_ids))
 
         # Mixed-payment fleets must declare every kind they bill: an
         # instance carrying a kind outside the policy table is a
@@ -221,7 +229,8 @@ class SoAFleet:
                     )
 
         self.state, slot_rows = build_fleet_state(
-            hosts, k_slots=k_slots, domain_ids=self.domain_ids
+            hosts, k_slots=k_slots, domain_ids=self.domain_ids,
+            zone_ids=self.zone_ids,
         )
         if self.policy.mesh is not None:
             # Pad to a shard-divisible host count that leaves every shard
@@ -329,6 +338,7 @@ class SoAFleet:
             bool(req.preemptible),
             np.int32(dom),
             np.int32(kind),
+            np.float32(-1.0 if req.period is None else req.period),
         )
 
     @property
@@ -380,10 +390,10 @@ class SoAFleet:
         self, req: Request, now: float, price: float = 1.0
     ) -> SoAOutcome:
         """One decide-and-apply step on the persistent state."""
-        res, pre, dom, kind = self._req_arrays(req)
+        res, pre, dom, kind, period = self._req_arrays(req)
         self.state, (host_idx, slot, ok, kill, fell_back, margin) = schedule_step(
             self.state, res, pre, dom, now, price,
-            policy=self._flush_policy(), req_cost_kind=kind,
+            policy=self._flush_policy(), req_cost_kind=kind, req_period=period,
         )
         self._observe(int(fell_back), float(margin), 1)
         return self._absorb(
@@ -413,13 +423,14 @@ class SoAFleet:
         now = np.full((padded,), items[-1][1], np.float32)
         price = np.ones((padded,), np.float32)
         kind = np.full((padded,), -1, np.int32)
+        period = np.full((padded,), -1.0, np.float32)
         for i, (req, t, p) in enumerate(items):
-            res[i], pre[i], dom[i], kind[i] = self._req_arrays(req)
+            res[i], pre[i], dom[i], kind[i], period[i] = self._req_arrays(req)
             now[i] = t
             price[i] = p
         self.state, (host_idx, slot, ok, kill, fell_back, margin) = schedule_many(
             self.state, res, pre, dom, now, price,
-            policy=self._flush_policy(), req_cost_kind=kind,
+            policy=self._flush_policy(), req_cost_kind=kind, req_period=period,
         )
         host_idx, slot = np.asarray(host_idx), np.asarray(slot)
         ok, kill = np.asarray(ok), np.asarray(kill)
@@ -468,6 +479,7 @@ class SoAFleet:
             user=req.user,
             price_rate=price,
             cost_kind=req.cost_kind,
+            period=req.period,
         )
         self.instances[inst.id] = inst
         if req.preemptible:
@@ -510,9 +522,14 @@ class SoAFleet:
         return front.stats.summary()
 
     # -- lifecycle transitions ----------------------------------------------
-    def depart(self, instance_id: str) -> bool:
+    def depart(self, instance_id: str, now: Optional[float] = None) -> bool:
         """Voluntary departure.  Returns False if the instance is already
-        gone (preempted / host failure) — departures are idempotent."""
+        gone (preempted / host failure) — departures are idempotent.
+
+        Pass ``now`` to credit the departing slot's accrued uptime to its
+        zone's churn denominator (a voluntary exit is evidence the zone is
+        *healthy*: uptime without a termination).  Without ``now`` the zone
+        accumulators are untouched — the exact pre-churn transition."""
         inst = self.instances.pop(instance_id, None)
         if inst is None:
             return False
@@ -520,7 +537,9 @@ class SoAFleet:
         if slot is not None:
             mask = np.zeros((self.k_slots,), bool)
             mask[slot] = True
-            self.state = apply_termination(self.state, host_idx, mask)
+            self.state = apply_termination(
+                self.state, host_idx, mask, now=now, involuntary=False
+            )
             self.slot_ids[host_idx][slot] = None
         else:
             self.state = apply_departure(
@@ -528,9 +547,35 @@ class SoAFleet:
             )
         return True
 
-    def fail_host(self, name: str) -> Tuple[int, int]:
+    def preempt_instance(
+        self, instance_id: str, now: Optional[float] = None
+    ) -> bool:
+        """Involuntary out-of-band preemption (storm injection / provider
+        reclaim): the instance dies like a scheduler kill — freed on device,
+        recorded in ``preempted`` for re-queueing, and (when ``now`` is
+        given) charged to its host's zone churn accumulators.  Returns False
+        when the instance is gone or not preemptible — idempotent."""
+        loc = self.locator.get(instance_id)
+        if loc is None or loc[1] is None:
+            return False
+        host_idx, slot = loc
+        inst = self.instances.pop(instance_id)
+        del self.locator[instance_id]
+        mask = np.zeros((self.k_slots,), bool)
+        mask[slot] = True
+        self.state = apply_termination(
+            self.state, host_idx, mask, now=now, involuntary=True
+        )
+        self.slot_ids[host_idx][slot] = None
+        self.preempted.append(inst)
+        return True
+
+    def fail_host(self, name: str, now: Optional[float] = None) -> Tuple[int, int]:
         """Hard failure: every instance dies (preemptible ones are recorded
-        as preempted for re-queueing).  Returns (n_preempted, n_terminated)."""
+        as preempted for re-queueing).  Returns (n_preempted, n_terminated).
+
+        Pass ``now`` to charge the failure to the host's zone churn
+        accumulators (every live slot's termination + accrued uptime)."""
         host_idx = self.index[name]
         n_pre = n_norm = 0
         normal_res = np.zeros((len(self.spec.dims),), np.float32)
@@ -546,8 +591,28 @@ class SoAFleet:
             else:
                 normal_res += inst.resources.vec32
                 n_norm += 1
-        self.state = apply_host_failure(self.state, host_idx, normal_res)
+        self.state = apply_host_failure(
+            self.state, host_idx, normal_res, now=now
+        )
         return n_pre, n_norm
+
+    # -- failure-domain plane (zone churn readers) ---------------------------
+    def zone_rates(self) -> Dict[str, float]:
+        """Observed per-zone churn rates ẑ = T / max(U, eps): involuntary
+        terminations over accrued preemptible uptime — the same statistic the
+        device decision reads via ``screen_math.churn_of``."""
+        term = np.asarray(self.state.zone_term)
+        up = np.asarray(self.state.zone_up)
+        rate = term / np.maximum(up, CHURN_EPS)
+        return {z: float(rate[i]) for z, i in self.zone_ids.items()}
+
+    def fleet_churn_rate(self) -> float:
+        """Fleet-wide churn rate ΣT / max(ΣU, eps) — the storm signal the
+        admission plane's graceful degradation compares against
+        ``policy.storm_threshold``."""
+        term = float(np.asarray(self.state.zone_term).sum())
+        up = float(np.asarray(self.state.zone_up).sum())
+        return term / max(up, CHURN_EPS)
 
     def checkpoint(self, instance_id: str, now: float) -> bool:
         """Record a durable checkpoint for a live preemptible instance (its
@@ -587,6 +652,7 @@ class SoAFleet:
                 name=self.names[i],
                 capacity=self.capacity[i],
                 domain=self.domains[i],
+                zone=self.zones[i],
                 schedulable=bool(schedulable[i]),
                 slow_factor=float(slow[i]),
             )

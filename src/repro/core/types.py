@@ -138,6 +138,10 @@ class Request:
     #: interactive (class 0), preemptible requests are batch (the lowest
     #: class).  Ignored by the direct (unqueued) entry points.
     priority: Optional[int] = None
+    #: Per-instance billing period in seconds for the period/revenue kinds
+    #: (contract terms vary per customer class); ``None`` = the fleet
+    #: policy's shared ``period``.
+    period: Optional[float] = None
     metadata: Mapping[str, object] = dataclasses.field(default_factory=dict)
 
 
@@ -160,6 +164,9 @@ class Instance:
     #: Billing kind this instance is scored under (mirrors
     #: ``Request.cost_kind``); ``None`` = the fleet policy's default.
     cost_kind: Optional[str] = None
+    #: Per-instance billing period in seconds (mirrors ``Request.period``);
+    #: ``None`` = the fleet policy's shared ``period``.
+    period: Optional[float] = None
     metadata: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     def run_time(self, now: float) -> float:
@@ -183,6 +190,9 @@ class Host:
     name: str
     capacity: Resources
     domain: str = "d0"
+    #: Failure domain (cloud zone / rack): preemption-storm correlation and
+    #: the learned churn rates are tracked per zone, not per host.
+    zone: str = "z0"
     #: hosts marked unschedulable (drain / failure) are filtered out.
     schedulable: bool = True
     #: Relative slowness factor learned from heartbeats (1.0 == nominal);

@@ -8,7 +8,7 @@ dominant latency term at 10^5 hosts once stage 2 only enumerates a
 shortlist.  Here every term is computed per 128-host tile from VMEM via the
 *shared* bounds math in ``repro.core.screen_math`` (both screens execute the
 same functions, so shortlist decisions stay bit-exact), and the only HBM
-writes are the (M+1,) shortlist plus 8 normalization scalars.
+writes are the (M+1,) shortlist plus 10 normalization scalars.
 
 Structure (grid = (2, N/T), sequential on TPU):
 
@@ -49,9 +49,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.screen_math import (
     EPS,
+    N_CONSTS,
     NEG_INF,
     POS_INF,
     ScreenConsts,
+    _m_churn,
     base_from_consts,
     inv_span,
     omega_of,
@@ -105,14 +107,19 @@ def _fold_top(scores_ref, idx_ref, tile_scores, tile_idx, s_buf, tile):
 def _tile_stage1(
     free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
     res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
-    *, require_free_slot,
+    *, require_free_slot, churn_ref=None, churn_threshold=None,
 ):
     """One tile's stage-1 screen terms from VMEM refs — the shared
     ``screen_math`` bounds plus the dual-view filtering (same formulas as
     ``_decision_core``).  Returns ``(valid, cost_lb, cost_ub, over_raw,
-    pack_raw, strag_raw)``, each (T,)-shaped.  ONE definition executed by
-    all three kernels below (2-phase fused, consts-only, topm-only), which
-    is what keeps the split phases bit-identical to the fused pass."""
+    pack_raw, strag_raw, churn_raw)``, each (T,)-shaped (``churn_raw`` is
+    ``None`` without a churn column).  ONE definition executed by all three
+    kernels below (2-phase fused, consts-only, topm-only), which is what
+    keeps the split phases bit-identical to the fused pass.
+
+    ``churn_ref`` is the optional (1, T) per-host learned zone-churn rate ẑ;
+    a static ``churn_threshold`` applies the hot-zone steering filter to
+    preemptible requests (same gate as ``_stage1_rows``)."""
     k = res_ref.shape[0]
     pre = pre_ref[0, 0] != 0
     rdom = rdom_ref[0, 0]
@@ -138,6 +145,10 @@ def _tile_stage1(
     fits = jnp.all(view >= req - EPS, axis=0)                    # (T,)
     fits &= sched_ref[...][0] > 0.5
     fits &= (rdom < 0) | (domain_ref[...][0] == rdom)
+    if churn_threshold is not None and churn_ref is not None:
+        fits &= jnp.where(
+            pre, churn_ref[...][0] <= jnp.float32(churn_threshold), True
+        )
     if require_free_slot:
         has_free = jnp.min(validf, axis=0) < 0.5
         fits &= jnp.where(pre, has_free, True)
@@ -149,45 +160,69 @@ def _tile_stage1(
     over_raw = jnp.where(overcommitted, -1.0, 0.0)
     pack_raw = -jnp.sum(free_f, axis=0)
     strag_raw = -slow_ref[...][0]
-    return valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw
+    churn_raw = None if churn_ref is None else -churn_ref[...][0]
+    return valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw, churn_raw
+
+
+def _split_refs(refs, n_extra, has_churn):
+    """Unpack a kernel's positional refs: the 11 fleet/request inputs, the
+    optional churn input, then ``n_extra`` output/scratch refs.  Returns
+    ``(fleet_refs, churn_ref, extra_refs)``."""
+    n_in = 12 if has_churn else 11
+    fleet = refs[:11]
+    churn_ref = refs[11] if has_churn else None
+    return fleet, churn_ref, refs[n_in:]
+
+
+def _fold_consts(smem, valid, cost_lb, cost_ub, raws):
+    """One tile's constants fold into SMEM: the termination-cost envelope
+    always, each raw base term only when its multiplier is on (identical
+    gating to ``consts_of``).  ``raws`` pairs (multiplier, raw-or-None) in
+    ScreenConsts slot order."""
+    smem[0] = jnp.minimum(smem[0], jnp.min(jnp.where(valid, cost_lb, POS_INF)))
+    smem[1] = jnp.maximum(smem[1], jnp.max(jnp.where(valid, cost_ub, NEG_INF)))
+    for slot, (on, raw) in enumerate(raws):
+        if on and raw is not None:
+            smem[2 + 2 * slot] = jnp.minimum(
+                smem[2 + 2 * slot], jnp.min(jnp.where(valid, raw, POS_INF))
+            )
+            smem[3 + 2 * slot] = jnp.maximum(
+                smem[3 + 2 * slot], jnp.max(jnp.where(valid, raw, NEG_INF))
+            )
 
 
 def _kernel(
-    free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
-    res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
-    scores_ref, idx_ref, consts_ref, smem,
-    *, multipliers, require_free_slot, tile, s_buf,
+    *refs,
+    multipliers, require_free_slot, churn_threshold, tile, s_buf, has_churn,
 ):
-    m_over, m_term, m_pack, m_strag = multipliers
+    m_term = multipliers[1]
+    m_churn = _m_churn(multipliers)
+    fleet, churn_ref, (scores_ref, idx_ref, consts_ref, smem) = _split_refs(
+        refs, 4, has_churn
+    )
     phase = pl.program_id(0)
     t = pl.program_id(1)
-    valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw = _tile_stage1(
-        free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
-        res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
+    (valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw,
+     churn_raw) = _tile_stage1(
+        *fleet,
         require_free_slot=require_free_slot,
+        churn_ref=churn_ref, churn_threshold=churn_threshold,
     )
 
     # ---- phase 0: fold normalization constants into SMEM --------------------
     @pl.when((phase == 0) & (t == 0))
     def _():
-        for i in range(4):
+        for i in range(N_CONSTS // 2):
             smem[2 * i] = jnp.float32(POS_INF)
             smem[2 * i + 1] = jnp.float32(NEG_INF)
 
     @pl.when(phase == 0)
     def _():
-        smem[0] = jnp.minimum(smem[0], jnp.min(jnp.where(valid, cost_lb, POS_INF)))
-        smem[1] = jnp.maximum(smem[1], jnp.max(jnp.where(valid, cost_ub, NEG_INF)))
-        for slot, (on, raw) in enumerate(
-            [(m_over, over_raw), (m_pack, pack_raw), (m_strag, strag_raw)]
-        ):
-            if on:
-                smem[2 + 2 * slot] = jnp.minimum(
-                    smem[2 + 2 * slot], jnp.min(jnp.where(valid, raw, POS_INF))
-                )
-                smem[3 + 2 * slot] = jnp.maximum(
-                    smem[3 + 2 * slot], jnp.max(jnp.where(valid, raw, NEG_INF))
-                )
+        _fold_consts(
+            smem, valid, cost_lb, cost_ub,
+            [(multipliers[0], over_raw), (multipliers[2], pack_raw),
+             (multipliers[3], strag_raw), (m_churn, churn_raw)],
+        )
 
     # ---- phase 1: omega_ub from the constants + running top-M ---------------
     @pl.when((phase == 1) & (t == 0))
@@ -197,8 +232,11 @@ def _kernel(
 
     @pl.when(phase == 1)
     def _():
-        consts = ScreenConsts(*(smem[i] for i in range(8)))
-        base = base_from_consts(multipliers, over_raw, pack_raw, strag_raw, consts)
+        consts = ScreenConsts(*(smem[i] for i in range(N_CONSTS)))
+        base = base_from_consts(
+            multipliers, over_raw, pack_raw, strag_raw, consts,
+            churn_raw=churn_raw,
+        )
         ispan = inv_span(consts.c_lo, consts.c_hi)
         opt_cost = cost_lb if m_term >= 0 else cost_ub
         omega_ub = omega_of(opt_cost, base, valid, consts, ispan, m_term)
@@ -208,60 +246,54 @@ def _kernel(
 
 
 def _consts_kernel(
-    free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
-    res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
-    consts_ref, smem,
-    *, multipliers, require_free_slot,
+    *refs, multipliers, require_free_slot, churn_threshold, has_churn,
 ):
-    """Phase 0 alone: fold the 8 normalization constants over the fleet
+    """Phase 0 alone: fold the 10 normalization constants over the fleet
     (identical folds to ``_kernel``'s phase 0) and emit them — the
     per-shard half of the split the sharded fused screen needs, so the
     mesh can pmin/pmax-merge constants BEFORE any omega is scored."""
-    m_over, m_term, m_pack, m_strag = multipliers
+    m_churn = _m_churn(multipliers)
+    fleet, churn_ref, (consts_ref, smem) = _split_refs(refs, 2, has_churn)
     t = pl.program_id(0)
-    valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw = _tile_stage1(
-        free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
-        res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
+    (valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw,
+     churn_raw) = _tile_stage1(
+        *fleet,
         require_free_slot=require_free_slot,
+        churn_ref=churn_ref, churn_threshold=churn_threshold,
     )
 
     @pl.when(t == 0)
     def _():
-        for i in range(4):
+        for i in range(N_CONSTS // 2):
             smem[2 * i] = jnp.float32(POS_INF)
             smem[2 * i + 1] = jnp.float32(NEG_INF)
 
-    smem[0] = jnp.minimum(smem[0], jnp.min(jnp.where(valid, cost_lb, POS_INF)))
-    smem[1] = jnp.maximum(smem[1], jnp.max(jnp.where(valid, cost_ub, NEG_INF)))
-    for slot, (on, raw) in enumerate(
-        [(m_over, over_raw), (m_pack, pack_raw), (m_strag, strag_raw)]
-    ):
-        if on:
-            smem[2 + 2 * slot] = jnp.minimum(
-                smem[2 + 2 * slot], jnp.min(jnp.where(valid, raw, POS_INF))
-            )
-            smem[3 + 2 * slot] = jnp.maximum(
-                smem[3 + 2 * slot], jnp.max(jnp.where(valid, raw, NEG_INF))
-            )
-    consts_ref[...] = jnp.stack([smem[i] for i in range(8)])[None, :]
+    _fold_consts(
+        smem, valid, cost_lb, cost_ub,
+        [(multipliers[0], over_raw), (multipliers[2], pack_raw),
+         (multipliers[3], strag_raw), (m_churn, churn_raw)],
+    )
+    consts_ref[...] = jnp.stack([smem[i] for i in range(N_CONSTS)])[None, :]
 
 
 def _topm_kernel(
-    free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
-    res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref, consts_in_ref,
-    scores_ref, idx_ref,
-    *, multipliers, require_free_slot, tile, s_buf,
+    *refs,
+    multipliers, require_free_slot, churn_threshold, tile, s_buf, has_churn,
 ):
     """Phase 1 alone, scoring against EXTERNAL constants (``consts_in_ref``,
     e.g. the mesh-merged ``ScreenConsts``): recompute the tile's screen
     terms, assemble ``omega_ub``, fold the running top-M — the same ops as
     ``_kernel``'s phase 1 reading merged constants instead of SMEM."""
-    m_over, m_term, m_pack, m_strag = multipliers
+    m_term = multipliers[1]
+    fleet, churn_ref, (consts_in_ref, scores_ref, idx_ref) = _split_refs(
+        refs, 3, has_churn
+    )
     t = pl.program_id(0)
-    valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw = _tile_stage1(
-        free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
-        res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
+    (valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw,
+     churn_raw) = _tile_stage1(
+        *fleet,
         require_free_slot=require_free_slot,
+        churn_ref=churn_ref, churn_threshold=churn_threshold,
     )
 
     @pl.when(t == 0)
@@ -269,8 +301,10 @@ def _topm_kernel(
         scores_ref[...] = jnp.full((1, s_buf), NEG_INF, jnp.float32)
         idx_ref[...] = jnp.full((1, s_buf), IDX_SENTINEL, jnp.int32)
 
-    consts = ScreenConsts(*(consts_in_ref[0, i] for i in range(8)))
-    base = base_from_consts(multipliers, over_raw, pack_raw, strag_raw, consts)
+    consts = ScreenConsts(*(consts_in_ref[0, i] for i in range(N_CONSTS)))
+    base = base_from_consts(
+        multipliers, over_raw, pack_raw, strag_raw, consts, churn_raw=churn_raw
+    )
     ispan = inv_span(consts.c_lo, consts.c_hi)
     opt_cost = cost_lb if m_term >= 0 else cost_ub
     omega_ub = omega_of(opt_cost, base, valid, consts, ispan, m_term)
@@ -278,67 +312,14 @@ def _topm_kernel(
     _fold_top(scores_ref, idx_ref, omega_ub[None, :], gidx, s_buf, tile)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "multipliers", "require_free_slot", "s_buf", "tile", "interpret"
-    ),
-)
-def _sched_screen_padded(
-    free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
-    req, pre, rdom,
-    multipliers, require_free_slot, s_buf, tile, interpret,
-):
-    k, d, n = res_t.shape
-    grid = (2, n // tile)
-    kern = functools.partial(
-        _kernel,
-        multipliers=multipliers,
-        require_free_slot=require_free_slot,
-        tile=tile,
-        s_buf=s_buf,
-    )
-    host = lambda p, t: (0, t)
-    fixed = lambda p, t: (0, 0)
-    return pl.pallas_call(
-        kern,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((d, tile), host),
-            pl.BlockSpec((d, tile), host),
-            pl.BlockSpec((1, tile), host),
-            pl.BlockSpec((1, tile), host),
-            pl.BlockSpec((1, tile), host),
-            pl.BlockSpec((k, d, tile), lambda p, t: (0, 0, t)),
-            pl.BlockSpec((k, tile), host),
-            pl.BlockSpec((k, tile), host),
-            pl.BlockSpec((d, 1), fixed),
-            pl.BlockSpec((1, 1), fixed),
-            pl.BlockSpec((1, 1), fixed),
-        ],
-        out_specs=(
-            pl.BlockSpec((1, s_buf), fixed),
-            pl.BlockSpec((1, s_buf), fixed),
-            pl.BlockSpec((1, 8), fixed),
-        ),
-        out_shape=(
-            jax.ShapeDtypeStruct((1, s_buf), jnp.float32),
-            jax.ShapeDtypeStruct((1, s_buf), jnp.int32),
-            jax.ShapeDtypeStruct((1, 8), jnp.float32),
-        ),
-        scratch_shapes=[pltpu.SMEM((8,), jnp.float32)],
-        interpret=interpret,
-    )(free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
-      req, pre, rdom)
-
-
-def _in_specs(k, d, tile):
+def _in_specs(k, d, tile, has_churn):
     """The fleet/request BlockSpec list shared by all three kernels (the
     host axis is the grid's LAST dimension, so the index maps take the
-    final program id as the tile index)."""
+    final program id as the tile index).  ``has_churn`` appends the (1, T)
+    churn-row spec."""
     host = lambda *ids: (0, ids[-1])
     fixed = lambda *ids: (0, 0)
-    return [
+    specs = [
         pl.BlockSpec((d, tile), host),
         pl.BlockSpec((d, tile), host),
         pl.BlockSpec((1, tile), host),
@@ -351,60 +332,112 @@ def _in_specs(k, d, tile):
         pl.BlockSpec((1, 1), fixed),
         pl.BlockSpec((1, 1), fixed),
     ]
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("multipliers", "require_free_slot", "tile", "interpret"),
-)
-def _sched_consts_padded(
-    free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
-    req, pre, rdom,
-    multipliers, require_free_slot, tile, interpret,
-):
-    k, d, n = res_t.shape
-    fixed = lambda t: (0, 0)
-    kern = functools.partial(
-        _consts_kernel,
-        multipliers=multipliers,
-        require_free_slot=require_free_slot,
-    )
-    return pl.pallas_call(
-        kern,
-        grid=(n // tile,),
-        in_specs=_in_specs(k, d, tile),
-        out_specs=pl.BlockSpec((1, 8), fixed),
-        out_shape=jax.ShapeDtypeStruct((1, 8), jnp.float32),
-        scratch_shapes=[pltpu.SMEM((8,), jnp.float32)],
-        interpret=interpret,
-    )(free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
-      req, pre, rdom)
+    if has_churn:
+        specs.append(pl.BlockSpec((1, tile), host))
+    return specs
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "multipliers", "require_free_slot", "s_buf", "tile", "interpret"
+        "multipliers", "require_free_slot", "churn_threshold", "s_buf",
+        "tile", "interpret",
+    ),
+)
+def _sched_screen_padded(
+    args, multipliers, require_free_slot, churn_threshold, s_buf, tile,
+    interpret,
+):
+    has_churn = len(args) == 12
+    k, d, n = args[5].shape
+    fixed = lambda *ids: (0, 0)
+    kern = functools.partial(
+        _kernel,
+        multipliers=multipliers,
+        require_free_slot=require_free_slot,
+        churn_threshold=churn_threshold,
+        tile=tile,
+        s_buf=s_buf,
+        has_churn=has_churn,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(2, n // tile),
+        in_specs=_in_specs(k, d, tile, has_churn),
+        out_specs=(
+            pl.BlockSpec((1, s_buf), fixed),
+            pl.BlockSpec((1, s_buf), fixed),
+            pl.BlockSpec((1, N_CONSTS), fixed),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, s_buf), jnp.float32),
+            jax.ShapeDtypeStruct((1, s_buf), jnp.int32),
+            jax.ShapeDtypeStruct((1, N_CONSTS), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.SMEM((N_CONSTS,), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "multipliers", "require_free_slot", "churn_threshold", "tile",
+        "interpret",
+    ),
+)
+def _sched_consts_padded(
+    args, multipliers, require_free_slot, churn_threshold, tile, interpret,
+):
+    has_churn = len(args) == 12
+    k, d, n = args[5].shape
+    fixed = lambda t: (0, 0)
+    kern = functools.partial(
+        _consts_kernel,
+        multipliers=multipliers,
+        require_free_slot=require_free_slot,
+        churn_threshold=churn_threshold,
+        has_churn=has_churn,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=_in_specs(k, d, tile, has_churn),
+        out_specs=pl.BlockSpec((1, N_CONSTS), fixed),
+        out_shape=jax.ShapeDtypeStruct((1, N_CONSTS), jnp.float32),
+        scratch_shapes=[pltpu.SMEM((N_CONSTS,), jnp.float32)],
+        interpret=interpret,
+    )(*args)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "multipliers", "require_free_slot", "churn_threshold", "s_buf",
+        "tile", "interpret",
     ),
 )
 def _sched_topm_padded(
-    free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
-    req, pre, rdom, consts,
-    multipliers, require_free_slot, s_buf, tile, interpret,
+    args, consts, multipliers, require_free_slot, churn_threshold, s_buf,
+    tile, interpret,
 ):
-    k, d, n = res_t.shape
+    has_churn = len(args) == 12
+    k, d, n = args[5].shape
     fixed = lambda t: (0, 0)
     kern = functools.partial(
         _topm_kernel,
         multipliers=multipliers,
         require_free_slot=require_free_slot,
+        churn_threshold=churn_threshold,
         tile=tile,
         s_buf=s_buf,
+        has_churn=has_churn,
     )
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
-        in_specs=_in_specs(k, d, tile) + [pl.BlockSpec((1, 8), fixed)],
+        in_specs=_in_specs(k, d, tile, has_churn)
+        + [pl.BlockSpec((1, N_CONSTS), fixed)],
         out_specs=(
             pl.BlockSpec((1, s_buf), fixed),
             pl.BlockSpec((1, s_buf), fixed),
@@ -414,8 +447,7 @@ def _sched_topm_padded(
             jax.ShapeDtypeStruct((1, s_buf), jnp.int32),
         ),
         interpret=interpret,
-    )(free_f_t, free_n_t, sched, domain, slow, res_t, cost_t, valid_t,
-      req, pre, rdom, consts)
+    )(*args, consts)
 
 
 def _prep_inputs(
@@ -423,10 +455,13 @@ def _prep_inputs(
     inst_res, inst_cost, inst_valid,
     req_res, req_preemptible, req_domain,
     tile: int,
+    churn=None,
 ):
     """Dtype-normalize, pad the host axis to the tile, and transpose to the
     kernels' slot-major layout.  Padding rows are unschedulable, so they
-    can never outrank a real host."""
+    can never outrank a real host.  An optional ``churn`` column (per-host
+    ẑ, padded with zeros — padding rows are filtered anyway) rides along as
+    the 12th element."""
     n, d = free_f.shape
     k = inst_cost.shape[1]
     pad = (-n) % tile
@@ -438,6 +473,8 @@ def _prep_inputs(
     inst_res = jnp.asarray(inst_res, jnp.float32)
     inst_cost = jnp.asarray(inst_cost, jnp.float32)
     inst_valid = jnp.asarray(inst_valid, jnp.float32)
+    if churn is not None:
+        churn = jnp.asarray(churn, jnp.float32)
     if pad:
         zf = jnp.zeros((pad, d), jnp.float32)
         free_f = jnp.concatenate([free_f, zf])
@@ -448,13 +485,18 @@ def _prep_inputs(
         inst_res = jnp.concatenate([inst_res, jnp.zeros((pad, k, d), jnp.float32)])
         inst_cost = jnp.concatenate([inst_cost, jnp.zeros((pad, k), jnp.float32)])
         inst_valid = jnp.concatenate([inst_valid, jnp.zeros((pad, k), jnp.float32)])
-    return (
+        if churn is not None:
+            churn = jnp.concatenate([churn, jnp.zeros((pad,), jnp.float32)])
+    out = (
         free_f.T, free_n.T, sched[None, :], domain[None, :], slow[None, :],
         inst_res.transpose(1, 2, 0), inst_cost.T, inst_valid.T,
         jnp.asarray(req_res, jnp.float32).reshape(d, 1),
         jnp.asarray(req_preemptible, jnp.int32).reshape(1, 1),
         jnp.asarray(req_domain, jnp.int32).reshape(1, 1),
     )
+    if churn is not None:
+        out += (churn[None, :],)
+    return out
 
 
 def sched_screen(
@@ -466,6 +508,8 @@ def sched_screen(
     m_keep: int,
     interpret=None,
     tile: int = TILE_HOSTS,
+    churn=None,
+    churn_threshold=None,
 ):
     """Fused stage-1 screen.  Returns ``(top_scores, top_idx, consts)``:
 
@@ -474,12 +518,16 @@ def sched_screen(
       top_idx     (m_keep,) their host indices.  Callers shortlist the first
                   m_keep-1 and use entry m_keep-1 as the admissibility
                   (u, j_u) witness — pass ``m_keep = M + 1``;
-      consts      (8,) packed ``ScreenConsts`` for reconstructing the exact
+      consts      (10,) packed ``ScreenConsts`` for reconstructing the exact
                   per-candidate base terms / tolerances outside the kernel.
 
     Requires ``m_keep <= n_hosts`` (the caller's shortlist branch guarantees
     M < N).  Hosts are padded to the 128-lane tile with unschedulable
-    entries, which can never outrank a real host.
+    entries, which can never outrank a real host.  ``churn`` (optional
+    per-host ẑ column) and a static ``churn_threshold`` enable the
+    failure-domain weigher term and hot-zone steering (see
+    ``_tile_stage1``); with a 5th ``weigher_multipliers`` entry the churn
+    normalization folds into consts slots 8/9.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -490,13 +538,16 @@ def sched_screen(
     while s_buf < m_keep + tile:
         s_buf *= 2
     scores, idx, consts = _sched_screen_padded(
-        *_prep_inputs(
+        _prep_inputs(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid,
-            req_res, req_preemptible, req_domain, tile,
+            req_res, req_preemptible, req_domain, tile, churn,
         ),
         multipliers=tuple(weigher_multipliers),
         require_free_slot=bool(require_free_slot),
+        churn_threshold=(
+            None if churn_threshold is None else float(churn_threshold)
+        ),
         s_buf=s_buf,
         tile=tile,
         interpret=interpret,
@@ -512,10 +563,12 @@ def sched_screen_consts(
     require_free_slot: bool,
     interpret=None,
     tile: int = TILE_HOSTS,
+    churn=None,
+    churn_threshold=None,
 ):
-    """Constants half of the split screen: fold ONLY the 8 normalization
+    """Constants half of the split screen: fold ONLY the 10 normalization
     scalars over the given hosts (identical folds to ``sched_screen``'s
-    phase 0).  Returns the packed (8,) ``ScreenConsts``.
+    phase 0).  Returns the packed (10,) ``ScreenConsts``.
 
     The sharded fused path (``jax_scheduler._sharded_screen`` with
     ``fused_screen=True``) runs this per shard, pmin/pmax-merges the
@@ -524,13 +577,16 @@ def sched_screen_consts(
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     consts = _sched_consts_padded(
-        *_prep_inputs(
+        _prep_inputs(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid,
-            req_res, req_preemptible, req_domain, tile,
+            req_res, req_preemptible, req_domain, tile, churn,
         ),
         multipliers=tuple(weigher_multipliers),
         require_free_slot=bool(require_free_slot),
+        churn_threshold=(
+            None if churn_threshold is None else float(churn_threshold)
+        ),
         tile=tile,
         interpret=interpret,
     )
@@ -547,6 +603,8 @@ def sched_screen_topm(
     m_keep: int,
     interpret=None,
     tile: int = TILE_HOSTS,
+    churn=None,
+    churn_threshold=None,
 ):
     """Top-M half of the split screen: score ``omega_ub`` against EXTERNAL
     packed constants (``consts``, e.g. mesh-merged) and fold the on-chip
@@ -561,14 +619,17 @@ def sched_screen_topm(
     while s_buf < m_keep + tile:
         s_buf *= 2
     scores, idx = _sched_topm_padded(
-        *_prep_inputs(
+        _prep_inputs(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid,
-            req_res, req_preemptible, req_domain, tile,
+            req_res, req_preemptible, req_domain, tile, churn,
         ),
-        jnp.asarray(consts, jnp.float32).reshape(1, 8),
+        jnp.asarray(consts, jnp.float32).reshape(1, N_CONSTS),
         multipliers=tuple(weigher_multipliers),
         require_free_slot=bool(require_free_slot),
+        churn_threshold=(
+            None if churn_threshold is None else float(churn_threshold)
+        ),
         s_buf=s_buf,
         tile=tile,
         interpret=interpret,

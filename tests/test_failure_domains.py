@@ -1,0 +1,495 @@
+"""Failure-domain plane: zone churn accumulators, churn-aware decisions,
+correlated preemption storms, and graceful degradation.
+
+The contract under test, end to end:
+
+  * the device-resident per-zone accumulators (``zone_term``/``zone_up``)
+    track EXACTLY the python-side definition of involuntary churn — kills
+    over accrued uptime — under any interleaving of placements with
+    evacuations, out-of-band preemptions, voluntary departures, and host
+    failures (integer times keep every f32 sum exact, so equality is strict);
+  * churn-aware decisions (nonzero ``churn_multiplier`` / a
+    ``churn_threshold``) taken on the incremental state are bit-identical to
+    the rebuild-from-python oracle seeded with the same accumulators;
+  * a hot zone's learned rate steers preemptible placements away (threshold)
+    and penalizes all placements (weigher term);
+  * storm injection is deterministic given the seed, conserves instances,
+    and charges only the zone it hits;
+  * queue aging (``aging_rate``) un-starves low-priority entries under
+    sustained high-priority load;
+  * fleet-wide storms demote pending preemptible placements to
+    non-preemptible (``storm_threshold`` graceful degradation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cost import PeriodCost
+from repro.core.jax_scheduler import build_fleet_state, schedule_step
+from repro.core.policy import SchedulerPolicy
+from repro.core.screen_math import CHURN_EPS
+from repro.core.simulator import SoASimulator, WorkloadSpec
+from repro.core.soa_fleet import SoAFleet
+from repro.core.types import VM_SPEC, Host, Instance, Request
+
+CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=160)
+SIZES = [
+    VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20),
+    VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40),
+    VM_SPEC.make(vcpus=4, ram_mb=8000, disk_gb=80),
+]
+K = 8
+
+
+def _zoned_hosts(n: int, n_zones: int = 3):
+    return [
+        Host(
+            name=f"h{i}", capacity=CAP, domain=f"dom{i % 2}",
+            zone=f"z{i % n_zones}",
+        )
+        for i in range(n)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# 1. accumulator parity vs a pure-python churn oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_zone_accumulators_match_python_oracle(seed):
+    """Randomized lifecycle events vs hand-tracked per-zone (T, U): every
+    involuntary kill adds 1 to its zone's T and the victim's accrued uptime
+    to U; voluntary departures add uptime only (diluting ẑ); normal
+    instances never touch the accumulators.  Integer event times make the
+    f32 sums exact, so equality is strict."""
+    rng = np.random.default_rng(seed)
+    n_hosts, n_zones, n_events = 12, 3, 350
+    hosts = _zoned_hosts(n_hosts, n_zones)
+    fleet = SoAFleet(hosts, cost_fn=PeriodCost(), k_slots=K)
+    T = np.zeros((n_zones,), np.float64)
+    U = np.zeros((n_zones,), np.float64)
+    #: live instances we know about: id -> (zone index, start, preemptible)
+    live = {}
+    now = 0.0
+
+    for step in range(n_events):
+        now += float(rng.integers(1, 90))
+        roll = rng.random()
+        if roll < 0.55:  # -------------------------------------------- arrival
+            req = Request(
+                id=f"r{step}",
+                resources=SIZES[int(rng.integers(3))],
+                preemptible=bool(rng.random() < 0.6),
+            )
+            out = fleet.schedule_request(req, now)
+            if out.ok:
+                z = fleet.zone_ids[fleet.zones[fleet.index[out.host]]]
+                # scheduler evacuations are involuntary churn in the
+                # chosen host's zone
+                for v in out.victims:
+                    T[z] += 1.0
+                    U[z] += now - v.start_time
+                    del live[v.id]
+                live[out.instance.id] = (z, now, req.preemptible)
+        elif roll < 0.75 and live:  # ------------------------------- departure
+            iid = sorted(live)[int(rng.integers(len(live)))]
+            z, start, pre = live.pop(iid)
+            assert fleet.depart(iid, now=now)
+            if pre:  # voluntary exit: uptime credit only
+                U[z] += now - start
+        elif roll < 0.90:  # ------------------------- out-of-band preemption
+            pre_ids = [i for i, (_, _, p) in live.items() if p]
+            if pre_ids:
+                iid = sorted(pre_ids)[int(rng.integers(len(pre_ids)))]
+                z, start, _ = live.pop(iid)
+                assert fleet.preempt_instance(iid, now=now)
+                T[z] += 1.0
+                U[z] += now - start
+        else:  # ------------------------------------------------ host failure
+            name = f"h{rng.integers(n_hosts)}"
+            host_idx = fleet.index[name]
+            z = fleet.zone_ids[fleet.zones[host_idx]]
+            for iid in [
+                i for i, (h, _) in fleet.locator.items() if h == host_idx
+            ]:
+                zz, start, pre = live.pop(iid)
+                if pre:  # only slot instances feed the zone accumulators
+                    T[z] += 1.0
+                    U[z] += now - start
+            fleet.fail_host(name, now=now)
+            fleet.heal_host(name)
+
+        np.testing.assert_array_equal(
+            np.asarray(fleet.state.zone_term), T.astype(np.float32),
+            err_msg=f"event {step}: zone_term",
+        )
+        np.testing.assert_array_equal(
+            np.asarray(fleet.state.zone_up), U.astype(np.float32),
+            err_msg=f"event {step}: zone_up",
+        )
+
+    assert T.sum() > 0 and U.sum() > 0, "degenerate run: no churn observed"
+    # the reader derives the same ẑ the device decision consumes
+    rates = fleet.zone_rates()
+    for z, i in fleet.zone_ids.items():
+        np.testing.assert_allclose(
+            rates[z],
+            np.float32(T[i]) / max(np.float32(U[i]), CHURN_EPS),
+            rtol=1e-6,
+        )
+    np.testing.assert_allclose(
+        fleet.fleet_churn_rate(),
+        np.float32(T.sum()) / max(np.float32(U.sum()), CHURN_EPS),
+        rtol=1e-6,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2. churn-aware decision parity: incremental state vs rebuild oracle
+# ---------------------------------------------------------------------------
+
+
+def test_churn_aware_decisions_match_rebuild_oracle():
+    """With a nonzero churn multiplier AND a churn threshold, every decision
+    on the incrementally-maintained state is bit-identical to one taken on a
+    state rebuilt from the python hosts and seeded with the live zone
+    accumulators — the 4-path parity contract extended to the churn plane."""
+    rng = np.random.default_rng(11)
+    n_hosts, n_events = 16, 300
+    hosts = _zoned_hosts(n_hosts, n_zones=4)
+    by_name = {h.name: h for h in hosts}
+    policy = SchedulerPolicy(
+        weigher_multipliers=(1.0, 1.0, 0.05, 0.0),
+        churn_multiplier=2.0,
+        churn_threshold=0.5,
+        cost_kind="period",
+    )
+    fleet = SoAFleet(hosts, k_slots=K, policy=policy)
+    now = 0.0
+    live = []  # departable ids
+
+    def mirror_place(out):
+        host = by_name[out.host]
+        for v in out.victims:
+            host.remove(v.id)
+        inst = out.instance
+        host.place(
+            Instance(
+                id=inst.id, resources=inst.resources,
+                preemptible=inst.preemptible, host=host.name,
+                start_time=inst.start_time, price_rate=inst.price_rate,
+                cost_kind=inst.cost_kind, period=inst.period,
+            )
+        )
+
+    for step in range(n_events):
+        now += float(rng.integers(1, 90))
+        roll = rng.random()
+        if roll < 0.60:  # -------------------------------------------- arrival
+            req = Request(
+                id=f"r{step}",
+                resources=SIZES[int(rng.integers(3))],
+                preemptible=bool(rng.random() < 0.6),
+            )
+            price = float(rng.integers(1, 5))
+            oracle, _ = build_fleet_state(
+                hosts, k_slots=K, domain_ids=fleet.domain_ids,
+                slot_assignment=fleet.slot_assignment(),
+                zone_ids=fleet.zone_ids,
+                zone_term=fleet.state.zone_term,
+                zone_up=fleet.state.zone_up,
+            )
+            res, pre, dom, kind, period = fleet._req_arrays(req)
+            _, (oh, oslot, ook, okill, _fb, _mg) = schedule_step(
+                oracle, res, pre, dom, now, price,
+                policy=fleet.policy, req_cost_kind=kind, req_period=period,
+            )
+            expect_victims = set()
+            if bool(ook) and not req.preemptible:
+                expect_victims = {
+                    fleet.slot_ids[int(oh)][k]
+                    for k in np.flatnonzero(np.asarray(okill))
+                } - {None}
+            out = fleet.schedule_request(req, now, price=price)
+            assert bool(ook) == out.ok, f"event {step}: ok mismatch"
+            if out.ok:
+                assert fleet.names[int(oh)] == out.host, f"event {step}"
+                assert {v.id for v in out.victims} == expect_victims
+                mirror_place(out)
+                live.append(out.instance.id)
+        elif roll < 0.78 and live:  # ------------------------------- departure
+            iid = live.pop(int(rng.integers(len(live))))
+            if fleet.depart(iid, now=now):
+                for h in hosts:
+                    if iid in h.instances:
+                        h.remove(iid)
+        elif roll < 0.92:  # -------------------------------- storm preemption
+            pre_ids = sorted(
+                i for i, (_, s) in fleet.locator.items() if s is not None
+            )
+            if pre_ids:
+                iid = pre_ids[int(rng.integers(len(pre_ids)))]
+                assert fleet.preempt_instance(iid, now=now)
+                for h in hosts:
+                    if iid in h.instances:
+                        h.remove(iid)
+        else:  # ------------------------------------------------- fail / heal
+            name = f"h{rng.integers(n_hosts)}"
+            host = by_name[name]
+            if host.schedulable:
+                fleet.fail_host(name, now=now)
+                host.schedulable = False
+                host.instances.clear()
+            else:
+                fleet.heal_host(name)
+                host.schedulable = True
+
+    assert float(np.asarray(fleet.state.zone_term).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# 3. hot-zone steering: threshold gate + churn weigher
+# ---------------------------------------------------------------------------
+
+
+def _two_zone_fleet(policy, hot_term=10.0):
+    """Two empty hosts, h0 in the HOT zone (ẑ=0.1), h1 cold (ẑ=0)."""
+    hosts = [
+        Host(name="h0", capacity=CAP, zone="z_hot"),
+        Host(name="h1", capacity=CAP, zone="z_cold"),
+    ]
+    fleet = SoAFleet(hosts, k_slots=K, policy=policy)
+    fleet.state = dataclasses.replace(
+        fleet.state,
+        zone_term=jnp.asarray([hot_term, 0.0], jnp.float32),
+        zone_up=jnp.asarray([100.0, 100.0], jnp.float32),
+    )
+    return fleet
+
+
+def test_churn_threshold_steers_preemptible_off_hot_zone():
+    small = SIZES[0]
+    # baseline (churn-blind): the tie resolves to the first host — h0 (hot)
+    blind = _two_zone_fleet(SchedulerPolicy(cost_kind="period"))
+    out = blind.schedule_request(
+        Request(id="p", resources=small, preemptible=True), now=10.0
+    )
+    assert out.ok and out.host == "h0"
+
+    # threshold below the hot zone's ẑ=0.1: preemptible placements are
+    # gated off h0 entirely
+    gated = _two_zone_fleet(
+        SchedulerPolicy(cost_kind="period", churn_threshold=0.05)
+    )
+    out = gated.schedule_request(
+        Request(id="p", resources=small, preemptible=True), now=10.0
+    )
+    assert out.ok and out.host == "h1"
+    # normal placements are NOT gated (only spot capacity rides churn risk)
+    out = gated.schedule_request(
+        Request(id="n", resources=small, preemptible=False), now=11.0
+    )
+    assert out.ok and out.host == "h0"
+    # a hot fleet with nowhere cold to go: preemptible is rejected, not
+    # silently placed into the hot zone
+    all_hot = SoAFleet(
+        [Host(name="h0", capacity=CAP, zone="z_hot")],
+        k_slots=K,
+        policy=SchedulerPolicy(cost_kind="period", churn_threshold=0.05),
+    )
+    all_hot.state = dataclasses.replace(
+        all_hot.state,
+        zone_term=jnp.asarray([10.0], jnp.float32),
+        zone_up=jnp.asarray([100.0], jnp.float32),
+    )
+    out = all_hot.schedule_request(
+        Request(id="p", resources=small, preemptible=True), now=10.0
+    )
+    assert not out.ok
+
+
+def test_churn_weigher_penalizes_hot_zone():
+    """A positive churn multiplier steers ALL placements toward the cold
+    zone (soft penalty, not a gate)."""
+    small = SIZES[0]
+    weighed = _two_zone_fleet(
+        SchedulerPolicy(cost_kind="period", churn_multiplier=2.0)
+    )
+    for rid, pre in (("p", True), ("n", False)):
+        out = weighed.schedule_request(
+            Request(id=rid, resources=small, preemptible=pre),
+            now=10.0 + (rid == "n"),
+        )
+        assert out.ok and out.host == "h1", f"{rid} landed {out.host}"
+
+
+# ---------------------------------------------------------------------------
+# 4. storm injection: determinism, conservation, zone isolation
+# ---------------------------------------------------------------------------
+
+
+def _storm_sim(seed=3):
+    medium = VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40)
+    spec = WorkloadSpec(
+        arrival_rate_per_s=1 / 20.0,
+        preemptible_fraction=1.0,  # storms are the ONLY kill source
+        flavors=(("medium", medium),),
+    )
+    sim = SoASimulator(
+        _zoned_hosts(12, 3), spec, seed=seed, cost_fn=PeriodCost(), k_slots=4
+    )
+    sim.inject_zone_storm("z1", at_s=1500.0, kill_frac=0.5)
+    sim.inject_churn_regime(
+        "z2", until_s=4000.0, mean_on_s=300.0, mean_off_s=800.0,
+        storm_every_s=100.0, kill_frac=0.3, start_s=0.0,
+    )
+    return sim
+
+
+def test_zone_storms_deterministic_and_conserving():
+    sim = _storm_sim()
+    m = sim.run(4000.0)
+    assert m.storms >= 1 and m.storm_kills >= 1
+    # conservation: with an all-preemptible workload and no failures, every
+    # preempted record traces back to a storm kill (and nothing else)
+    assert len(sim.fleet.preempted) == m.storm_kills
+    assert m.preemptions == 0  # no scheduler-driven evacuations fired
+    # zone isolation: involuntary terminations land only in the hit zones
+    term = np.asarray(sim.fleet.state.zone_term)
+    assert term[sim.fleet.zone_ids["z0"]] == 0.0
+    assert term.sum() == float(m.storm_kills)
+    # every storm victim's host really is in a stormed zone
+    for inst in sim.fleet.preempted:
+        assert sim.fleet.zones[sim.fleet.index[inst.host]] in ("z1", "z2")
+
+    # determinism: same seed, same injections → identical trajectories
+    # (latency percentiles are wall-clock measurements, so compare the
+    # simulation-state keys only)
+    sim2 = _storm_sim()
+    rerun = sim2.run(4000.0)
+    skip = {"p50_sched_latency_us", "p99_sched_latency_us"}
+    assert {k: v for k, v in rerun.summary().items() if k not in skip} == {
+        k: v for k, v in m.summary().items() if k not in skip
+    }
+    np.testing.assert_array_equal(
+        np.asarray(sim2.fleet.state.zone_term), term
+    )
+
+
+def test_zone_storm_validates_inputs():
+    sim = _storm_sim()
+    with pytest.raises(ValueError, match="unknown zone"):
+        sim.inject_zone_storm("z9", at_s=10.0)
+    with pytest.raises(ValueError, match="kill_frac"):
+        sim.inject_zone_storm("z1", at_s=10.0, kill_frac=0.0)
+    with pytest.raises(ValueError, match="unknown zone"):
+        sim.inject_churn_regime("z9", until_s=100.0)
+
+
+# ---------------------------------------------------------------------------
+# 5. queue aging: no starvation under sustained high-priority load
+# ---------------------------------------------------------------------------
+
+
+def _aging_run(aging_rate):
+    """One preemptible (class-1) arrival at t=0, then two fresh normal
+    (class-0) arrivals per drain with ``admit_batch=2`` — without aging the
+    fresh pairs monopolize every batch forever."""
+    small = SIZES[0]
+    policy = SchedulerPolicy(
+        cost_kind="period", queue_capacity=32, admit_batch=2,
+        n_classes=2, aging_rate=aging_rate, slo_target_s=1e9,
+    )
+    fleet = SoAFleet(_zoned_hosts(4, 2), k_slots=K, policy=policy)
+    fleet.submit(
+        Request(id="starved", resources=small, preemptible=True), now=0.0
+    )
+    attempts = []
+    for i in range(1, 6):
+        t = 60.0 * i
+        fleet.submit(
+            Request(id=f"a{i}", resources=small, preemptible=False), now=t
+        )
+        fleet.submit(
+            Request(id=f"b{i}", resources=small, preemptible=False), now=t
+        )
+        result = fleet.drain(t)
+        if result is not None:
+            attempts.extend(result.attempts)
+    return fleet, attempts
+
+
+def test_aging_unstarves_batch_class_under_sustained_load():
+    # aging off: the class-1 entry never makes a batch
+    fleet, attempts = _aging_run(aging_rate=0.0)
+    assert all(req.id != "starved" for req, _ in attempts)
+    assert fleet.admission.waiting >= 1
+
+    # one class per 30 s waited: by the first drain (60 s) the entry reads
+    # as class 0 with the oldest seq, so it leads the very next batch
+    fleet, attempts = _aging_run(aging_rate=1 / 30.0)
+    placed = {req.id: ok for req, ok in attempts}
+    assert placed.get("starved") is True
+    assert "starved" not in {
+        w.request.id
+        for w in fleet.admission.slots + fleet.admission._pending
+        if w is not None
+    }
+
+
+# ---------------------------------------------------------------------------
+# 6. graceful degradation: fleet-wide storms demote preemptible placements
+# ---------------------------------------------------------------------------
+
+
+def _degradation_fleet(hot: bool):
+    policy = SchedulerPolicy(
+        cost_kind="period", queue_capacity=8, admit_batch=4,
+        storm_threshold=0.05,
+    )
+    fleet = SoAFleet(_zoned_hosts(2, 2), k_slots=K, policy=policy)
+    if hot:  # fleet churn ΣT/ΣU = 10/100 = 0.1 > storm_threshold
+        fleet.state = dataclasses.replace(
+            fleet.state,
+            zone_term=jnp.asarray([5.0, 5.0], jnp.float32),
+            zone_up=jnp.asarray([50.0, 50.0], jnp.float32),
+        )
+    return fleet
+
+
+def test_storm_threshold_demotes_preemptible_to_normal():
+    small = SIZES[0]
+    fleet = _degradation_fleet(hot=True)
+    fleet.submit(
+        Request(id="p", resources=small, preemptible=True), now=10.0
+    )
+    result = fleet.drain(10.0)
+    (out,) = result.outcomes
+    assert out.ok
+    # placed, but demoted: a durable (non-preemptible) instance in the
+    # python mirror, the locator, and the device free_n view
+    assert out.instance.preemptible is False
+    assert fleet.locator[out.instance.id][1] is None
+    assert fleet.admission.stats.degraded == 1
+    used_n = float(
+        np.asarray(fleet.state.free_n).sum()
+    )
+    cap_n = float(np.asarray(CAP.vec).sum()) * 2
+    assert used_n < cap_n  # free_n paid for the durable placement
+
+    # calm fleet (ẑ = 0): the same arrival stays preemptible
+    fleet = _degradation_fleet(hot=False)
+    fleet.submit(
+        Request(id="p", resources=small, preemptible=True), now=10.0
+    )
+    result = fleet.drain(10.0)
+    (out,) = result.outcomes
+    assert out.ok
+    assert out.instance.preemptible is True
+    assert fleet.locator[out.instance.id][1] is not None
+    assert fleet.admission.stats.degraded == 0

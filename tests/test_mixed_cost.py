@@ -196,6 +196,70 @@ def test_mixed_decisions_match_python_oracle_over_events(seed, shortlist):
         assert fleet.fallbacks > 0
 
 
+def test_per_instance_periods_match_python_oracle():
+    """Per-instance contract periods (``Instance.period`` → the state's
+    ``inst_period`` column): slots billing by the period/revenue kinds must
+    price by their OWN period where one is set, falling back to
+    ``policy.period`` otherwise — slot for slot against the python oracle,
+    and decision for decision on the frozen-cost oracle state.  Periods are
+    dyadic multiples of 900 s so the revenue kind's ``part/period`` stays
+    f32-exact."""
+    rng = np.random.default_rng(31)
+    hosts = _mixed_fleet(rng, 20)
+    periods = [900.0, 1800.0, 7200.0]
+    for h in hosts:
+        for inst in h.preemptible_instances():
+            if rng.random() < 0.7:
+                inst.period = float(periods[int(rng.integers(3))])
+    fleet = SoAFleet(hosts, cost_fn=MIXED, k_slots=K)
+    # the column really carries overrides AND defaults (-1 sentinel)
+    col = np.asarray(fleet.state.inst_period)[np.asarray(fleet.state.inst_valid)]
+    assert (col > 0).any() and (col < 0).any()
+
+    for step in range(4):
+        now = NOW + 900.0 * step
+        got = np.asarray(
+            jnp.where(
+                fleet.state.inst_valid,
+                fleet_slot_costs(fleet.state, jnp.float32(now), fleet.policy),
+                0.0,
+            )
+        )
+        np.testing.assert_array_equal(got, _python_slot_costs(fleet, now))
+
+    # decisions: arrivals carrying per-REQUEST periods land in the column
+    # and the next normal decision must price them identically to python
+    now = NOW
+    compared = 0
+    for step in range(40):
+        now += float(rng.integers(1, 5)) * 900.0
+        pre = bool(rng.random() < 0.5)
+        req = Request(
+            id=f"r{step}",
+            resources=SIZES[int(rng.integers(3))],
+            preemptible=pre,
+            cost_kind=COST_KINDS[int(rng.integers(2)) * 2] if pre else None,
+            period=(
+                float(periods[int(rng.integers(3))])
+                if pre and rng.random() < 0.7 else None
+            ),
+        )
+        if pre:
+            fleet.schedule_request(req, now, price=float(rng.integers(1, 5)))
+            continue
+        oracle = _oracle_state(fleet, now)
+        oh, om, ook = schedule_decision(
+            oracle, jnp.asarray(req.resources.vec32), False,
+            jnp.asarray(-1, jnp.int32), policy=fleet.policy,
+        )
+        out = fleet.schedule_request(req, now)
+        assert out.ok == bool(ook), f"step {step}: ok mismatch"
+        if out.ok:
+            assert out.host == fleet.names[int(oh)], f"step {step}"
+        compared += 1
+    assert compared >= 10
+
+
 def test_single_kind_policy_ignores_kind_column():
     """A homogeneous policy must reproduce today's decisions unchanged even
     if the state carries a (stale) kind column — the column is only read

@@ -55,7 +55,8 @@ def _rand_arrays(rng, n, k, d=3):
     )
 
 
-def _oracle_topm(a, req, pre, rdom, mult, require_free_slot, m_keep):
+def _oracle_topm(a, req, pre, rdom, mult, require_free_slot, m_keep,
+                 churn=None, churn_threshold=None):
     """The jnp stage-1 assembly (same shared math as ``_decision_core``):
     fleet-wide ``omega_ub`` → ``lax.top_k`` shortlist + packed consts.
 
@@ -64,12 +65,16 @@ def _oracle_topm(a, req, pre, rdom, mult, require_free_slot, m_keep):
     on some multiplier configs, and the parity contract is between the two
     *compiled* screens."""
 
-    def run(req, pre_b, rdom):
+    def run(req, pre_b, rdom, churn):
         free_f = jnp.asarray(a["free_f"])
         view = jnp.where(pre_b, free_f, jnp.asarray(a["free_n"]))
         fits = jnp.all(view >= req[None, :] - EPS, axis=-1)
         fits &= jnp.asarray(a["schedulable"])
         fits &= (rdom < 0) | (jnp.asarray(a["domain"]) == rdom)
+        if churn_threshold is not None and churn is not None:
+            fits &= jnp.where(
+                pre_b, churn <= jnp.float32(churn_threshold), True
+            )
         inst_valid = jnp.asarray(a["inst_valid"])
         if require_free_slot:
             fits &= jnp.where(pre_b, jnp.any(~inst_valid, axis=-1), True)
@@ -82,23 +87,28 @@ def _oracle_topm(a, req, pre, rdom, mult, require_free_slot, m_keep):
         feas = jnp.where(pre_b, fits, feas)
         valid = fits & feas
         raw = raw_base_terms(
-            jnp.sum(free_f, axis=-1), jnp.asarray(a["slow"]), over
+            jnp.sum(free_f, axis=-1), jnp.asarray(a["slow"]), over, churn
         )
         consts = consts_of(mult, valid, lb, ub, *raw)
-        base = base_from_consts(mult, *raw, consts)
+        base = base_from_consts(
+            mult, raw[0], raw[1], raw[2], consts,
+            churn_raw=raw[3] if len(raw) > 3 else None,
+        )
         ispan = inv_span(consts.c_lo, consts.c_hi)
         opt = lb if mult[1] >= 0 else ub
         omega_ub = omega_of(opt, base, valid, consts, ispan, mult[1])
         s, i = jax.lax.top_k(omega_ub, m_keep)              # ties → low idx
         return s, i, consts.pack()
 
-    s, i, c = jax.jit(run)(
-        jnp.asarray(req), jnp.asarray(pre), jnp.asarray(rdom, jnp.int32)
+    s, i, c = jax.jit(run, static_argnames=())(
+        jnp.asarray(req), jnp.asarray(pre), jnp.asarray(rdom, jnp.int32),
+        None if churn is None else jnp.asarray(churn, jnp.float32),
     )
     return np.asarray(s), np.asarray(i), np.asarray(c)
 
 
-def _fused_topm(a, req, pre, rdom, mult, require_free_slot, m_keep):
+def _fused_topm(a, req, pre, rdom, mult, require_free_slot, m_keep,
+                churn=None, churn_threshold=None):
     s, i, c = sched_screen(
         a["free_f"], a["free_n"], a["schedulable"], a["domain"], a["slow"],
         a["inst_res"], a["inst_cost"], a["inst_valid"],
@@ -107,14 +117,19 @@ def _fused_topm(a, req, pre, rdom, mult, require_free_slot, m_keep):
         require_free_slot=require_free_slot,
         m_keep=m_keep,
         interpret=True,
+        churn=None if churn is None else jnp.asarray(churn, jnp.float32),
+        churn_threshold=churn_threshold,
     )
     return np.asarray(s), np.asarray(i), np.asarray(c)
 
 
-def _assert_screen_parity(a, req, pre, rdom, mult, require_free_slot, m_keep):
+def _assert_screen_parity(a, req, pre, rdom, mult, require_free_slot, m_keep,
+                          churn=None, churn_threshold=None):
     ref = _oracle_topm(a, jnp.asarray(req), pre, jnp.asarray(rdom, jnp.int32),
-                       mult, require_free_slot, m_keep)
-    got = _fused_topm(a, req, pre, rdom, mult, require_free_slot, m_keep)
+                       mult, require_free_slot, m_keep,
+                       churn=churn, churn_threshold=churn_threshold)
+    got = _fused_topm(a, req, pre, rdom, mult, require_free_slot, m_keep,
+                      churn=churn, churn_threshold=churn_threshold)
     np.testing.assert_array_equal(got[0], ref[0], err_msg="top-M scores")
     np.testing.assert_array_equal(got[1], ref[1], err_msg="top-M host indices")
     np.testing.assert_array_equal(got[2], ref[2], err_msg="normalization consts")
@@ -195,6 +210,82 @@ def test_fused_screen_mixed_cost_kinds():
                                 now, 3600.0, inst_ckpt=jnp.asarray(ckpt),
                                 inst_res=jnp.asarray(a["inst_res"])))
     assert not np.array_equal(a["inst_cost"], per)
+
+
+CHURN_MULT = (1.0, 1.0, 0.5, 0.25, 2.0)  # 5th entry = churn multiplier
+
+
+def _rand_churn(rng, n):
+    """Per-host ẑ column: a few distinct zone rates gathered onto hosts —
+    the exact shape ``churn_of`` produces from the accumulators."""
+    zone_rates = rng.integers(0, 8, (4,)).astype(np.float32) / 8.0
+    return zone_rates[rng.integers(0, 4, (n,))]
+
+
+@pytest.mark.parametrize("n", [37, 130, 300])
+def test_fused_screen_churn_weigher(n):
+    """Nonzero churn multiplier (5-tuple): the kernel's churn-penalty term
+    and its min/max normalization folds must match the jnp screen bitwise,
+    host counts straddling the tile."""
+    rng = np.random.default_rng(7000 + n)
+    a = _rand_arrays(rng, n, 8)
+    req = rng.integers(2, 14, (3,)).astype(np.float32)
+    churn = _rand_churn(rng, n)
+    m_keep = min(65, n)
+    for pre in (False, True):
+        _assert_screen_parity(
+            a, req, pre, -1, CHURN_MULT, True, m_keep, churn=churn
+        )
+
+
+def test_fused_screen_churn_threshold_gate():
+    """The hot-zone hard filter: with a threshold the kernel must gate
+    preemptible requests off high-ẑ hosts exactly like the jnp screen (and
+    leave normal requests ungated) — including the degenerate all-hot fleet
+    where every preemptible candidate dies."""
+    rng = np.random.default_rng(77)
+    n = 200
+    a = _rand_arrays(rng, n, 6)
+    req = rng.integers(2, 10, (3,)).astype(np.float32)
+    churn = _rand_churn(rng, n)
+    for pre in (False, True):
+        for thr in (0.5, 0.0):
+            _assert_screen_parity(
+                a, req, pre, 1, CHURN_MULT, True, 33,
+                churn=churn, churn_threshold=thr,
+            )
+    # threshold without a churn weigher term (multiplier 0): gate-only mode
+    _assert_screen_parity(
+        a, req, True, -1, (1.0, 1.0, 0.0, 0.0, 0.0), True, 33,
+        churn=churn, churn_threshold=0.25,
+    )
+
+
+def test_split_phase_kernels_match_fused_churn():
+    """The sharded split (consts barrier) fed a churn column must reproduce
+    the 2-phase fused churn screen bit-for-bit."""
+    from repro.kernels.sched_screen import sched_screen_consts, sched_screen_topm
+
+    rng = np.random.default_rng(42)
+    n = 150
+    a = _rand_arrays(rng, n, 6)
+    req = rng.integers(2, 10, (3,)).astype(np.float32)
+    churn = jnp.asarray(_rand_churn(rng, n))
+    args = (
+        a["free_f"], a["free_n"], a["schedulable"], a["domain"], a["slow"],
+        a["inst_res"], a["inst_cost"], a["inst_valid"],
+        req, jnp.asarray(True), jnp.asarray(-1, jnp.int32),
+    )
+    kw = dict(
+        weigher_multipliers=CHURN_MULT, require_free_slot=True,
+        churn=churn, churn_threshold=0.5, interpret=True,
+    )
+    ref_s, ref_i, ref_c = sched_screen(*args, m_keep=33, **kw)
+    consts = sched_screen_consts(*args, **kw)
+    np.testing.assert_array_equal(np.asarray(consts), np.asarray(ref_c))
+    s, i = sched_screen_topm(*args, consts=consts, m_keep=33, **kw)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
 
 
 @pytest.mark.parametrize("n", [37, 200])

@@ -393,6 +393,52 @@ def test_sharded_mixed_cost_parity(fused):
 
 
 @multi_device
+@pytest.mark.parametrize("fused", [False, True])
+def test_sharded_churn_parity(fused):
+    """Failure-domain plane, sharded: zone accumulators are replicated
+    across the mesh while ``host_zone`` shards host-major, and churn-aware
+    decisions (weigher term + hot-zone threshold) must stay bit-identical
+    to the unsharded screen — including the per-shard churn-normalization
+    folds crossing the pmin/pmax merge."""
+    rng = np.random.default_rng(29)
+    hosts = _random_fleet(rng, 39)  # 39 does not divide the mesh
+    for i, h in enumerate(hosts):
+        h.zone = f"z{i % 3}"
+    mesh = fleet_mesh()
+    # seeded accumulator history: z0 cold, z1 warm, z2 hot (ẑ = 0.5)
+    state, _ = build_fleet_state(
+        hosts, k_slots=8,
+        zone_term=np.asarray([0.0, 8.0, 32.0], np.float32),
+        zone_up=np.asarray([64.0, 64.0, 64.0], np.float32),
+    )
+    padded = pad_fleet_state(state, padded_hosts(39, mesh.size, m_keep=9))
+    sharded = shard_fleet_state(padded, mesh)
+    np.testing.assert_array_equal(  # zone plane survives pad + shard
+        np.asarray(sharded.zone_term), np.asarray(state.zone_term)
+    )
+    policy = SchedulerPolicy(
+        shortlist=8, churn_multiplier=2.0, churn_threshold=0.25
+    )
+    for step, pre in ((0, False), (1, True), (2, False)):
+        req = np.asarray(SIZES[step % 3].vec, np.float32)
+        _, ref = schedule_step(
+            padded, req, pre, np.int32(-1), NOW + 60.0 * step, 1.0,
+            policy=policy, donate=False,
+        )
+        _, got = schedule_step(
+            sharded, req, pre, np.int32(-1), NOW + 60.0 * step, 1.0,
+            policy=dataclasses.replace(
+                policy, mesh=mesh, fused_screen=fused or None
+            ),
+            donate=False,
+        )
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b), err_msg=f"step {step}"
+            )
+
+
+@multi_device
 def test_sharded_simulator_smoke():
     """SoASimulator(mesh=...) runs the whole event loop on the sharded state
     and produces identical metrics to the unsharded simulator (same seed ⇒

@@ -128,6 +128,53 @@ def test_shortlist_parity_on_fleet_state_step(cost_fn):
         )
 
 
+def _decide_churn(state, req_vec, preemptible, shortlist,
+                  churn_multiplier=2.0, churn_threshold=None):
+    h, m, ok = schedule_decision(
+        state,
+        jnp.asarray(req_vec, jnp.float32),
+        jnp.asarray(preemptible),
+        jnp.asarray(-1, jnp.int32),
+        policy=SchedulerPolicy(
+            shortlist=shortlist,
+            churn_multiplier=churn_multiplier,
+            churn_threshold=churn_threshold,
+        ),
+    )
+    return int(h), int(m), bool(ok)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_shortlist_matches_full_enumeration_churn_aware(seed):
+    """Churn-aware decisions (nonzero churn multiplier, with and without the
+    hot-zone threshold) prune identically: the churn term shifts which hosts
+    win, never whether the shortlist reproduces the full enumeration."""
+    rng = np.random.default_rng(4000 + seed)
+    hosts = _random_fleet(rng, n_hosts=int(rng.integers(18, 36)))
+    for i, h in enumerate(hosts):
+        h.zone = f"z{i % 3}"
+    # the rebuild oracle's frozen ẑ column (dyadic rates stay f32-exact)
+    zone_rates = {"z0": 0.0, "z1": 0.25, "z2": 0.75}
+    state, _ = build_soa_state(
+        hosts, NOW, PeriodCost(), k_slots=8, zone_rates=zone_rates
+    )
+    assert state.churn is not None
+    for preemptible in (False, True):
+        for thr in (None, 0.5):
+            full = _decide_churn(
+                state, SIZES[1].vec, preemptible, shortlist=0,
+                churn_threshold=thr,
+            )
+            for m in (1, 4, 16):
+                got = _decide_churn(
+                    state, SIZES[1].vec, preemptible, shortlist=m,
+                    churn_threshold=thr,
+                )
+                assert got == full, (
+                    f"seed={seed} pre={preemptible} thr={thr} M={m}"
+                )
+
+
 def test_fallback_on_loose_bound():
     """Deterministic fallback exercise: the cost lower bound (m* cheapest
     slots) undershoots the true optimum on host A (its cheap slots conflict

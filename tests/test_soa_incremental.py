@@ -41,13 +41,19 @@ def _assert_states_equal(state, oracle, msg=""):
     """Strict equality; slot payloads compared only where a slot is valid."""
     valid = np.asarray(state.inst_valid)
     np.testing.assert_array_equal(valid, np.asarray(oracle.inst_valid), err_msg=msg)
-    for field in ("free_f", "free_n", "schedulable", "domain", "slow"):
+    for field in (
+        "free_f", "free_n", "schedulable", "domain", "slow",
+        "host_zone", "zone_term", "zone_up",
+    ):
         np.testing.assert_array_equal(
             np.asarray(getattr(state, field)),
             np.asarray(getattr(oracle, field)),
             err_msg=f"{msg}: {field}",
         )
-    for field in ("inst_start", "inst_price", "inst_ckpt", "inst_cost_kind"):
+    for field in (
+        "inst_start", "inst_price", "inst_ckpt", "inst_cost_kind",
+        "inst_period",
+    ):
         np.testing.assert_array_equal(
             np.asarray(getattr(state, field)) * valid,
             np.asarray(getattr(oracle, field)) * valid,
@@ -120,11 +126,12 @@ def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
             oracle, _ = build_fleet_state(
                 py.hosts, k_slots=K, domain_ids=fleet.domain_ids,
                 slot_assignment=fleet.slot_assignment(),
+                zone_term=fleet.state.zone_term, zone_up=fleet.state.zone_up,
             )
-            res, pre, dom, kind = fleet._req_arrays(req)
+            res, pre, dom, kind, period = fleet._req_arrays(req)
             _, (oh, oslot, ook, okill, _fb, _mg) = schedule_step(
                 oracle, res, pre, dom, now, price,
-                policy=fleet.policy, req_cost_kind=kind,
+                policy=fleet.policy, req_cost_kind=kind, req_period=period,
             )
             # victims the oracle decision implies, read from the slot map
             # BEFORE the fast path mutates it
@@ -174,6 +181,7 @@ def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
         oracle, _ = build_fleet_state(
             py.hosts, k_slots=K, domain_ids=fleet.domain_ids,
             slot_assignment=fleet.slot_assignment(),
+            zone_term=fleet.state.zone_term, zone_up=fleet.state.zone_up,
         )
         _assert_states_equal(fleet.state, oracle, msg=f"event {step}")
 
@@ -336,6 +344,7 @@ def test_apply_placement_matches_rebuild():
     oracle, _ = build_fleet_state(
         hosts, k_slots=4, domain_ids=fleet.domain_ids,
         slot_assignment=fleet.slot_assignment(),
+        zone_term=state.zone_term, zone_up=state.zone_up,
     )
     _assert_states_equal(state, oracle, msg="apply_placement")
 
@@ -360,6 +369,7 @@ def test_host_failure_frees_everything_and_heals():
     oracle, _ = build_fleet_state(
         py.hosts, k_slots=K, domain_ids=fleet.domain_ids,
         slot_assignment=fleet.slot_assignment(),
+        zone_term=fleet.state.zone_term, zone_up=fleet.state.zone_up,
     )
     _assert_states_equal(fleet.state, oracle, msg="after failure")
     free = np.asarray(fleet.state.free_f)[1]
@@ -370,5 +380,6 @@ def test_host_failure_frees_everything_and_heals():
     oracle, _ = build_fleet_state(
         py.hosts, k_slots=K, domain_ids=fleet.domain_ids,
         slot_assignment=fleet.slot_assignment(),
+        zone_term=fleet.state.zone_term, zone_up=fleet.state.zone_up,
     )
     _assert_states_equal(fleet.state, oracle, msg="after heal")
