@@ -368,7 +368,7 @@ def _bench_storm() -> None:
     """Failure-domain study: does learning ẑ online actually save instances?
 
     One zone of three is hot — a Markov churn regime fires ``kill_frac=0.5``
-    reclaim waves while "on", seeded identically for both runs.  The blind
+    reclaim waves while "on", seeded identically for every run.  The blind
     policy spreads preemptible work uniformly (ties → lowest index), so a
     third of the fleet's instances sit in the blast radius at every storm;
     the aware policy reads the learned per-zone ẑ after the first wave and
@@ -376,7 +376,16 @@ def _bench_storm() -> None:
     refuses the hot zone outright (threshold — learned rates are per-second,
     so the gate sits at 1e-4, well under any stormed zone's ẑ and above the
     exact 0.0 of a calm one).  The arrival rate keeps steady-state occupancy
-    under the calm zones' capacity, so avoidance costs no placements."""
+    under the calm zones' capacity, so avoidance costs no placements.
+
+    The evacuated policy (PR 8) adds the relocation plane on top of aware:
+    steering only protects placements made AFTER ẑ is learned, while the
+    instances already sitting in the hot zone keep eating storms — the
+    relocation passes move those out too, so the only kills left are the
+    first-storm ones no online learner can see coming.  Emits the
+    ``screen_storm_{blind,aware}`` rows (the PR 7 schema, unchanged) plus
+    ``screen_relocate_{blind,aware,evacuated}`` rows with the relocation
+    ledger in ``derived``."""
     n = 12 if TINY else 48
     duration = 1500.0 if TINY else 7200.0
     # steady state ≈ rate × mean lifetime, kept under the CALM zones'
@@ -410,20 +419,42 @@ def _bench_storm() -> None:
     policies = (
         ("blind", SchedulerPolicy()),
         ("aware", SchedulerPolicy(churn_multiplier=2.0, churn_threshold=1e-4)),
+        (
+            "evacuated",
+            SchedulerPolicy(
+                churn_multiplier=2.0, churn_threshold=1e-4,
+                relocate_threshold=1e-4, relocate_every_s=duration / 100.0,
+                relocate_budget=8,
+            ),
+        ),
     )
     for tag, policy in policies:
         sim, m = run_one(policy)
         s = m.summary()
         lat = np.asarray(m.sched_latency_s) * 1e6
+        if tag != "evacuated":  # the PR 7 rows keep their schema
+            emit(
+                f"screen_storm_{tag}_n{n}",
+                float(lat.mean()),
+                (
+                    f"per_decision;kills={m.storm_kills};storms={m.storms};"
+                    f"util={s['mean_utilization']:.3f};"
+                    f"placed={m.placed_preemptible};"
+                    f"failed={m.failures_preemptible};"
+                    f"fleet_churn={sim.fleet.fleet_churn_rate():.2e}"
+                ),
+                p50_us=float(np.percentile(lat, 50)) if lat.size else 0.0,
+            )
         emit(
-            f"screen_storm_{tag}_n{n}",
+            f"screen_relocate_{tag}_n{n}",
             float(lat.mean()),
             (
                 f"per_decision;kills={m.storm_kills};storms={m.storms};"
+                f"relocs={m.relocations};"
+                f"reloc_failed={m.relocation_failed};"
                 f"util={s['mean_utilization']:.3f};"
                 f"placed={m.placed_preemptible};"
-                f"failed={m.failures_preemptible};"
-                f"fleet_churn={sim.fleet.fleet_churn_rate():.2e}"
+                f"failed={m.failures_preemptible + m.failures_normal}"
             ),
             p50_us=float(np.percentile(lat, 50)) if lat.size else 0.0,
         )
@@ -433,6 +464,30 @@ def _bench_storm() -> None:
         f"(aware={results['aware'].storm_kills}, "
         f"blind={results['blind'].storm_kills})"
     )
+    assert (
+        results["evacuated"].storm_kills <= results["aware"].storm_kills
+    ), (
+        "evacuation must never lose MORE instances than staying put "
+        f"(evacuated={results['evacuated'].storm_kills}, "
+        f"aware={results['aware'].storm_kills})"
+    )
+    assert results["evacuated"].failures_preemptible == 0, (
+        "evacuation must not steal capacity from user placements "
+        f"(failed={results['evacuated'].failures_preemptible})"
+    )
+    if not TINY:
+        # At full scale the aware run strands first-storm survivors in the
+        # hot zone; the relocation plane must move them out and beat aware
+        # strictly.  (The tiny fleet's steering alone keeps the hot zone
+        # empty, so there is legitimately nothing to relocate.)
+        assert results["evacuated"].relocations > 0, "no relocations ran"
+        assert (
+            results["evacuated"].storm_kills < results["aware"].storm_kills
+        ), (
+            "evacuation must save instances steering alone cannot "
+            f"(evacuated={results['evacuated'].storm_kills}, "
+            f"aware={results['aware'].storm_kills})"
+        )
 
 
 def _fused(state, req_res, m_keep, interpret):

@@ -57,7 +57,7 @@ import numpy as np
 
 from .jax_scheduler import SoAFleetState, _step_core
 from .policy import COST_KIND_IDS, SchedulerPolicy
-from .screen_math import CHURN_EPS
+from .screen_math import churn_stats
 from .types import Request
 
 #: Padding sentinel for untaken drain rows: a request no host can fit, so
@@ -91,6 +91,7 @@ class AdmissionQueueState:
     domain: jax.Array       # (Q,)   i32; -1 = any
     cost_kind: jax.Array    # (Q,)   i32 kind id; -1 = policy default
     period: jax.Array       # (Q,)   f32 contract period; -1 = policy default
+    exclude_zone: jax.Array  # (Q,)  i32 hard-excluded zone id; -1 = none
     klass: jax.Array        # (Q,)   i32 priority class; 0 = highest
     price: jax.Array        # (Q,)   f32
     enq_t: jax.Array        # (Q,)   f32 enqueue (arrival) time
@@ -118,6 +119,7 @@ def queue_init(capacity: int, n_dims: int) -> AdmissionQueueState:
         domain=jnp.full((q,), -1, jnp.int32),
         cost_kind=jnp.full((q,), -1, jnp.int32),
         period=jnp.full((q,), -1.0, jnp.float32),
+        exclude_zone=jnp.full((q,), -1, jnp.int32),
         klass=jnp.zeros((q,), jnp.int32),
         price=jnp.ones((q,), jnp.float32),
         enq_t=jnp.zeros((q,), jnp.float32),
@@ -135,6 +137,7 @@ def queue_push(
     domain: jax.Array,       # () i32
     cost_kind: jax.Array,    # () i32
     period: jax.Array,       # () f32; -1 = policy default
+    exclude_zone: jax.Array,  # () i32; -1 = none
     klass: jax.Array,        # () i32
     enq_t: jax.Array,        # () f32
     price: jax.Array,        # () f32
@@ -157,6 +160,9 @@ def queue_push(
         domain=jnp.where(sel, jnp.asarray(domain, jnp.int32), q.domain),
         cost_kind=jnp.where(sel, jnp.asarray(cost_kind, jnp.int32), q.cost_kind),
         period=jnp.where(sel, jnp.asarray(period, jnp.float32), q.period),
+        exclude_zone=jnp.where(
+            sel, jnp.asarray(exclude_zone, jnp.int32), q.exclude_zone
+        ),
         klass=jnp.where(sel, jnp.asarray(klass, jnp.int32), q.klass),
         price=jnp.where(sel, jnp.asarray(price, jnp.float32), q.price),
         enq_t=jnp.where(sel, jnp.asarray(enq_t, jnp.float32), q.enq_t),
@@ -243,6 +249,7 @@ def _drain_entry(
     new_dom,     # (A,) i32
     new_kind,    # (A,) i32
     new_period,  # (A,) f32; -1 = policy default
+    new_excl,    # (A,) i32 excluded zone id; -1 = none
     new_cls,     # (A,) i32
     new_t,       # (A,) f32 arrival times
     new_price,   # (A,) f32
@@ -273,8 +280,8 @@ def _drain_entry(
 
     q, (new_slot, pushed) = jax.lax.scan(
         push_body, q,
-        (new_res, new_pre, new_dom, new_kind, new_period, new_cls, new_t,
-         new_price, new_live),
+        (new_res, new_pre, new_dom, new_kind, new_period, new_excl, new_cls,
+         new_t, new_price, new_live),
     )
 
     idx, take = queue_select(
@@ -286,26 +293,33 @@ def _drain_entry(
     b_dom = jnp.where(take, q.domain[idx], -1)
     b_kind = jnp.where(take, q.cost_kind[idx], -1)
     b_period = jnp.where(take, q.period[idx], -1.0)
+    b_excl = jnp.where(take, q.exclude_zone[idx], -1)
     b_price = jnp.where(take, q.price[idx], 1.0)
     b_now = jnp.full((b,), now, jnp.float32)
 
     if policy.storm_threshold is not None:
-        churn = jnp.sum(fleet_state.zone_term) / jnp.maximum(
-            jnp.sum(fleet_state.zone_up), jnp.float32(CHURN_EPS)
-        )
+        # fleet-wide rate = last entry of the shared fused churn reduction
+        churn = churn_stats(fleet_state.zone_term, fleet_state.zone_up)[-1]
         storm = churn > jnp.float32(policy.storm_threshold)
         degraded = b_pre & storm
         b_pre = b_pre & ~storm
     else:
         degraded = jnp.zeros_like(b_pre)
 
+    # The exclusion operand rides the scan only when the relocation plane is
+    # on, so relocation-off policies compile the exact pre-relocation drain.
+    excl_xs = b_excl if policy.relocation_on else jnp.full((b,), -1, jnp.int32)
+
     def body(st, xs):
-        res, pre, dom, t, price, kind, period = xs
-        return _step_core(st, res, pre, dom, t, price, kind, period, policy)
+        res, pre, dom, t, price, kind, period, excl = xs
+        return _step_core(
+            st, res, pre, dom, t, price, kind, period, policy,
+            req_exclude=excl if policy.relocation_on else None,
+        )
 
     fleet_state, (host_idx, slot, ok, kill, fell_back, margin) = jax.lax.scan(
         body, fleet_state,
-        (b_res, b_pre, b_dom, b_now, b_price, b_kind, b_period),
+        (b_res, b_pre, b_dom, b_now, b_price, b_kind, b_period, excl_xs),
     )
     placed = ok & take
     wait = jnp.where(placed, now - q.enq_t[idx], 0.0)
@@ -440,6 +454,10 @@ class AdmissionFrontEnd:
         #: queue row → waiting record (mirrors ``AdmissionQueueState.valid``)
         self.slots: List[Optional[_Waiting]] = [None] * policy.queue_capacity
         self._pending: List[_Waiting] = []
+        #: relocation re-placements in flight: request id → (victim id,
+        #: source zone).  The owning fleet settles each entry at the drain
+        #: that decides it (make-before-break; see ``SoAFleet.relocate``).
+        self._reloc: Dict[str, Tuple[str, str]] = {}
         self._inflight = None
         #: results absorbed as a side effect (a blocking drain flushing a
         #: previous non-blocking one) awaiting ``take_results``
@@ -469,6 +487,19 @@ class AdmissionFrontEnd:
             )
         )
         self.stats.arrivals += 1
+
+    def submit_relocation(
+        self, req: Request, victim_id: str, zone: str, now: float,
+        price: float = 1.0,
+    ) -> None:
+        """Queue one relocation re-placement.  It rides the queue as a
+        class-0 entry (drains with interactive traffic) but stays
+        preemptible, so it can never displace user placements.  The victim
+        keeps running until the drain that places this entry settles it
+        (``SoAFleet._settle_relocation_placed``); a rejected entry leaves
+        the victim untouched and backs the zone off."""
+        self.submit(req, now, price=price)
+        self._reloc[req.id] = (victim_id, zone)
 
     @property
     def pending(self) -> int:
@@ -519,20 +550,23 @@ class AdmissionFrontEnd:
         dom = np.full((a,), -1, np.int32)
         kind = np.full((a,), -1, np.int32)
         per = np.full((a,), -1.0, np.float32)
+        exc = np.full((a,), -1, np.int32)
         cls = np.zeros((a,), np.int32)
         enq = np.zeros((a,), np.float32)
         price = np.ones((a,), np.float32)
         live = np.zeros((a,), bool)
         for i, w in enumerate(pend):
-            r, p, dm, kd, pd = self.fleet._req_arrays(w.request)
-            res[i], pre[i], dom[i], kind[i], per[i] = r, p, dm, kd, pd
+            r, p, dm, kd, pd, ex = self.fleet._req_arrays(w.request)
+            res[i], pre[i], dom[i], kind[i], per[i], exc[i] = (
+                r, p, dm, kd, pd, ex
+            )
             cls[i], enq[i], price[i], live[i] = w.klass, w.enq_t, w.price, True
 
         policy = self.fleet._flush_policy()
         fn = _drain_donated if policy.donate else _drain_kept
         self.fleet.state, self.qstate, aux = fn(
             self.fleet.state, self.qstate,
-            res, pre, dom, kind, per, cls, enq, price, live,
+            res, pre, dom, kind, per, exc, cls, enq, price, live,
             jnp.asarray(now, jnp.float32), policy=policy,
         )
         self._inflight = (pend, float(now), aux)
@@ -559,6 +593,11 @@ class AdmissionFrontEnd:
             else:
                 self.stats.rejected_overflow += 1
                 rejected.append(w.request)
+                reloc = self._reloc.pop(w.request.id, None)
+                if reloc is not None:  # overflow: victim keeps running
+                    self.fleet._settle_relocation_rejected(
+                        reloc[0], reloc[1], now
+                    )
         # 2. attempted rows, in service order
         outcomes, retried, attempts = [], [], []
         for j in range(len(idx)):
@@ -584,10 +623,21 @@ class AdmissionFrontEnd:
                 self.stats.admitted += 1
                 self.stats.wait_s.append(float(wait[j]))
                 self.stats.wall_wait_s.append(wall_now - w.submit_wall)
+                reloc = self._reloc.pop(req.id, None)
+                if reloc is not None:  # make-before-break: replacement is
+                    # live — NOW the victim may die.
+                    self.fleet._settle_relocation_placed(
+                        reloc[0], reloc[1], out, now
+                    )
             elif dropped[j]:
                 self.slots[row] = None
                 self.stats.rejected_retry += 1
                 rejected.append(w.request)
+                reloc = self._reloc.pop(req.id, None)
+                if reloc is not None:  # victim keeps running; zone backs off
+                    self.fleet._settle_relocation_rejected(
+                        reloc[0], reloc[1], now
+                    )
             else:
                 self.stats.retries += 1
                 retried.append(w.request)

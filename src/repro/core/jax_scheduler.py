@@ -148,6 +148,9 @@ class SoAHostState:
     #: the persistent path derives it from the zone accumulators per step,
     #: the rebuild oracle freezes it at build via ``zone_rates``).
     churn: Optional[jax.Array] = None  # (N,) float32
+    #: optional per-host zone id (None = zone-blind); consumed by the
+    #: relocation plane's per-request zone-exclusion filter.
+    host_zone: Optional[jax.Array] = None  # (N,) int32
 
     @property
     def n_hosts(self) -> int:
@@ -203,6 +206,7 @@ def build_soa_state(
     k_slots: int = 8,
     domain_ids: Optional[Dict[str, int]] = None,
     zone_rates: Optional[Dict[str, float]] = None,
+    zone_ids: Optional[Dict[str, int]] = None,
 ) -> Tuple[SoAHostState, List[List[Instance]]]:
     """Convert python ``Host`` objects to device arrays.
 
@@ -212,7 +216,9 @@ def build_soa_state(
     ``zone_rates`` optionally freezes a per-zone churn rate ẑ (zone name →
     rate; missing zones read 0.0) into the state's ``churn`` column — the
     rebuild oracle's counterpart of the persistent path's online-learned
-    zone accumulators.
+    zone accumulators.  ``zone_ids`` (zone name → id; missing zones map to
+    -2, which no exclusion operand ever matches) builds the ``host_zone``
+    column the relocation plane's zone-exclusion filter reads.
     """
     cost_fn = cost_fn or PeriodCost()
     n = len(hosts)
@@ -234,6 +240,11 @@ def build_soa_state(
         churn = jnp.asarray(
             [float(zone_rates.get(h.zone, 0.0)) for h in hosts], jnp.float32
         )
+    host_zone = None
+    if zone_ids is not None:
+        host_zone = jnp.asarray(
+            [int(zone_ids.get(h.zone, -2)) for h in hosts], jnp.int32
+        )
     state = SoAHostState(
         free_f=jnp.asarray(free_f),
         free_n=jnp.asarray(free_n),
@@ -244,6 +255,7 @@ def build_soa_state(
         inst_cost=jnp.asarray(inst_cost),
         inst_valid=jnp.asarray(inst_valid),
         churn=churn,
+        host_zone=host_zone,
     )
     return state, slots
 
@@ -355,6 +367,8 @@ def _stage1_rows(
     require_free_slot: bool,
     churn: Optional[jax.Array] = None,
     churn_threshold: Optional[float] = None,
+    host_zone: Optional[jax.Array] = None,
+    exclude_zone: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, Tuple[jax.Array, ...]]:
     """Stage-1 screen assembly on row-major host arrays: the dual-view fit
     mask (the paper's trick), the shared ``screen_math`` bounds, and the raw
@@ -371,6 +385,11 @@ def _stage1_rows(
     steers preemptible placements off hot zones entirely (the graceful-
     degradation hard filter — normal requests are unaffected).
 
+    ``host_zone`` + ``exclude_zone`` (the relocation plane's per-request
+    operand, -1 = none) hard-filter an entire failure zone out of the
+    screen — pure integer/boolean math, so the gate is trivially identical
+    on every backend (the same shape of filter as ``req_domain``).
+
     Returns ``(valid, cost_lb, cost_ub, raw)`` (``raw`` grows a 4th entry
     when churn-aware).
     """
@@ -378,6 +397,10 @@ def _stage1_rows(
     fits = jnp.all(view >= req_res[None, :] - EPS, axis=-1)
     fits &= schedulable
     fits &= (req_domain < 0) | (domain == req_domain)
+    if exclude_zone is not None and host_zone is not None:
+        # Relocation re-placements flee their source zone: no host of that
+        # zone may win, regardless of how calm its churn currently reads.
+        fits &= (exclude_zone < 0) | (host_zone != exclude_zone)
     if churn_threshold is not None and churn is not None:
         # Hot-zone steering: preemptible work avoids zones whose learned
         # churn rate crossed the policy threshold (normal work still lands —
@@ -421,6 +444,8 @@ def _sharded_screen(
     use_fused: bool = False,
     churn: Optional[jax.Array] = None,
     churn_threshold: Optional[float] = None,
+    host_zone: Optional[jax.Array] = None,
+    exclude_zone: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Stage-1 screen per host-major shard under ``jax.shard_map``.
 
@@ -442,7 +467,10 @@ def _sharded_screen(
     and a static ``churn_threshold`` thread the failure-domain terms through
     the per-shard screen — the merged churn-normalization scalars come out
     of the same pmin/pmax folds, so churn-aware sharded decisions stay
-    bit-exact with the unsharded screen.
+    bit-exact with the unsharded screen.  ``host_zone`` (sharded host-major)
+    + ``exclude_zone`` (replicated scalar) thread the relocation plane's
+    zone-exclusion filter the same way — a pure boolean row gate, so
+    sharding cannot perturb it.
 
     ``use_fused`` runs the shard-local screen through the fused Pallas
     kernel instead of the jnp assembly, split at the constants barrier
@@ -465,7 +493,14 @@ def _sharded_screen(
 
     def shard_fn(free_f, free_n, schedulable, domain, slow,
                  inst_res, inst_cost, inst_valid,
-                 req_res, req_preemptible, req_domain, churn=None):
+                 req_res, req_preemptible, req_domain, *extras):
+        # The optional failure-domain operands arrive positionally in a
+        # fixed order (churn row, zone row, exclusion scalar) — decode by
+        # which ones the caller actually supplied.
+        extra = list(extras)
+        churn_l = extra.pop(0) if churn is not None else None
+        zone_l = extra.pop(0) if host_zone is not None else None
+        excl_l = extra.pop(0) if exclude_zone is not None else None
         t = free_f.shape[0]  # hosts per shard
         offset = (jax.lax.axis_index(axis) * t).astype(jnp.int32)
         if use_fused:
@@ -483,15 +518,18 @@ def _sharded_screen(
                 *kern_args,
                 weigher_multipliers=mult,
                 require_free_slot=require_free_slot,
-                churn=churn,
+                churn=churn_l,
                 churn_threshold=churn_threshold,
+                host_zone=zone_l,
+                exclude_zone=excl_l,
             ))
         else:
             valid, cost_lb, cost_ub, raw = _stage1_rows(
                 free_f, free_n, schedulable, domain, slow,
                 inst_res, inst_cost, inst_valid,
                 req_res, req_preemptible, req_domain, require_free_slot,
-                churn=churn, churn_threshold=churn_threshold,
+                churn=churn_l, churn_threshold=churn_threshold,
+                host_zone=zone_l, exclude_zone=excl_l,
             )
             local = consts_of(mult, valid, cost_lb, cost_ub, *raw)
         consts = ScreenConsts(
@@ -512,8 +550,10 @@ def _sharded_screen(
                 weigher_multipliers=mult,
                 require_free_slot=require_free_slot,
                 m_keep=m_cand + 1,
-                churn=churn,
+                churn=churn_l,
                 churn_threshold=churn_threshold,
+                host_zone=zone_l,
+                exclude_zone=excl_l,
             )
             scores = s_all
             idxs = i_all.astype(jnp.int32) + offset
@@ -547,6 +587,13 @@ def _sharded_screen(
         # The churn column shards host-major like every other per-host row.
         operands += (churn,)
         in_specs += (row,)
+    if host_zone is not None:
+        operands += (host_zone,)
+        in_specs += (row,)
+    if exclude_zone is not None:
+        # The per-request exclusion id is a replicated scalar (like req_*).
+        operands += (exclude_zone,)
+        in_specs += (rep,)
     return shard_map(
         shard_fn,
         mesh=mesh,
@@ -581,6 +628,8 @@ def _decision_core(
     policy: SchedulerPolicy,
     require_free_slot: bool,
     churn: Optional[jax.Array] = None,
+    host_zone: Optional[jax.Array] = None,
+    exclude_zone: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """The two-stage decision pipeline on raw SoA arrays (shared by the
     rebuild path, the persistent fast path, and the batched ``lax.scan``
@@ -640,6 +689,17 @@ def _decision_core(
     churn_on = churn is not None and policy.churn_aware
     if not churn_on:
         churn = None
+    # Relocation plane: the zone-exclusion operand rides only when the
+    # caller supplied the zone column AND the policy turns the plane on —
+    # relocation-off policies compile the exact pre-relocation program.
+    zone_on = (
+        host_zone is not None
+        and exclude_zone is not None
+        and policy.relocation_on
+    )
+    if not zone_on:
+        host_zone = None
+        exclude_zone = None
     mult = policy.all_multipliers if churn_on else policy.weigher_multipliers
     thr = policy.churn_threshold if churn_on else None
     m_term = mult[1]
@@ -651,18 +711,20 @@ def _decision_core(
     )
 
     def stage1_of(free_f, free_n, schedulable, domain, slow, inst_res,
-                  inst_cost, inst_valid, churn=None):
+                  inst_cost, inst_valid, churn=None, host_zone=None):
         """Stage-1 screen assembly on row-major arrays (the shared
         ``_stage1_rows`` with this decision's request closed over) — used
         for the full fleet (jnp screen / fallback) and for gathered
         candidate rows (the fused/sharded paths' per-candidate recompute).
         Same shared math as the kernel and the sharded screen, so the
-        outputs agree elementwise."""
+        outputs agree elementwise.  ``exclude_zone`` (a replicated scalar,
+        like the request operands) is closed over."""
         return _stage1_rows(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid,
             req_res, req_preemptible, req_domain, require_free_slot,
             churn=churn, churn_threshold=thr,
+            host_zone=host_zone, exclude_zone=exclude_zone,
         )
 
     def full_decision(_):
@@ -672,7 +734,7 @@ def _decision_core(
         — bit-identical to the ``shortlist=0`` result either way)."""
         valid, cost_lb, cost_ub, raw = stage1_of(
             free_f, free_n, schedulable, domain, slow,
-            inst_res, inst_cost, inst_valid, churn,
+            inst_res, inst_cost, inst_valid, churn, host_zone,
         )
         consts = consts_of(mult, valid, cost_lb, cost_ub, *raw)
         base = _base_of(mult, raw, consts)
@@ -710,6 +772,7 @@ def _decision_core(
             mult, require_free_slot, m_cand,
             use_fused=bool(fused_screen),
             churn=churn, churn_threshold=thr,
+            host_zone=host_zone, exclude_zone=exclude_zone,
         )
         consts = ScreenConsts.unpack(consts_arr)
         cand, u, j_u = merge_shortlists(all_s, all_i, m_cand)
@@ -719,6 +782,7 @@ def _decision_core(
             free_f[cand], free_n[cand], schedulable[cand], domain[cand],
             slow[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
             churn[cand] if churn_on else None,
+            host_zone[cand] if zone_on else None,
         )
         base_c = _base_of(mult, raw_c, consts)
     elif fused_screen:
@@ -737,6 +801,8 @@ def _decision_core(
             m_keep=m_cand + 1,
             churn=churn,
             churn_threshold=thr,
+            host_zone=host_zone,
+            exclude_zone=exclude_zone,
         )
         consts = ScreenConsts.unpack(consts_arr)
         cand = top_i[:m_cand]
@@ -748,12 +814,13 @@ def _decision_core(
             free_f[cand], free_n[cand], schedulable[cand], domain[cand],
             slow[cand], inst_res[cand], inst_cost[cand], inst_valid[cand],
             churn[cand] if churn_on else None,
+            host_zone[cand] if zone_on else None,
         )
         base_c = _base_of(mult, raw_c, consts)
     else:
         valid, cost_lb, cost_ub, raw = stage1_of(
             free_f, free_n, schedulable, domain, slow,
-            inst_res, inst_cost, inst_valid, churn,
+            inst_res, inst_cost, inst_valid, churn, host_zone,
         )
         consts = consts_of(mult, valid, cost_lb, cost_ub, *raw)
         base = _base_of(mult, raw, consts)
@@ -826,6 +893,7 @@ def _decision_entry(
     req_res: jax.Array,
     req_preemptible: jax.Array,
     req_domain: jax.Array,
+    req_exclude_zone: jax.Array,
     *,
     policy: SchedulerPolicy,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -834,11 +902,18 @@ def _decision_entry(
         # Churn-aware policy over a state built without rates: all-zero ẑ
         # (every host equally calm — the weigher term normalizes away).
         churn = jnp.zeros_like(state.slow)
+    host_zone = state.host_zone
+    if host_zone is None and policy.relocation_on:
+        # Relocation-capable policy over a state built without zone ids:
+        # every host in zone 0 — an exclusion id of 0 then excludes the
+        # whole fleet, anything else excludes nothing (and -1 = none).
+        host_zone = jnp.zeros_like(state.domain)
     return _decision_core(
         state.free_f, state.free_n, state.schedulable, state.domain,
         state.slow, state.inst_res, state.inst_cost, state.inst_valid,
         req_res, req_preemptible, req_domain,
         policy, require_free_slot=False, churn=churn,
+        host_zone=host_zone, exclude_zone=req_exclude_zone,
     )[:3]
 
 
@@ -848,6 +923,7 @@ def schedule_decision(
     req_preemptible: jax.Array,  # () bool
     req_domain: jax.Array,       # () int32; -1 = any
     policy: Optional[SchedulerPolicy] = None,
+    req_exclude_zone: jax.Array = -1,  # () int32 zone id; -1 = none
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One scheduling decision.  Returns (host_idx, term_mask_idx, ok).
 
@@ -863,7 +939,8 @@ def schedule_decision(
     """
     policy = ensure_policy(policy, "schedule_decision")
     return _decision_entry(
-        state, req_res, req_preemptible, req_domain, policy=policy
+        state, req_res, req_preemptible, req_domain,
+        jnp.asarray(req_exclude_zone, jnp.int32), policy=policy,
     )
 
 
@@ -1238,7 +1315,7 @@ def _apply_decision(
 def _step_core(
     state: SoAFleetState,
     req_res, req_preemptible, req_domain, now, price, req_cost_kind,
-    req_period, policy: SchedulerPolicy,
+    req_period, policy: SchedulerPolicy, req_exclude=None,
 ):
     inst_cost = fleet_slot_costs(state, now, policy)
     # The learned per-host churn rate ẑ is derived from the zone T/U
@@ -1254,6 +1331,8 @@ def _step_core(
         state.slow, state.inst_res, inst_cost, state.inst_valid,
         req_res, req_preemptible, req_domain,
         policy, require_free_slot=True, churn=churn,
+        host_zone=state.host_zone if req_exclude is not None else None,
+        exclude_zone=req_exclude,
     )
     state, slot, kill = _apply_decision(
         state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price,
@@ -1266,23 +1345,26 @@ _STEP_STATICS = ("policy",)
 
 
 def _step_entry(state, req_res, req_preemptible, req_domain, now, price,
-                req_cost_kind, req_period, *, policy):
+                req_cost_kind, req_period, req_exclude, *, policy):
     return _step_core(
         state, req_res, req_preemptible, req_domain, now, price,
-        req_cost_kind, req_period, policy,
+        req_cost_kind, req_period, policy, req_exclude=req_exclude,
     )
 
 
 def _many_entry(state, req_res, req_preemptible, req_domain, req_now,
-                req_price, req_cost_kind, req_period, *, policy):
+                req_price, req_cost_kind, req_period, req_exclude, *, policy):
     def body(st, xs):
-        res, pre, dom, now, price, kind, period = xs
-        return _step_core(st, res, pre, dom, now, price, kind, period, policy)
+        res, pre, dom, now, price, kind, period, excl = xs
+        return _step_core(
+            st, res, pre, dom, now, price, kind, period, policy,
+            req_exclude=excl,
+        )
 
     return jax.lax.scan(
         body, state,
         (req_res, req_preemptible, req_domain, req_now, req_price,
-         req_cost_kind, req_period),
+         req_cost_kind, req_period, req_exclude),
     )
 
 
@@ -1307,6 +1389,7 @@ def schedule_step(
     req_cost_kind: jax.Array = -1,  # () int32 kind id; -1 = policy default
     donate: Optional[bool] = None,
     req_period: jax.Array = -1.0,  # () float period (s); -1 = policy default
+    req_exclude_zone: jax.Array = -1,  # () int32 zone id; -1 = none
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Fused decide-and-apply on the persistent state (one dispatch/event).
 
@@ -1324,6 +1407,10 @@ def schedule_step(
     per-request half of the mixed-payment model.  ``req_period`` likewise
     records the request's contract billing period (seconds; -1 = the
     policy's shared ``period``) into the ``inst_period`` column.
+    ``req_exclude_zone`` (zone id; -1 = none) hard-filters one failure zone
+    out of the decision — the relocation plane's operand; it is read only
+    when ``policy.relocation_on`` (off-policies compile the exact
+    pre-relocation program).
 
     With ``donate`` unset the policy's ``donate`` field applies (default
     True): the input state's buffers are reused for the output — the caller
@@ -1340,7 +1427,8 @@ def schedule_step(
         state, req_res, req_preemptible, req_domain,
         jnp.asarray(now, jnp.float32), jnp.asarray(price, jnp.float32),
         jnp.asarray(req_cost_kind, jnp.int32),
-        jnp.asarray(req_period, jnp.float32), policy=policy,
+        jnp.asarray(req_period, jnp.float32),
+        jnp.asarray(req_exclude_zone, jnp.int32), policy=policy,
     )
 
 
@@ -1355,6 +1443,7 @@ def schedule_many(
     req_cost_kind: Optional[jax.Array] = None,  # (B,) int32; None = defaults
     donate: Optional[bool] = None,
     req_period: Optional[jax.Array] = None,  # (B,) float; None = defaults
+    req_exclude_zone: Optional[jax.Array] = None,  # (B,) int32; None = none
 ) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
     """Run a request batch through ``lax.scan`` carrying the fleet state, so
     each decision sees every earlier placement/termination in the batch —
@@ -1376,12 +1465,15 @@ def schedule_many(
         req_cost_kind = jnp.full(jnp.shape(req_now), -1, jnp.int32)
     if req_period is None:
         req_period = jnp.full(jnp.shape(req_now), -1.0, jnp.float32)
+    if req_exclude_zone is None:
+        req_exclude_zone = jnp.full(jnp.shape(req_now), -1, jnp.int32)
     fn = _many_donated if donate else _many_kept
     return fn(
         state, req_res, req_preemptible, req_domain,
         jnp.asarray(req_now, jnp.float32), jnp.asarray(req_price, jnp.float32),
         jnp.asarray(req_cost_kind, jnp.int32),
-        jnp.asarray(req_period, jnp.float32), policy=policy,
+        jnp.asarray(req_period, jnp.float32),
+        jnp.asarray(req_exclude_zone, jnp.int32), policy=policy,
     )
 
 
@@ -1626,19 +1718,30 @@ class JaxPreemptibleScheduler:
     def schedule(
         self, req: Request, hosts: Sequence[Host], now: float
     ) -> ScheduleResult:
+        # Zone ids by insertion order of Host.zone — the same derivation
+        # rule SoAFleet/build_fleet_state use, so an exclusion id resolved
+        # here names the same zone the persistent path excludes.
+        zone_ids: Dict[str, int] = {}
+        for h in hosts:
+            zone_ids.setdefault(h.zone, len(zone_ids))
         state, slots = build_soa_state(
             hosts, now, cost_fn=self.cost_fn, k_slots=self.k_slots,
-            zone_rates=self.zone_rates,
+            zone_rates=self.zone_rates, zone_ids=zone_ids,
         )
         domains = {h.domain: i for i, h in enumerate({h.domain: h for h in hosts}.values())}
         dom = -1
         if req.domain is not None:
             dom = domains.get(req.domain, -1)
+        excl = -1
+        if req.exclude_zone is not None:
+            # An unknown zone name excludes nothing (nothing to flee from).
+            excl = zone_ids.get(req.exclude_zone, -1)
         host_idx, mask_idx, ok = self.schedule_soa(
             state,
             jnp.asarray(req.resources.vec, jnp.float32),
             bool(req.preemptible),
             dom,
+            exclude_zone=excl,
         )
         if not bool(ok):
             return ScheduleResult(request=req, host=None, passes=1)
@@ -1659,11 +1762,13 @@ class JaxPreemptibleScheduler:
         return ScheduleResult(request=req, host=hosts[hi].name, plan=plan, passes=1)
 
     # -- jit'd core (device arrays in/out) -------------------------------------
-    def schedule_soa(self, state: SoAHostState, req_res, preemptible: bool, domain: int = -1):
+    def schedule_soa(self, state: SoAHostState, req_res, preemptible: bool,
+                     domain: int = -1, exclude_zone: int = -1):
         return schedule_decision(
             state,
             req_res,
             jnp.asarray(preemptible),
             jnp.asarray(domain, jnp.int32),
             policy=self.policy,
+            req_exclude_zone=jnp.asarray(exclude_zone, jnp.int32),
         )

@@ -126,6 +126,21 @@ class SchedulerPolicy:
       wait): a queued entry's effective class decays toward 0 the longer it
       waits, as one more ``queue_select`` lexsort column.  0 = strict
       (class, seq) order, the pre-aging program.
+    * ``relocate_threshold`` — the relocation plane's arming threshold: a
+      zone whose learned churn rate ẑ exceeds it becomes an evacuation
+      target (``SoAFleet.relocate``).  ``None`` (default) = the relocation
+      plane is off entirely and no zone-exclusion operand is compiled.
+    * ``relocate_exit`` — hysteresis exit: an armed zone disarms only when
+      ẑ drops BELOW this (must be < ``relocate_threshold``; ``None`` =
+      half the arming threshold), so a zone oscillating around the arming
+      threshold never thrashes.
+    * ``relocate_cooldown_s`` — per-zone cooldown after a disarm before the
+      zone may re-arm.
+    * ``relocate_budget`` — max victims evacuated per zone per relocation
+      pass (bounds migration storms).
+    * ``relocate_backoff_s`` — base of the per-zone exponential backoff
+      after a failed relocation (doubles per consecutive failure).
+    * ``relocate_every_s`` — period of the simulator's relocation trigger.
     """
 
     weigher_multipliers: Tuple[float, float, float, float] = (1.0, 1.0, 0.0, 0.0)
@@ -148,6 +163,12 @@ class SchedulerPolicy:
     max_retries: int = 8
     n_classes: int = 2
     aging_rate: float = 0.0
+    relocate_threshold: Optional[float] = None
+    relocate_exit: Optional[float] = None
+    relocate_cooldown_s: float = 300.0
+    relocate_budget: int = 4
+    relocate_backoff_s: float = 30.0
+    relocate_every_s: float = 60.0
 
     def __post_init__(self):
         # Tuple-normalize sequence fields so list-passing callers still get a
@@ -160,13 +181,38 @@ class SchedulerPolicy:
             )
         object.__setattr__(self, "weigher_multipliers", mult)
         object.__setattr__(self, "churn_multiplier", float(self.churn_multiplier))
-        for name in ("churn_threshold", "storm_threshold"):
+        for name in ("churn_threshold", "storm_threshold", "relocate_threshold"):
             val = getattr(self, name)
             if val is not None:
                 val = float(val)
                 if not val > 0:
                     raise ValueError(f"{name} must be positive or None, got {val}")
                 object.__setattr__(self, name, val)
+        # -- relocation plane -------------------------------------------------
+        if self.relocate_exit is not None:
+            exit_val = float(self.relocate_exit)
+            if self.relocate_threshold is None:
+                raise ValueError(
+                    "relocate_exit without relocate_threshold (the plane is "
+                    "off); set relocate_threshold to arm evacuation"
+                )
+            if not 0 < exit_val < self.relocate_threshold:
+                raise ValueError(
+                    f"relocate_exit must sit in (0, relocate_threshold="
+                    f"{self.relocate_threshold}) for hysteresis, got {exit_val}"
+                )
+            object.__setattr__(self, "relocate_exit", exit_val)
+        for name in ("relocate_cooldown_s", "relocate_backoff_s",
+                     "relocate_every_s"):
+            val = float(getattr(self, name))
+            if not val > 0:
+                raise ValueError(f"{name} must be positive, got {val}")
+            object.__setattr__(self, name, val)
+        if int(self.relocate_budget) < 1:
+            raise ValueError(
+                f"relocate_budget must be >= 1, got {self.relocate_budget}"
+            )
+        object.__setattr__(self, "relocate_budget", int(self.relocate_budget))
         if float(self.aging_rate) < 0:
             raise ValueError(f"aging_rate must be >= 0, got {self.aging_rate}")
         object.__setattr__(self, "aging_rate", float(self.aging_rate))
@@ -245,6 +291,25 @@ class SchedulerPolicy:
         """True when decisions read the zone-churn plane at all (weigher or
         hard steering) — gates the extra stage-1 input statically."""
         return bool(self.churn_multiplier) or self.churn_threshold is not None
+
+    # -- relocation plane -----------------------------------------------------
+    @property
+    def relocation_on(self) -> bool:
+        """True when the hot-zone relocation plane is enabled — gates the
+        per-request zone-exclusion operand statically, the same way
+        ``churn_aware`` gates the churn row: relocation-off policies compile
+        the exact pre-relocation program."""
+        return self.relocate_threshold is not None
+
+    @property
+    def relocate_exit_threshold(self) -> float:
+        """The resolved hysteresis exit (``relocate_exit`` or half the
+        arming threshold).  Only meaningful when :attr:`relocation_on`."""
+        if self.relocate_threshold is None:
+            raise ValueError("relocation plane is off (relocate_threshold=None)")
+        if self.relocate_exit is not None:
+            return self.relocate_exit
+        return self.relocate_threshold / 2.0
 
     # -- cost-kind table ------------------------------------------------------
     @property

@@ -185,6 +185,18 @@ def churn_of(
     return rate[host_zone]
 
 
+def churn_stats(zone_term: jax.Array, zone_up: jax.Array) -> jax.Array:
+    """Every churn statistic the host side reads, in ONE fused reduction:
+    returns (Z+1,) — the Z per-zone rates ẑ = T/max(U, ε) followed by the
+    fleet-wide rate ΣT/max(ΣU, ε).  The sampler (``SoAFleet.zone_rates`` /
+    ``fleet_churn_rate``), the admission drain's storm check, and the
+    relocation trigger all derive from this one program, so one device
+    transfer serves every reader per event."""
+    rate = zone_term / jnp.maximum(zone_up, CHURN_EPS)
+    fleet = jnp.sum(zone_term) / jnp.maximum(jnp.sum(zone_up), CHURN_EPS)
+    return jnp.concatenate([rate, fleet[None]])
+
+
 def raw_base_terms(
     free_f_sum: jax.Array,
     slow: jax.Array,

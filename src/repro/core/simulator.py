@@ -65,6 +65,13 @@ class SimMetrics:
     #: correlated zone-level preemption storms fired / instances they killed
     storms: int = 0
     storm_kills: int = 0
+    #: relocation plane (SoAFleet.relocate): passes run, victims moved,
+    #: re-placements rejected (victims left running), victims reclaimed
+    #: mid-flight (replacement stood as the checkpoint restore)
+    relocation_passes: int = 0
+    relocations: int = 0
+    relocation_failed: int = 0
+    relocation_lost: int = 0
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -79,6 +86,10 @@ class SimMetrics:
             "preemptions": float(self.preemptions),
             "storms": float(self.storms),
             "storm_kills": float(self.storm_kills),
+            "relocation_passes": float(self.relocation_passes),
+            "relocations": float(self.relocations),
+            "relocation_failed": float(self.relocation_failed),
+            "relocation_lost": float(self.relocation_lost),
         }
 
 
@@ -295,6 +306,8 @@ class SoASimulator:
                 duration_s, stop_on_normal_failure, sample_every_s
             )
         self._push(self.rng.exponential(1.0 / self.workload.arrival_rate_per_s), "arrival")
+        if self.fleet.policy.relocation_on:
+            self._push(self.fleet.policy.relocate_every_s, "relocate")
         next_sample = 0.0
         while self._heap:
             ev = heapq.heappop(self._heap)
@@ -330,7 +343,7 @@ class SoASimulator:
                     "arrival",
                 )
             elif ev.kind == "departure":
-                self.fleet.depart(ev.payload, now=self.now)
+                self.fleet.depart(self._depart_id(ev.payload), now=self.now)
             elif ev.kind == "fail_host":
                 self.fleet.fail_host(ev.payload, now=self.now)
             elif ev.kind == "heal_host":
@@ -340,10 +353,32 @@ class SoASimulator:
                 self._zone_storm(zone, kill_frac)
             elif ev.kind == "regime_on":
                 self._regime_on(ev.payload)
+            elif ev.kind == "relocate":
+                self.fleet.relocate(self.now)
+                self._push(
+                    self.now + self.fleet.policy.relocate_every_s, "relocate"
+                )
         if self._pending:
             self._flush()
         self._sample()
+        self._fold_relocation_metrics()
         return self.metrics
+
+    def _depart_id(self, iid: str) -> str:
+        """Resolve a departure event's id through the relocation chain: a
+        relocated instance's scheduled departure reaps its replacement (and
+        the replacement's replacement, if it moved again)."""
+        relocated = self.fleet.relocated_ids
+        while iid in relocated:
+            iid = relocated[iid]
+        return iid
+
+    def _fold_relocation_metrics(self) -> None:
+        rs = self.fleet.relocation
+        self.metrics.relocation_passes = rs.passes
+        self.metrics.relocations = rs.relocated
+        self.metrics.relocation_failed = rs.failed
+        self.metrics.relocation_lost = rs.lost_victims
 
     def _flush(self) -> bool:
         """Run the buffered arrivals through one scan.  Returns True when a
@@ -381,6 +416,8 @@ class SoASimulator:
     ) -> SimMetrics:
         front = self.fleet.admission
         self._push(self.rng.exponential(1.0 / self.workload.arrival_rate_per_s), "arrival")
+        if self.fleet.policy.relocation_on:
+            self._push(self.fleet.policy.relocate_every_s, "relocate")
         next_sample = 0.0
         while self._heap:
             ev = heapq.heappop(self._heap)
@@ -409,7 +446,7 @@ class SoASimulator:
                     front.drain(self.now, block=False)
             elif ev.kind == "departure":
                 front.sync()  # instance ids must exist in the mirror
-                self.fleet.depart(ev.payload, now=self.now)
+                self.fleet.depart(self._depart_id(ev.payload), now=self.now)
                 if front.waiting:  # backfill the freed capacity
                     front.drain(self.now, block=False)
             elif ev.kind == "fail_host":
@@ -429,6 +466,14 @@ class SoASimulator:
                     front.drain(self.now, block=False)
             elif ev.kind == "regime_on":
                 self._regime_on(ev.payload)
+            elif ev.kind == "relocate":
+                front.sync()  # mirror must be current for victim selection
+                self.fleet.relocate(self.now)
+                self._push(
+                    self.now + self.fleet.policy.relocate_every_s, "relocate"
+                )
+                if front.waiting:  # dispatch the queued re-placements
+                    front.drain(self.now, block=False)
             failed_normal = self._handle_drain_results(front.take_results())
             if failed_normal and stop_on_normal_failure:
                 break
@@ -442,6 +487,7 @@ class SoASimulator:
         # in streaming mode the honest per-request latency is the wall-clock
         # admission latency (submit → outcome absorbed), not a per-flush mean
         self.metrics.sched_latency_s = list(front.stats.wall_wait_s)
+        self._fold_relocation_metrics()
         return self.metrics
 
     def _handle_drain_results(self, results) -> bool:
@@ -451,6 +497,10 @@ class SoASimulator:
         for dr in results:
             for out in dr.outcomes:
                 req = out.request
+                if "relocation" in req.metadata:
+                    # settled by the relocation plane; the moved instance
+                    # keeps its original departure event via relocated_ids
+                    continue
                 self.metrics.preemptions += len(out.victims)
                 if req.preemptible:
                     self.metrics.placed_preemptible += 1
@@ -460,6 +510,8 @@ class SoASimulator:
                 if lifetime is not None:
                     self._push(dr.now + lifetime, "departure", out.instance.id)
             for req in dr.rejected:
+                if "relocation" in req.metadata:
+                    continue  # never-worse: victim stays; not a sim failure
                 self._lifetimes.pop(req.id, None)
                 if req.preemptible:
                     self.metrics.failures_preemptible += 1

@@ -15,9 +15,12 @@ outputs); full python ``Host`` objects are materialized only on demand
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .admission import AdmissionFrontEnd, DrainResult, PAD_RES
@@ -41,7 +44,7 @@ from .policy import (
     SchedulerPolicy,
     ensure_policy,
 )
-from .screen_math import CHURN_EPS
+from .screen_math import NEG_INF, churn_stats, floor_mod
 from .types import Host, Instance, Request, Resources
 
 #: Padding sentinel for batched scheduling: a request no host can fit
@@ -144,6 +147,90 @@ class SoAOutcome:
     @property
     def ok(self) -> bool:
         return self.host is not None
+
+
+#: one jit'd program behind every host-side churn read (see churn_snapshot)
+_churn_stats_jit = jax.jit(churn_stats)
+
+
+@functools.partial(jax.jit, static_argnames=("budget",))
+def _relocation_victims(state, zone, now, default_period, budget: int):
+    """Checkpoint-aware victim selection on device: rank ``zone``'s live
+    preemptible slots by the loss a reclaim would cause RIGHT NOW —
+    recompute work since the last durable checkpoint (the RecomputeCost
+    convention: lost seconds × chips, dim 0) plus the remaining prepaid
+    billing period (per-slot ``inst_period``; -1 sentinel = the policy's
+    shared ``default_period``) — and return the at-most-``budget``
+    highest-loss slots, ties by lowest flat index (``lax.top_k``).
+
+    Returns ``(host (B,), slot (B,), valid (B,))``; rows with
+    ``valid=False`` gathered a dead/foreign slot (fewer live slots in the
+    zone than the budget) and must be skipped.
+    """
+    live = state.inst_valid & (state.host_zone[:, None] == zone)
+    recompute = jnp.maximum(0.0, now - state.inst_ckpt) * jnp.maximum(
+        1.0, state.inst_res[..., 0]
+    )
+    period = jnp.where(
+        state.inst_period > 0, state.inst_period, default_period
+    )
+    remaining = period - floor_mod(now - state.inst_start, period)
+    loss = jnp.where(live, recompute + remaining, NEG_INF)
+    k = state.inst_valid.shape[1]
+    top, idx = jax.lax.top_k(loss.reshape(-1), budget)
+    return idx // k, idx % k, top > NEG_INF / 2
+
+
+@dataclasses.dataclass
+class _ZoneReloc:
+    """Per-zone hysteresis + retry record of the relocation plane.
+
+    ``armed`` flips on when ẑ crosses ``policy.relocate_threshold`` (and
+    the cooldown has expired) and off when ẑ falls below the lower
+    ``relocate_exit_threshold`` — the two-threshold hysteresis that keeps
+    an oscillating zone from thrashing.  ``retry_at`` is the exponential
+    backoff gate failed re-placements push forward."""
+
+    armed: bool = False
+    cooldown_until: float = float("-inf")
+    fail_streak: int = 0
+    retry_at: float = float("-inf")
+
+
+@dataclasses.dataclass
+class RelocationStats:
+    """Host-side counters of the relocation plane (one per fleet).
+
+    Conservation: every ``attempted`` victim ends in exactly one of
+    ``relocated`` (moved; victim departed voluntarily after its replacement
+    placed), ``failed`` (re-placement rejected; victim untouched),
+    ``lost_victims`` (reclaimed mid-flight; the replacement stands as the
+    checkpoint restore), ``stale`` (victim departed on its own mid-flight;
+    the surplus replacement departed immediately), or ``pending`` (still
+    in the admission queue)."""
+
+    passes: int = 0
+    arms: int = 0
+    disarms: int = 0
+    attempted: int = 0
+    relocated: int = 0
+    failed: int = 0
+    lost_victims: int = 0
+    stale: int = 0
+    pending: int = 0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "relocation_passes": float(self.passes),
+            "relocation_arms": float(self.arms),
+            "relocation_disarms": float(self.disarms),
+            "relocation_attempted": float(self.attempted),
+            "relocations": float(self.relocated),
+            "relocation_failed": float(self.failed),
+            "relocation_lost": float(self.lost_victims),
+            "relocation_stale": float(self.stale),
+            "relocation_pending": float(self.pending),
+        }
 
 
 class SoAFleet:
@@ -267,6 +354,14 @@ class SoAFleet:
 
         self.preempted: List[Instance] = []
         self._ids = itertools.count()
+        #: relocation plane (armed per zone by policy.relocate_threshold)
+        self.relocation = RelocationStats()
+        self._reloc_zone: Dict[str, _ZoneReloc] = {}
+        #: victims whose re-placement is waiting in the admission queue
+        self._reloc_inflight: Set[str] = set()
+        #: relocated old id → replacement id; the simulator follows this
+        #: chain when a departure event names a relocated instance
+        self.relocated_ids: Dict[str, str] = {}
         cap = np.stack([c.vec for c in self.capacity]) if hosts else np.zeros((0, 1))
         self._cap0_total = float(cap[:, 0].sum())
 
@@ -333,12 +428,25 @@ class SoAFleet:
                     f"the policy's cost-kind table {self.policy.kind_table}"
                 )
             kind = COST_KIND_IDS[req.cost_kind]
+        if req.exclude_zone is None:
+            excl = -1
+        else:
+            # Fail closed: a typo'd zone name silently matching nothing
+            # would void the never-place-back guarantee.
+            if req.exclude_zone not in self.zone_ids:
+                raise ValueError(
+                    f"request {req.id} excludes unknown zone "
+                    f"{req.exclude_zone!r}; fleet zones: "
+                    f"{sorted(self.zone_ids)}"
+                )
+            excl = self.zone_ids[req.exclude_zone]
         return (
             req.resources.vec32,
             bool(req.preemptible),
             np.int32(dom),
             np.int32(kind),
             np.float32(-1.0 if req.period is None else req.period),
+            np.int32(excl),
         )
 
     @property
@@ -390,10 +498,11 @@ class SoAFleet:
         self, req: Request, now: float, price: float = 1.0
     ) -> SoAOutcome:
         """One decide-and-apply step on the persistent state."""
-        res, pre, dom, kind, period = self._req_arrays(req)
+        res, pre, dom, kind, period, excl = self._req_arrays(req)
         self.state, (host_idx, slot, ok, kill, fell_back, margin) = schedule_step(
             self.state, res, pre, dom, now, price,
             policy=self._flush_policy(), req_cost_kind=kind, req_period=period,
+            req_exclude_zone=excl,
         )
         self._observe(int(fell_back), float(margin), 1)
         return self._absorb(
@@ -424,13 +533,16 @@ class SoAFleet:
         price = np.ones((padded,), np.float32)
         kind = np.full((padded,), -1, np.int32)
         period = np.full((padded,), -1.0, np.float32)
+        excl = np.full((padded,), -1, np.int32)
         for i, (req, t, p) in enumerate(items):
-            res[i], pre[i], dom[i], kind[i], period[i] = self._req_arrays(req)
+            (res[i], pre[i], dom[i], kind[i], period[i],
+             excl[i]) = self._req_arrays(req)
             now[i] = t
             price[i] = p
         self.state, (host_idx, slot, ok, kill, fell_back, margin) = schedule_many(
             self.state, res, pre, dom, now, price,
             policy=self._flush_policy(), req_cost_kind=kind, req_period=period,
+            req_exclude_zone=excl,
         )
         host_idx, slot = np.asarray(host_idx), np.asarray(slot)
         ok, kill = np.asarray(ok), np.asarray(kill)
@@ -554,10 +666,19 @@ class SoAFleet:
         reclaim): the instance dies like a scheduler kill — freed on device,
         recorded in ``preempted`` for re-queueing, and (when ``now`` is
         given) charged to its host's zone churn accumulators.  Returns False
-        when the instance is gone or not preemptible — idempotent."""
+        when the instance is already gone (benign — storms and relocations
+        race, so reclaims are idempotent); raises for a live NORMAL
+        instance, which no provider reclaims out of band (a normal id here
+        is a caller bug, not a race)."""
         loc = self.locator.get(instance_id)
-        if loc is None or loc[1] is None:
+        if loc is None:
             return False
+        if loc[1] is None:
+            raise ValueError(
+                f"instance {instance_id} is not preemptible; out-of-band "
+                "reclaim only takes preemptible slots (normal instances "
+                "leave via depart/fail_host)"
+            )
         host_idx, slot = loc
         inst = self.instances.pop(instance_id)
         del self.locator[instance_id]
@@ -597,22 +718,173 @@ class SoAFleet:
         return n_pre, n_norm
 
     # -- failure-domain plane (zone churn readers) ---------------------------
+    def churn_snapshot(self) -> Tuple[Dict[str, float], float]:
+        """Every churn statistic in ONE fused device reduction + transfer
+        (``screen_math.churn_stats``): returns ``(per-zone ẑ by name,
+        fleet-wide rate)``.  The single reader behind ``zone_rates``,
+        ``fleet_churn_rate``, and the relocation trigger — callers needing
+        both halves should call this once instead of both wrappers."""
+        out = np.asarray(
+            _churn_stats_jit(self.state.zone_term, self.state.zone_up)
+        )
+        rates = {z: float(out[i]) for z, i in self.zone_ids.items()}
+        return rates, float(out[-1])
+
     def zone_rates(self) -> Dict[str, float]:
         """Observed per-zone churn rates ẑ = T / max(U, eps): involuntary
         terminations over accrued preemptible uptime — the same statistic the
         device decision reads via ``screen_math.churn_of``."""
-        term = np.asarray(self.state.zone_term)
-        up = np.asarray(self.state.zone_up)
-        rate = term / np.maximum(up, CHURN_EPS)
-        return {z: float(rate[i]) for z, i in self.zone_ids.items()}
+        return self.churn_snapshot()[0]
 
     def fleet_churn_rate(self) -> float:
         """Fleet-wide churn rate ΣT / max(ΣU, eps) — the storm signal the
         admission plane's graceful degradation compares against
         ``policy.storm_threshold``."""
-        term = float(np.asarray(self.state.zone_term).sum())
-        up = float(np.asarray(self.state.zone_up).sum())
-        return term / max(up, CHURN_EPS)
+        return self.churn_snapshot()[1]
+
+    # -- relocation plane (hot-zone evacuation) ------------------------------
+    def relocate(self, now: float) -> int:
+        """One relocation pass: evacuate up to ``policy.relocate_budget``
+        of the highest-expected-loss preemptible instances from every ARMED
+        hot zone, checkpoint → place → kill, never the reverse.
+
+        Hysteresis: a zone arms when its learned churn ẑ crosses
+        ``policy.relocate_threshold`` (outside its cooldown window) and
+        disarms — entering a ``relocate_cooldown_s`` cooldown — when ẑ
+        falls below ``policy.relocate_exit_threshold``.  Failed
+        re-placements leave their victim running and push the zone's
+        ``retry_at`` out exponentially (``relocate_backoff_s`` doubling per
+        consecutive failure).
+
+        Re-placements go through the ordinary decision pipeline with the
+        source zone hard-excluded (``Request.exclude_zone``); with the
+        admission plane on they ride the queue as class-0 preemptible
+        entries and settle asynchronously at the drain that decides them.
+        Returns the number of evacuations initiated this pass."""
+        pol = self.policy
+        if not pol.relocation_on:
+            raise RuntimeError(
+                "relocation plane is off; build the fleet with "
+                "SchedulerPolicy(relocate_threshold=...)"
+            )
+        st = self.relocation
+        st.passes += 1
+        rates, _ = self.churn_snapshot()
+        started = 0
+        for zone in self.zone_ids:
+            z = self._reloc_zone.setdefault(zone, _ZoneReloc())
+            rate = rates[zone]
+            if z.armed and rate < pol.relocate_exit_threshold:
+                z.armed = False
+                z.cooldown_until = now + pol.relocate_cooldown_s
+                st.disarms += 1
+            elif (
+                not z.armed
+                and rate > pol.relocate_threshold
+                and now >= z.cooldown_until
+            ):
+                z.armed = True
+                z.fail_streak = 0
+                z.retry_at = float("-inf")
+                st.arms += 1
+            if z.armed and now >= z.retry_at:
+                started += self._evacuate_zone(zone, now)
+        return started
+
+    def _evacuate_zone(self, zone: str, now: float) -> int:
+        """Evacuate one armed zone's worst-loss victims (≤ budget)."""
+        pol = self.policy
+        st = self.relocation
+        budget = min(pol.relocate_budget, self.state.n_hosts * self.k_slots)
+        hosts, slots, valid = _relocation_victims(
+            self.state, jnp.int32(self.zone_ids[zone]), jnp.float32(now),
+            jnp.float32(pol.period), budget=budget,
+        )
+        hosts, slots = np.asarray(hosts), np.asarray(slots)
+        valid = np.asarray(valid)
+        started = 0
+        for h, s, v in zip(hosts, slots, valid):
+            if not v:
+                continue
+            iid = self.slot_ids[int(h)][int(s)]
+            assert iid is not None, "relocation victim slot empty in mirror"
+            if iid in self._reloc_inflight:
+                continue  # already mid-flight from an earlier pass
+            inst = self.instances[iid]
+            st.attempted += 1
+            # Checkpoint FIRST: the replacement restarts from here, and a
+            # storm racing the move loses only the work since this instant.
+            self.checkpoint(iid, now)
+            req = Request(
+                id=f"reloc-{iid}",
+                resources=inst.resources,
+                preemptible=True,
+                user=inst.user,
+                cost_kind=inst.cost_kind,
+                period=inst.period,
+                priority=0,
+                exclude_zone=zone,
+                metadata={"relocation": iid},
+            )
+            if self.admission is not None:
+                self.admission.submit_relocation(
+                    req, iid, zone, now, price=inst.price_rate
+                )
+                self._reloc_inflight.add(iid)
+                st.pending += 1
+                started += 1
+            else:
+                out = self.schedule_request(req, now, price=inst.price_rate)
+                if out.ok:
+                    self._settle_relocation_placed(iid, zone, out, now)
+                    started += 1
+                else:
+                    self._settle_relocation_rejected(iid, zone, now)
+        return started
+
+    def _settle_relocation_placed(
+        self, victim_id: str, zone: str, out: SoAOutcome, now: float
+    ) -> None:
+        """Make-before-break settle: the replacement is live, so the victim
+        (if still running) departs — voluntarily: a move is not churn, so
+        the source zone's ẑ numerator is untouched."""
+        st = self.relocation
+        if victim_id in self._reloc_inflight:
+            self._reloc_inflight.discard(victim_id)
+            st.pending -= 1
+        z = self._reloc_zone.setdefault(zone, _ZoneReloc())
+        if victim_id in self.instances:
+            self.depart(victim_id, now=now)
+            self.relocated_ids[victim_id] = out.instance.id
+            st.relocated += 1
+            z.fail_streak = 0
+        elif any(i.id == victim_id for i in self.preempted):
+            # The storm beat the move: the victim is already dead, and the
+            # replacement stands as its restore from the checkpoint taken
+            # at evacuation time.
+            self.relocated_ids[victim_id] = out.instance.id
+            st.lost_victims += 1
+        else:
+            # Victim departed on its own mid-flight: the replacement is
+            # surplus — drop it immediately (no duplicate, no double bill).
+            self.depart(out.instance.id, now=now)
+            st.stale += 1
+
+    def _settle_relocation_rejected(
+        self, victim_id: str, zone: str, now: float
+    ) -> None:
+        """Never-worse: a failed re-placement leaves the victim running and
+        backs the zone off exponentially."""
+        st = self.relocation
+        if victim_id in self._reloc_inflight:
+            self._reloc_inflight.discard(victim_id)
+            st.pending -= 1
+        st.failed += 1
+        z = self._reloc_zone.setdefault(zone, _ZoneReloc())
+        z.fail_streak += 1
+        z.retry_at = now + self.policy.relocate_backoff_s * (
+            2.0 ** (z.fail_streak - 1)
+        )
 
     def checkpoint(self, instance_id: str, now: float) -> bool:
         """Record a durable checkpoint for a live preemptible instance (its

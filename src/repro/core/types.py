@@ -142,6 +142,11 @@ class Request:
     #: (contract terms vary per customer class); ``None`` = the fleet
     #: policy's shared ``period``.
     period: Optional[float] = None
+    #: Hard zone exclusion: the decision pipeline filters every host in this
+    #: failure zone out of stage 1, regardless of churn state.  Set by the
+    #: relocation plane on evacuation re-placements so a victim can never be
+    #: re-placed into the zone it is fleeing; ``None`` = no exclusion.
+    exclude_zone: Optional[str] = None
     metadata: Mapping[str, object] = dataclasses.field(default_factory=dict)
 
 

@@ -108,6 +108,7 @@ def _tile_stage1(
     free_f_ref, free_n_ref, sched_ref, domain_ref, slow_ref,
     res_ref, cost_ref, valid_ref, req_ref, pre_ref, rdom_ref,
     *, require_free_slot, churn_ref=None, churn_threshold=None,
+    zone_ref=None, excl_ref=None,
 ):
     """One tile's stage-1 screen terms from VMEM refs — the shared
     ``screen_math`` bounds plus the dual-view filtering (same formulas as
@@ -119,7 +120,11 @@ def _tile_stage1(
 
     ``churn_ref`` is the optional (1, T) per-host learned zone-churn rate ẑ;
     a static ``churn_threshold`` applies the hot-zone steering filter to
-    preemptible requests (same gate as ``_stage1_rows``)."""
+    preemptible requests (same gate as ``_stage1_rows``).  ``zone_ref`` is
+    the optional (1, T) per-host zone-id column and ``excl_ref`` the (1, 1)
+    per-request excluded-zone scalar: relocation re-placements hard-filter
+    every host of the zone they are fleeing (integer compare, so the gate is
+    trivially bit-exact vs ``_stage1_rows``); a negative scalar disables."""
     k = res_ref.shape[0]
     pre = pre_ref[0, 0] != 0
     rdom = rdom_ref[0, 0]
@@ -145,6 +150,9 @@ def _tile_stage1(
     fits = jnp.all(view >= req - EPS, axis=0)                    # (T,)
     fits &= sched_ref[...][0] > 0.5
     fits &= (rdom < 0) | (domain_ref[...][0] == rdom)
+    if zone_ref is not None and excl_ref is not None:
+        excl = excl_ref[0, 0]
+        fits &= (excl < 0) | (zone_ref[...][0] != excl)
     if churn_threshold is not None and churn_ref is not None:
         fits &= jnp.where(
             pre, churn_ref[...][0] <= jnp.float32(churn_threshold), True
@@ -164,14 +172,22 @@ def _tile_stage1(
     return valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw, churn_raw
 
 
-def _split_refs(refs, n_extra, has_churn):
+def _split_refs(refs, n_extra, has_churn, has_zone):
     """Unpack a kernel's positional refs: the 11 fleet/request inputs, the
-    optional churn input, then ``n_extra`` output/scratch refs.  Returns
-    ``(fleet_refs, churn_ref, extra_refs)``."""
-    n_in = 12 if has_churn else 11
+    optional churn input, the optional zone-row + excluded-zone pair, then
+    ``n_extra`` output/scratch refs.  Returns
+    ``(fleet_refs, churn_ref, zone_ref, excl_ref, extra_refs)``."""
     fleet = refs[:11]
-    churn_ref = refs[11] if has_churn else None
-    return fleet, churn_ref, refs[n_in:]
+    n_in = 11
+    churn_ref = zone_ref = excl_ref = None
+    if has_churn:
+        churn_ref = refs[n_in]
+        n_in += 1
+    if has_zone:
+        zone_ref = refs[n_in]
+        excl_ref = refs[n_in + 1]
+        n_in += 2
+    return fleet, churn_ref, zone_ref, excl_ref, refs[n_in:]
 
 
 def _fold_consts(smem, valid, cost_lb, cost_ub, raws):
@@ -194,11 +210,13 @@ def _fold_consts(smem, valid, cost_lb, cost_ub, raws):
 def _kernel(
     *refs,
     multipliers, require_free_slot, churn_threshold, tile, s_buf, has_churn,
+    has_zone,
 ):
     m_term = multipliers[1]
     m_churn = _m_churn(multipliers)
-    fleet, churn_ref, (scores_ref, idx_ref, consts_ref, smem) = _split_refs(
-        refs, 4, has_churn
+    (fleet, churn_ref, zone_ref, excl_ref,
+     (scores_ref, idx_ref, consts_ref, smem)) = _split_refs(
+        refs, 4, has_churn, has_zone
     )
     phase = pl.program_id(0)
     t = pl.program_id(1)
@@ -207,6 +225,7 @@ def _kernel(
         *fleet,
         require_free_slot=require_free_slot,
         churn_ref=churn_ref, churn_threshold=churn_threshold,
+        zone_ref=zone_ref, excl_ref=excl_ref,
     )
 
     # ---- phase 0: fold normalization constants into SMEM --------------------
@@ -247,19 +266,23 @@ def _kernel(
 
 def _consts_kernel(
     *refs, multipliers, require_free_slot, churn_threshold, has_churn,
+    has_zone,
 ):
     """Phase 0 alone: fold the 10 normalization constants over the fleet
     (identical folds to ``_kernel``'s phase 0) and emit them — the
     per-shard half of the split the sharded fused screen needs, so the
     mesh can pmin/pmax-merge constants BEFORE any omega is scored."""
     m_churn = _m_churn(multipliers)
-    fleet, churn_ref, (consts_ref, smem) = _split_refs(refs, 2, has_churn)
+    fleet, churn_ref, zone_ref, excl_ref, (consts_ref, smem) = _split_refs(
+        refs, 2, has_churn, has_zone
+    )
     t = pl.program_id(0)
     (valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw,
      churn_raw) = _tile_stage1(
         *fleet,
         require_free_slot=require_free_slot,
         churn_ref=churn_ref, churn_threshold=churn_threshold,
+        zone_ref=zone_ref, excl_ref=excl_ref,
     )
 
     @pl.when(t == 0)
@@ -279,14 +302,16 @@ def _consts_kernel(
 def _topm_kernel(
     *refs,
     multipliers, require_free_slot, churn_threshold, tile, s_buf, has_churn,
+    has_zone,
 ):
     """Phase 1 alone, scoring against EXTERNAL constants (``consts_in_ref``,
     e.g. the mesh-merged ``ScreenConsts``): recompute the tile's screen
     terms, assemble ``omega_ub``, fold the running top-M — the same ops as
     ``_kernel``'s phase 1 reading merged constants instead of SMEM."""
     m_term = multipliers[1]
-    fleet, churn_ref, (consts_in_ref, scores_ref, idx_ref) = _split_refs(
-        refs, 3, has_churn
+    (fleet, churn_ref, zone_ref, excl_ref,
+     (consts_in_ref, scores_ref, idx_ref)) = _split_refs(
+        refs, 3, has_churn, has_zone
     )
     t = pl.program_id(0)
     (valid, cost_lb, cost_ub, over_raw, pack_raw, strag_raw,
@@ -294,6 +319,7 @@ def _topm_kernel(
         *fleet,
         require_free_slot=require_free_slot,
         churn_ref=churn_ref, churn_threshold=churn_threshold,
+        zone_ref=zone_ref, excl_ref=excl_ref,
     )
 
     @pl.when(t == 0)
@@ -312,11 +338,12 @@ def _topm_kernel(
     _fold_top(scores_ref, idx_ref, omega_ub[None, :], gidx, s_buf, tile)
 
 
-def _in_specs(k, d, tile, has_churn):
+def _in_specs(k, d, tile, has_churn, has_zone):
     """The fleet/request BlockSpec list shared by all three kernels (the
     host axis is the grid's LAST dimension, so the index maps take the
     final program id as the tile index).  ``has_churn`` appends the (1, T)
-    churn-row spec."""
+    churn-row spec; ``has_zone`` the (1, T) zone-id row plus the (1, 1)
+    excluded-zone scalar."""
     host = lambda *ids: (0, ids[-1])
     fixed = lambda *ids: (0, 0)
     specs = [
@@ -334,7 +361,18 @@ def _in_specs(k, d, tile, has_churn):
     ]
     if has_churn:
         specs.append(pl.BlockSpec((1, tile), host))
+    if has_zone:
+        specs.append(pl.BlockSpec((1, tile), host))
+        specs.append(pl.BlockSpec((1, 1), fixed))
     return specs
+
+
+def _decode_extras(args):
+    """Recover the static (has_churn, has_zone) pair from an ``args`` tuple
+    built by ``_prep_inputs``: 11 fleet/request inputs, +1 churn row, +2
+    zone row + excluded-zone scalar."""
+    extras = len(args) - 11
+    return extras in (1, 3), extras >= 2
 
 
 @functools.partial(
@@ -348,7 +386,7 @@ def _sched_screen_padded(
     args, multipliers, require_free_slot, churn_threshold, s_buf, tile,
     interpret,
 ):
-    has_churn = len(args) == 12
+    has_churn, has_zone = _decode_extras(args)
     k, d, n = args[5].shape
     fixed = lambda *ids: (0, 0)
     kern = functools.partial(
@@ -359,11 +397,12 @@ def _sched_screen_padded(
         tile=tile,
         s_buf=s_buf,
         has_churn=has_churn,
+        has_zone=has_zone,
     )
     return pl.pallas_call(
         kern,
         grid=(2, n // tile),
-        in_specs=_in_specs(k, d, tile, has_churn),
+        in_specs=_in_specs(k, d, tile, has_churn, has_zone),
         out_specs=(
             pl.BlockSpec((1, s_buf), fixed),
             pl.BlockSpec((1, s_buf), fixed),
@@ -389,7 +428,7 @@ def _sched_screen_padded(
 def _sched_consts_padded(
     args, multipliers, require_free_slot, churn_threshold, tile, interpret,
 ):
-    has_churn = len(args) == 12
+    has_churn, has_zone = _decode_extras(args)
     k, d, n = args[5].shape
     fixed = lambda t: (0, 0)
     kern = functools.partial(
@@ -398,11 +437,12 @@ def _sched_consts_padded(
         require_free_slot=require_free_slot,
         churn_threshold=churn_threshold,
         has_churn=has_churn,
+        has_zone=has_zone,
     )
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
-        in_specs=_in_specs(k, d, tile, has_churn),
+        in_specs=_in_specs(k, d, tile, has_churn, has_zone),
         out_specs=pl.BlockSpec((1, N_CONSTS), fixed),
         out_shape=jax.ShapeDtypeStruct((1, N_CONSTS), jnp.float32),
         scratch_shapes=[pltpu.SMEM((N_CONSTS,), jnp.float32)],
@@ -421,7 +461,7 @@ def _sched_topm_padded(
     args, consts, multipliers, require_free_slot, churn_threshold, s_buf,
     tile, interpret,
 ):
-    has_churn = len(args) == 12
+    has_churn, has_zone = _decode_extras(args)
     k, d, n = args[5].shape
     fixed = lambda t: (0, 0)
     kern = functools.partial(
@@ -432,11 +472,12 @@ def _sched_topm_padded(
         tile=tile,
         s_buf=s_buf,
         has_churn=has_churn,
+        has_zone=has_zone,
     )
     return pl.pallas_call(
         kern,
         grid=(n // tile,),
-        in_specs=_in_specs(k, d, tile, has_churn)
+        in_specs=_in_specs(k, d, tile, has_churn, has_zone)
         + [pl.BlockSpec((1, N_CONSTS), fixed)],
         out_specs=(
             pl.BlockSpec((1, s_buf), fixed),
@@ -456,12 +497,16 @@ def _prep_inputs(
     req_res, req_preemptible, req_domain,
     tile: int,
     churn=None,
+    host_zone=None,
+    exclude_zone=None,
 ):
     """Dtype-normalize, pad the host axis to the tile, and transpose to the
     kernels' slot-major layout.  Padding rows are unschedulable, so they
     can never outrank a real host.  An optional ``churn`` column (per-host
     ẑ, padded with zeros — padding rows are filtered anyway) rides along as
-    the 12th element."""
+    the 12th element; an optional ``host_zone`` i32 column (padded with
+    zeros, same reasoning) plus the ``exclude_zone`` i32 scalar ride as the
+    next two."""
     n, d = free_f.shape
     k = inst_cost.shape[1]
     pad = (-n) % tile
@@ -475,6 +520,8 @@ def _prep_inputs(
     inst_valid = jnp.asarray(inst_valid, jnp.float32)
     if churn is not None:
         churn = jnp.asarray(churn, jnp.float32)
+    if host_zone is not None:
+        host_zone = jnp.asarray(host_zone, jnp.int32)
     if pad:
         zf = jnp.zeros((pad, d), jnp.float32)
         free_f = jnp.concatenate([free_f, zf])
@@ -487,6 +534,10 @@ def _prep_inputs(
         inst_valid = jnp.concatenate([inst_valid, jnp.zeros((pad, k), jnp.float32)])
         if churn is not None:
             churn = jnp.concatenate([churn, jnp.zeros((pad,), jnp.float32)])
+        if host_zone is not None:
+            host_zone = jnp.concatenate(
+                [host_zone, jnp.zeros((pad,), jnp.int32)]
+            )
     out = (
         free_f.T, free_n.T, sched[None, :], domain[None, :], slow[None, :],
         inst_res.transpose(1, 2, 0), inst_cost.T, inst_valid.T,
@@ -496,6 +547,11 @@ def _prep_inputs(
     )
     if churn is not None:
         out += (churn[None, :],)
+    if host_zone is not None:
+        out += (
+            host_zone[None, :],
+            jnp.asarray(exclude_zone, jnp.int32).reshape(1, 1),
+        )
     return out
 
 
@@ -510,6 +566,8 @@ def sched_screen(
     tile: int = TILE_HOSTS,
     churn=None,
     churn_threshold=None,
+    host_zone=None,
+    exclude_zone=None,
 ):
     """Fused stage-1 screen.  Returns ``(top_scores, top_idx, consts)``:
 
@@ -527,10 +585,14 @@ def sched_screen(
     per-host ẑ column) and a static ``churn_threshold`` enable the
     failure-domain weigher term and hot-zone steering (see
     ``_tile_stage1``); with a 5th ``weigher_multipliers`` entry the churn
-    normalization folds into consts slots 8/9.
+    normalization folds into consts slots 8/9.  ``host_zone`` (per-host
+    zone-id i32 column) + ``exclude_zone`` (i32 scalar, negative = off)
+    hard-filter the excluded zone for relocation re-placements.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if host_zone is None or exclude_zone is None:
+        host_zone = exclude_zone = None
     n = free_f.shape[0]
     if not 1 <= m_keep <= n:
         raise ValueError(f"m_keep={m_keep} out of range for {n} hosts")
@@ -542,6 +604,7 @@ def sched_screen(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid,
             req_res, req_preemptible, req_domain, tile, churn,
+            host_zone, exclude_zone,
         ),
         multipliers=tuple(weigher_multipliers),
         require_free_slot=bool(require_free_slot),
@@ -565,6 +628,8 @@ def sched_screen_consts(
     tile: int = TILE_HOSTS,
     churn=None,
     churn_threshold=None,
+    host_zone=None,
+    exclude_zone=None,
 ):
     """Constants half of the split screen: fold ONLY the 10 normalization
     scalars over the given hosts (identical folds to ``sched_screen``'s
@@ -576,11 +641,14 @@ def sched_screen_consts(
     constants barrier the single-kernel 2-phase grid cannot cross."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if host_zone is None or exclude_zone is None:
+        host_zone = exclude_zone = None
     consts = _sched_consts_padded(
         _prep_inputs(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid,
             req_res, req_preemptible, req_domain, tile, churn,
+            host_zone, exclude_zone,
         ),
         multipliers=tuple(weigher_multipliers),
         require_free_slot=bool(require_free_slot),
@@ -605,6 +673,8 @@ def sched_screen_topm(
     tile: int = TILE_HOSTS,
     churn=None,
     churn_threshold=None,
+    host_zone=None,
+    exclude_zone=None,
 ):
     """Top-M half of the split screen: score ``omega_ub`` against EXTERNAL
     packed constants (``consts``, e.g. mesh-merged) and fold the on-chip
@@ -612,6 +682,8 @@ def sched_screen_topm(
     same ordering contract as ``sched_screen``."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    if host_zone is None or exclude_zone is None:
+        host_zone = exclude_zone = None
     n = free_f.shape[0]
     if not 1 <= m_keep <= n:
         raise ValueError(f"m_keep={m_keep} out of range for {n} hosts")
@@ -623,6 +695,7 @@ def sched_screen_topm(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid,
             req_res, req_preemptible, req_domain, tile, churn,
+            host_zone, exclude_zone,
         ),
         jnp.asarray(consts, jnp.float32).reshape(1, N_CONSTS),
         multipliers=tuple(weigher_multipliers),

@@ -112,7 +112,7 @@ def test_queue_select_is_lexicographic_top_b(seed):
         if rng.random() < 0.7 and len(model) < cap:  # push
             klass = int(rng.integers(3))
             q, slot, ok = queue_push(
-                q, np.ones((d,), np.float32), False, -1, -1, -1.0, klass,
+                q, np.ones((d,), np.float32), False, -1, -1, -1.0, -1, klass,
                 float(next_seq), 1.0,
             )
             assert bool(ok)
@@ -142,11 +142,11 @@ def test_queue_push_overflow_rejects_not_displaces():
     q = queue_init(2, 1)
     for i in range(2):
         q, _, ok = queue_push(q, np.zeros((1,), np.float32), False, -1, -1,
-                              -1.0, 0, float(i), 1.0)
+                              -1.0, -1, 0, float(i), 1.0)
         assert bool(ok)
     before = np.asarray(q.seq).copy()
     q, _, ok = queue_push(q, np.zeros((1,), np.float32), False, -1, -1,
-                          -1.0, 0, 99.0, 1.0)
+                          -1.0, -1, 0, 99.0, 1.0)
     assert not bool(ok)  # full queue rejects the arrival…
     np.testing.assert_array_equal(np.asarray(q.seq), before)  # …untouched
 
@@ -418,7 +418,7 @@ def test_drained_queue_bit_exact_vs_oracle(seed):
                 py.hosts, k_slots=k, domain_ids=fleet.domain_ids,
                 slot_assignment=fleet.slot_assignment(),
             )
-            res, pre, dom, kind, period = fleet._req_arrays(areq)
+            res, pre, dom, kind, period, _excl = fleet._req_arrays(areq)
             _, (oh, oslot, ook, okill, _fb, _mg) = schedule_step(
                 ostate, res, pre, dom, dr.now, 1.0,
                 policy=policy, req_cost_kind=kind, req_period=period,

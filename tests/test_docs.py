@@ -40,6 +40,8 @@ def test_doc_files_exist():
     assert (REPO / "docs" / "architecture.md").is_file()
     assert (REPO / "docs" / "api.md").is_file()
     assert (REPO / "docs" / "admission.md").is_file()
+    assert (REPO / "docs" / "failure_domains.md").is_file()
+    assert (REPO / "docs" / "relocation.md").is_file()
     assert (REPO / "docs" / "tpu_validation.md").is_file()
 
 

@@ -1,0 +1,558 @@
+"""Relocation plane: hot-zone evacuation with hysteresis, bounded budgets,
+checkpoint-aware victim selection, and the never-worse guarantee.
+
+The contract under test, end to end:
+
+  * the zone-exclusion operand (``Request.exclude_zone`` →
+    ``req_exclude_zone``) yields BIT-IDENTICAL decisions across every
+    screen backend — pure jnp, fused Pallas (interpret mode), sharded
+    shard_map, and the sharded+fused split-phase kernel — all pinned to
+    the rebuild-from-python oracle, and never places into the excluded
+    zone;
+  * arming is hysteretic: a zone arms when its learned ẑ crosses
+    ``relocate_threshold``, disarms (entering a cooldown) only below the
+    lower ``relocate_exit_threshold``, and cannot re-arm inside the
+    cooldown window — no thrash;
+  * victim selection is checkpoint-aware: at most ``relocate_budget``
+    victims per zone per pass, highest expected loss (recompute since the
+    last checkpoint + remaining billing period) first;
+  * never-worse: a failed re-placement leaves its victim running,
+    backs the zone off exponentially, and counts as ``failed`` — and the
+    fleet conserves instances (nothing lost, duplicated, or double-billed)
+    after EVERY event of a randomized chaos schedule mixing churn regimes,
+    storms, streaming admission, and relocation passes.
+
+CI treats a skip of this file as a failure (see .github/workflows/ci.yml,
+multi-device job): the parity sweep below is the acceptance gate for the
+relocation plane's decision operand.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fleet_sharding import (
+    fleet_mesh,
+    pad_fleet_state,
+    padded_hosts,
+    shard_fleet_state,
+)
+from repro.core.jax_scheduler import build_fleet_state, schedule_step
+from repro.core.policy import SchedulerPolicy
+from repro.core.screen_math import CHURN_EPS
+from repro.core.simulator import SoASimulator, WorkloadSpec
+from repro.core.soa_fleet import SoAFleet
+from repro.core.types import VM_SPEC, Host, Instance, Request
+
+NOW = 500_000.0
+CAP = VM_SPEC.make(vcpus=8, ram_mb=16000, disk_gb=160)
+SIZES = [
+    VM_SPEC.make(vcpus=1, ram_mb=2000, disk_gb=20),
+    VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40),
+    VM_SPEC.make(vcpus=4, ram_mb=8000, disk_gb=80),
+]
+K = 8
+N_ZONES = 3
+
+
+def _zoned_hosts(n: int, n_zones: int = N_ZONES):
+    return [
+        Host(
+            name=f"h{i}", capacity=CAP, domain=f"dom{i % 2}",
+            zone=f"z{i % n_zones}",
+        )
+        for i in range(n)
+    ]
+
+
+def _reloc_policy(**kw):
+    kw.setdefault("cost_kind", "period")
+    kw.setdefault("relocate_threshold", 0.05)
+    return SchedulerPolicy(**kw)
+
+
+def _seed_churn(fleet, term, up):
+    """Overwrite the zone accumulators (ẑ = T / max(U, eps)) in place."""
+    fleet.state = dataclasses.replace(
+        fleet.state,
+        zone_term=jnp.asarray(term, jnp.float32),
+        zone_up=jnp.asarray(up, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1. exclusion-operand parity: jnp / fused / sharded / sharded+fused screens
+# ---------------------------------------------------------------------------
+
+
+def _filled_zoned_hosts(rng, n_hosts, fill=0.8):
+    hosts = _zoned_hosts(n_hosts)
+    iid = 0
+    for h in hosts:
+        while h.used().vec[0] < fill * CAP.vec[0]:
+            size = SIZES[int(rng.integers(3))]
+            if not size.fits_in(h.free_full):
+                break
+            pre = (
+                bool(rng.random() < 0.6)
+                and len(h.preemptible_instances()) < K
+            )
+            h.place(
+                Instance(
+                    id=f"x{iid}", resources=size, preemptible=pre,
+                    host=h.name,
+                    start_time=NOW - float(rng.integers(10, 500)) * 60.0,
+                )
+            )
+            iid += 1
+    return hosts
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_exclusion_decisions_bit_exact_across_screens(seed):
+    """The relocation operand through all four screen backends: for every
+    excluded zone (and the -1 no-exclusion sentinel) the full 6-tuple
+    decision — host, slot, ok, kill mask, shortlist-health signals — is
+    bitwise equal between the pure-jnp screen, the fused Pallas kernel
+    (interpret mode), the sharded shard_map screen, and the sharded screen
+    running the split-phase kernel per shard; a placed host is never in
+    the excluded zone; and with the sentinel the relocation-ON program
+    reproduces the relocation-OFF one bit-exactly (static gating)."""
+    rng = np.random.default_rng(seed)
+    n_hosts, m = 37, 8
+    hosts = _filled_zoned_hosts(rng, n_hosts)
+    zone_ids = {f"z{i}": i for i in range(N_ZONES)}
+    mesh = fleet_mesh()
+    state, _ = build_fleet_state(hosts, k_slots=K, zone_ids=zone_ids)
+    padded = pad_fleet_state(
+        state, padded_hosts(n_hosts, mesh.size, m_keep=m + 1)
+    )
+    sharded = shard_fleet_state(padded, mesh)
+    host_zone = np.asarray(padded.host_zone)
+
+    knobs = dict(cost_kind="period", shortlist=m, relocate_threshold=0.05)
+    paths = {
+        "jnp": (padded, SchedulerPolicy(**knobs, fused_screen=False)),
+        "fused": (padded, SchedulerPolicy(**knobs, fused_screen=True)),
+        "sharded": (sharded, SchedulerPolicy(**knobs, mesh=mesh)),
+        "split": (
+            sharded,
+            SchedulerPolicy(**knobs, mesh=mesh, fused_screen=True),
+        ),
+    }
+    off_policy = SchedulerPolicy(cost_kind="period", shortlist=m,
+                                 fused_screen=False)
+
+    step = 0
+    for excl in (-1, 0, 1, 2):
+        for pre in (True, False):
+            req = np.asarray(SIZES[step % 3].vec, np.float32)
+            now = NOW + 60.0 * step
+            outs = {}
+            for name, (st, pol) in paths.items():
+                _, outs[name] = schedule_step(
+                    st, req, pre, np.int32(-1), now, 1.0,
+                    policy=pol, donate=False,
+                    req_exclude_zone=np.int32(excl),
+                )
+            ref = outs["jnp"]
+            for name, got in outs.items():
+                for a, b in zip(ref, got):
+                    np.testing.assert_array_equal(
+                        np.asarray(a), np.asarray(b),
+                        err_msg=f"excl={excl} pre={pre}: {name} != jnp",
+                    )
+            h, _, ok = int(ref[0]), ref[1], bool(ref[2])
+            if ok and excl >= 0:
+                assert host_zone[h] != excl, (
+                    f"excl={excl} pre={pre}: placed into the excluded zone"
+                )
+            if excl < 0:
+                _, off = schedule_step(
+                    padded, req, pre, np.int32(-1), now, 1.0,
+                    policy=off_policy, donate=False,
+                )
+                for a, b in zip(ref, off):
+                    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            step += 1
+
+
+def test_split_phase_kernel_parity_with_exclusion():
+    """Kernel level: the split screen (``sched_screen_consts`` +
+    ``sched_screen_topm``) with the zone operands emits exactly the fused
+    single-kernel shortlist — scores, indices, and packed constants."""
+    from repro.kernels.sched_screen import (
+        sched_screen,
+        sched_screen_consts,
+        sched_screen_topm,
+    )
+
+    rng = np.random.default_rng(7)
+    n, k, d = 150, K, 3
+    a = dict(
+        free_f=rng.integers(0, 9, (n, d)).astype(np.float32),
+        free_n=rng.integers(2, 12, (n, d)).astype(np.float32),
+        schedulable=rng.random(n) < 0.9,
+        domain=rng.integers(0, 3, (n,)).astype(np.int32),
+        slow=rng.integers(1, 5, (n,)).astype(np.float32),
+        inst_res=rng.integers(0, 5, (n, k, d)).astype(np.float32),
+        inst_cost=(rng.integers(0, 60, (n, k)) * 60).astype(np.float32),
+        inst_valid=rng.random((n, k)) < 0.7,
+    )
+    host_zone = rng.integers(0, N_ZONES, (n,)).astype(np.int32)
+    args = (
+        a["free_f"], a["free_n"], a["schedulable"], a["domain"], a["slow"],
+        a["inst_res"], a["inst_cost"], a["inst_valid"],
+        np.asarray(SIZES[1].vec, np.float32), jnp.asarray(True),
+        jnp.asarray(-1, jnp.int32),
+    )
+    for excl in (-1, 0, 2):
+        kw = dict(
+            weigher_multipliers=(1.0, 1.0, 0.0, 0.0),
+            require_free_slot=True, interpret=True,
+            host_zone=host_zone, exclude_zone=np.int32(excl),
+        )
+        ref_s, ref_i, ref_c = sched_screen(*args, m_keep=33, **kw)
+        consts = sched_screen_consts(*args, **kw)
+        np.testing.assert_array_equal(np.asarray(consts), np.asarray(ref_c))
+        s, i = sched_screen_topm(*args, consts=consts, m_keep=33, **kw)
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(ref_s))
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ref_i))
+        if excl >= 0:
+            live = np.asarray(ref_s) > -1e29
+            assert not np.any(host_zone[np.asarray(ref_i)[live]] == excl)
+
+
+# ---------------------------------------------------------------------------
+# 2. hysteresis: arm above threshold, disarm below exit, cooldown gates re-arm
+# ---------------------------------------------------------------------------
+
+
+def test_hysteresis_arm_disarm_cooldown():
+    policy = _reloc_policy(relocate_threshold=0.05, relocate_cooldown_s=300.0)
+    assert policy.relocate_exit_threshold == pytest.approx(0.025)
+    fleet = SoAFleet(_zoned_hosts(4, 2), k_slots=K, policy=policy)
+    st = fleet.relocation
+
+    # hot z0 (ẑ = 0.1): arms on the first pass
+    _seed_churn(fleet, [10.0, 0.0], [100.0, 100.0])
+    fleet.relocate(10.0)
+    assert st.arms == 1 and fleet._reloc_zone["z0"].armed
+
+    # ẑ = 0.04 — between exit (0.025) and threshold (0.05): stays armed
+    _seed_churn(fleet, [4.0, 0.0], [100.0, 100.0])
+    fleet.relocate(20.0)
+    assert st.disarms == 0 and fleet._reloc_zone["z0"].armed
+
+    # ẑ = 0.01 < exit: disarms and starts the cooldown
+    _seed_churn(fleet, [1.0, 0.0], [100.0, 100.0])
+    fleet.relocate(30.0)
+    z = fleet._reloc_zone["z0"]
+    assert st.disarms == 1 and not z.armed
+    assert z.cooldown_until == pytest.approx(330.0)
+
+    # hot again INSIDE the cooldown: must not re-arm (no thrash)
+    _seed_churn(fleet, [10.0, 0.0], [100.0, 100.0])
+    fleet.relocate(100.0)
+    assert st.arms == 1 and not z.armed
+
+    # past the cooldown: re-arms
+    fleet.relocate(400.0)
+    assert st.arms == 2 and fleet._reloc_zone["z0"].armed
+
+    # the plane refuses to run on an off-policy (explicit, not silent)
+    off = SoAFleet(
+        _zoned_hosts(2, 2), k_slots=K,
+        policy=SchedulerPolicy(cost_kind="period"),
+    )
+    with pytest.raises(RuntimeError, match="relocation plane is off"):
+        off.relocate(0.0)
+
+
+# ---------------------------------------------------------------------------
+# 3. checkpoint-aware victim selection + per-pass budget
+# ---------------------------------------------------------------------------
+
+
+def _hot_cold_fleet(policy, n_hot=2, n_cold=2):
+    """n_hot hosts in z0 (hot), n_cold in z1 (cold, empty)."""
+    hosts = [
+        Host(name=f"hot{i}", capacity=CAP, zone="z0") for i in range(n_hot)
+    ] + [
+        Host(name=f"cold{i}", capacity=CAP, zone="z1") for i in range(n_cold)
+    ]
+    return SoAFleet(hosts, k_slots=K, policy=policy)
+
+
+def test_victims_ranked_by_expected_loss():
+    """Budget 1 must take the victim whose reclaim would cost the most —
+    the one whose last durable checkpoint is furthest behind."""
+    fleet = _hot_cold_fleet(_reloc_policy(relocate_budget=1))
+    ids = []
+    for i in range(2):
+        out = fleet.schedule_request(
+            Request(id=f"p{i}", resources=SIZES[0], preemptible=True),
+            now=0.0,
+        )
+        assert out.ok and out.host.startswith("hot")  # z0 wins the tie order
+        ids.append(out.instance.id)
+    # p0 checkpointed recently; p1 has 2000 s of unsaved work
+    assert fleet.checkpoint(ids[0], 1000.0)
+    _seed_churn(fleet, [10.0, 0.0], [100.0, 100.0])
+    fleet.relocate(2000.0)
+    assert fleet.relocation.relocated == 1
+    assert ids[1] in fleet.relocated_ids  # the stale-checkpoint victim moved
+    assert ids[0] in fleet.instances      # the fresh one stayed
+
+
+def test_budget_bounds_evacuations_per_pass():
+    fleet = _hot_cold_fleet(_reloc_policy(relocate_budget=2), n_hot=2, n_cold=4)
+    for i in range(6):
+        out = fleet.schedule_request(
+            Request(
+                id=f"p{i}", resources=SIZES[0], preemptible=True,
+                # pin arrivals onto the hot zone so the fixture is exact
+                metadata={},
+            ),
+            now=0.0,
+        )
+        assert out.ok
+    in_hot = sum(
+        1 for iid, (h, s) in fleet.locator.items()
+        if s is not None and fleet.zones[h] == "z0"
+    )
+    assert in_hot >= 4  # enough victims that the budget binds
+    _seed_churn(fleet, [10.0, 0.0], [100.0, 100.0])
+    fleet.relocate(100.0)
+    assert fleet.relocation.attempted == 2  # ≤ relocate_budget per pass
+    assert fleet.relocation.relocated == 2
+    # a second pass takes the next two — bounded, not starved
+    fleet.relocate(200.0)
+    assert fleet.relocation.attempted == 4
+
+
+# ---------------------------------------------------------------------------
+# 4. never-worse: failed re-placement leaves the victim, exponential backoff
+# ---------------------------------------------------------------------------
+
+
+def test_failed_replacement_leaves_victim_and_backs_off():
+    """All hosts share the hot zone, so every re-placement is rejected
+    (the source zone is hard-excluded): victims keep running, ``failed``
+    counts every attempt, and the zone's retry gate doubles per pass."""
+    policy = _reloc_policy(relocate_budget=1, relocate_backoff_s=30.0)
+    fleet = SoAFleet(
+        [Host(name=f"h{i}", capacity=CAP, zone="z0") for i in range(2)],
+        k_slots=K, policy=policy,
+    )
+    out = fleet.schedule_request(
+        Request(id="p", resources=SIZES[0], preemptible=True), now=0.0
+    )
+    assert out.ok
+    iid = out.instance.id
+    _seed_churn(fleet, [10.0], [100.0])
+    st = fleet.relocation
+
+    fleet.relocate(100.0)
+    assert st.attempted == 1 and st.failed == 1 and st.relocated == 0
+    assert iid in fleet.instances  # never-worse: the victim still runs
+    z = fleet._reloc_zone["z0"]
+    assert z.retry_at == pytest.approx(130.0)  # 100 + 30·2⁰
+
+    # inside the backoff window: the armed zone does NOT retry
+    fleet.relocate(110.0)
+    assert st.attempted == 1
+
+    # past the gate: retries, fails again, and the backoff doubles
+    fleet.relocate(130.0)
+    assert st.attempted == 2 and st.failed == 2
+    assert fleet._reloc_zone["z0"].retry_at == pytest.approx(190.0)  # 30·2¹
+
+    # checkpoint-before-place really ran (the never-worse ordering):
+    # the surviving victim's recompute clock was reset at the latest attempt
+    assert float(np.asarray(fleet.state.inst_ckpt).max()) == 130.0
+    # and the fleet still conserves: one live instance, nothing preempted
+    assert set(fleet.instances) == {iid} and not fleet.preempted
+
+
+def test_preempt_instance_contract():
+    """Out-of-band reclaim: already-gone ids are benign (False — storms and
+    relocations race); a live NORMAL instance is a caller bug (raise)."""
+    fleet = SoAFleet(_zoned_hosts(2, 2), k_slots=K,
+                     policy=SchedulerPolicy(cost_kind="period"))
+    assert fleet.preempt_instance("never-existed", now=1.0) is False
+    out = fleet.schedule_request(
+        Request(id="n", resources=SIZES[0], preemptible=False), now=0.0
+    )
+    assert out.ok
+    with pytest.raises(ValueError, match="not preemptible"):
+        fleet.preempt_instance(out.instance.id, now=1.0)
+    assert out.instance.id in fleet.instances  # untouched by the refusal
+
+
+def test_churn_snapshot_single_reader_matches_wrappers():
+    """``churn_snapshot`` is ONE fused device reduction; its two halves are
+    exactly what the legacy per-reader wrappers report."""
+    fleet = SoAFleet(_zoned_hosts(6, 3), k_slots=K,
+                     policy=SchedulerPolicy(cost_kind="period"))
+    _seed_churn(fleet, [3.0, 0.0, 7.0], [60.0, 0.0, 140.0])
+    rates, fleet_rate = fleet.churn_snapshot()
+    assert rates == fleet.zone_rates()
+    assert fleet_rate == fleet.fleet_churn_rate()
+    np.testing.assert_allclose(rates["z0"], 3.0 / 60.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        rates["z1"], np.float32(0.0) / CHURN_EPS, rtol=1e-6
+    )
+    np.testing.assert_allclose(fleet_rate, 10.0 / 200.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 5. chaos: conservation after every event, direct + streaming admission
+# ---------------------------------------------------------------------------
+
+
+def _assert_conserved(fleet):
+    """No instance lost, duplicated, or double-billed: the python mirror,
+    the locator, and the slot map agree; nothing is simultaneously live and
+    preempted; and materializing hosts re-places every instance without a
+    capacity violation (``Host.place`` raises on overflow)."""
+    assert set(fleet.instances) == set(fleet.locator)
+    slot_listed = {}
+    for h, row in enumerate(fleet.slot_ids):
+        for s, iid in enumerate(row):
+            if iid is not None:
+                assert iid not in slot_listed, f"{iid} in two slots"
+                slot_listed[iid] = (h, s)
+    pre_located = {
+        iid: loc for iid, loc in fleet.locator.items() if loc[1] is not None
+    }
+    assert slot_listed == pre_located
+    assert not {i.id for i in fleet.preempted} & set(fleet.instances)
+    fleet.sync_hosts()
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_relocation_chaos_conserves_after_every_event(seed):
+    """Randomized direct-mode chaos: arrivals (some carrying their own
+    ``exclude_zone``), departures, out-of-band storm preemptions, host
+    fail/heal, and periodic relocation passes — the conservation invariant
+    holds after EVERY event, excluded zones are honored, and the relocation
+    ledger balances (attempted = relocated + failed + lost + stale)."""
+    rng = np.random.default_rng(seed)
+    policy = _reloc_policy(
+        relocate_threshold=0.005, relocate_budget=3, relocate_backoff_s=20.0,
+        relocate_cooldown_s=100.0,
+    )
+    fleet = SoAFleet(_zoned_hosts(12, 3), k_slots=4, policy=policy)
+    now, live = 0.0, []
+    for step in range(250):
+        now += float(rng.integers(1, 60))
+        roll = rng.random()
+        if roll < 0.5:  # --------------------------------------------- arrival
+            excl = (
+                f"z{rng.integers(N_ZONES)}" if rng.random() < 0.2 else None
+            )
+            out = fleet.schedule_request(
+                Request(
+                    id=f"r{step}", resources=SIZES[int(rng.integers(3))],
+                    preemptible=bool(rng.random() < 0.7),
+                    exclude_zone=excl,
+                ),
+                now,
+            )
+            if out.ok:
+                if excl is not None:
+                    assert fleet.zones[fleet.index[out.host]] != excl
+                live.append(out.instance.id)
+        elif roll < 0.62 and live:  # ------------------------------- departure
+            iid = live.pop(int(rng.integers(len(live))))
+            fleet.depart(iid, now=now)  # may be already gone — idempotent
+        elif roll < 0.8:  # -------------------------- zone-correlated storm
+            zone = f"z{rng.integers(N_ZONES)}"
+            pre_ids = sorted(
+                i for i, (h, s) in fleet.locator.items()
+                if s is not None and fleet.zones[h] == zone
+            )
+            for iid in pre_ids[: int(rng.integers(1, 4))]:
+                assert fleet.preempt_instance(iid, now=now)
+        elif roll < 0.88:  # ---------------------------------------- fail/heal
+            name = f"h{rng.integers(12)}"
+            if bool(np.asarray(fleet.state.schedulable)[fleet.index[name]]):
+                fleet.fail_host(name, now=now)
+            else:
+                fleet.heal_host(name)
+        else:  # ------------------------------------------------ relocation
+            fleet.relocate(now)
+        _assert_conserved(fleet)
+
+    st = fleet.relocation
+    assert st.pending == 0  # direct mode settles synchronously
+    assert st.attempted == st.relocated + st.failed + st.lost_victims + st.stale
+    # the chaos actually exercised the plane
+    assert st.passes > 0 and st.attempted > 0
+    # every completed move is tracked for departure-id chasing
+    assert len(fleet.relocated_ids) >= st.relocated > 0
+
+
+def _storm_sim(relocate: bool, streaming: bool, seed: int = 11):
+    """PR 7's seeded storm regime: z2 oscillates through churn storms
+    (teaching ẑ), then one big storm sweeps it — with and without the
+    evacuation plane on top of the churn-aware policy."""
+    knobs = dict(
+        cost_kind="period", churn_multiplier=2.0, churn_threshold=1e-4,
+    )
+    if streaming:
+        knobs.update(queue_capacity=64, admit_batch=8, slo_target_s=30.0)
+    if relocate:
+        knobs.update(
+            relocate_threshold=1e-4, relocate_every_s=60.0,
+            relocate_budget=8, relocate_cooldown_s=600.0,
+        )
+    medium = VM_SPEC.make(vcpus=2, ram_mb=4000, disk_gb=40)
+    spec = WorkloadSpec(
+        arrival_rate_per_s=1 / 20.0,
+        preemptible_fraction=1.0,
+        flavors=(("medium", medium),),
+    )
+    sim = SoASimulator(
+        _zoned_hosts(12, 3), spec, seed=seed, k_slots=4,
+        policy=SchedulerPolicy(**knobs),
+    )
+    sim.inject_churn_regime(
+        "z2", until_s=4000.0, mean_on_s=300.0, mean_off_s=800.0,
+        storm_every_s=100.0, kill_frac=0.3, start_s=0.0,
+    )
+    sim.inject_zone_storm("z2", at_s=3500.0, kill_frac=1.0)
+    return sim
+
+
+@pytest.mark.parametrize("streaming", [False, True])
+def test_evacuation_reduces_storm_kills(streaming):
+    """Under the seeded storm regime the evacuated run loses no more
+    instances to storms than the aware-but-stationary one, actually moves
+    instances, never fails a user placement it would otherwise have made,
+    and conserves the fleet — in both direct and streaming admission
+    modes."""
+    base = _storm_sim(relocate=False, streaming=streaming)
+    m0 = base.run(4000.0)
+    evac = _storm_sim(relocate=True, streaming=streaming)
+    m1 = evac.run(4000.0)
+
+    assert m1.relocations > 0 and m1.relocation_passes > 0
+    assert m1.storm_kills <= m0.storm_kills
+    assert m1.failures_normal == 0
+    # with an all-preemptible workload and no host failures, storms are the
+    # only involuntary kill source: every preempted record is a storm kill
+    # (relocation moves are voluntary departures, never preemptions)
+    assert len(evac.fleet.preempted) == m1.storm_kills
+    _assert_conserved(evac.fleet)
+    st = evac.fleet.relocation
+    assert st.pending == 0  # the epilogue drain settled every in-flight move
+    assert st.attempted == st.relocated + st.failed + st.lost_victims + st.stale
+    # metrics fold mirrors the fleet ledger
+    assert m1.relocations == st.relocated
+    assert m1.relocation_failed == st.failed
+    assert m1.relocation_lost == st.lost_victims

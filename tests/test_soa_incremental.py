@@ -128,7 +128,7 @@ def test_incremental_matches_rebuild_over_randomized_events(seed, cost_fn):
                 slot_assignment=fleet.slot_assignment(),
                 zone_term=fleet.state.zone_term, zone_up=fleet.state.zone_up,
             )
-            res, pre, dom, kind, period = fleet._req_arrays(req)
+            res, pre, dom, kind, period, _excl = fleet._req_arrays(req)
             _, (oh, oslot, ook, okill, _fb, _mg) = schedule_step(
                 oracle, res, pre, dom, now, price,
                 policy=fleet.policy, req_cost_kind=kind, req_period=period,
