@@ -103,7 +103,9 @@ from repro.core.soa_fleet import SoAFleet
 from repro.core.types import VM_SPEC, Host, Instance, Request
 
 from .bench_fig2_latency import _packed_state
-from .common import NOW, SIZES, TINY, emit, time_call, write_bench_json
+from .common import (
+    NODE_CAP, NOW, SIZES, TINY, emit, time_call, write_bench_json,
+)
 
 MULT = (1.0, 1.0, 0.0, 0.0)
 M_KEEP = 65
@@ -506,6 +508,116 @@ def _fused(state, req_res, m_keep, interpret):
     )
 
 
+def _bench_scan() -> None:
+    """Scanned-simulator study: the whole event loop as ONE ``lax.scan``
+    dispatch (``core.scan_sim``) vs the python ``SoASimulator`` loop on the
+    identical ``EventTrace``, end to end.  Emits:
+
+      * ``screen_scan_python_n{N}`` / ``screen_scan_device_n{N}`` — wall
+        time for the same trace through both engines at 4096 and 65536
+        hosts (``eps=`` events/sec in derived).  The scanned engine must
+        be at least as fast at 4096 hosts (asserted when not TINY) —
+        the whole point of removing the per-event host<->device ping-pong;
+      * ``screen_scan_ensemble_n{N}_s{S}`` — the vmap Monte-Carlo harness:
+        S seeded trajectories in ONE dispatch (``tps=`` trajectories/sec).
+
+    Every run starts by checking the two engines agree exactly (counters +
+    placement sequence) on the smallest size — the bench doubles as the
+    tiny parity smoke CI runs with TINY=1."""
+    import time as _time
+
+    from repro.core.scan_sim import (
+        simulate_ensemble, simulate_scan, trace_from_workload,
+    )
+
+    policy = SchedulerPolicy()
+    spec = WorkloadSpec(
+        arrival_rate_per_s=1 / 8.0,
+        lifetime_min_s=300.0, lifetime_mean_s=1200.0, lifetime_max_s=2400.0,
+        preemptible_fraction=0.6,
+        flavors=tuple((f"f{i}", s) for i, s in enumerate(SIZES.values())),
+    )
+    duration = 800.0 if TINY else 3200.0
+    trace = trace_from_workload(
+        spec, duration, seed=7,
+        storms=((duration * 0.5, 0, 0.5),),
+        failures=((duration * 0.4, 1, duration * 0.2),),
+        checkpoint_every=4,
+    )
+    eps_by_n = {}
+    sizes = (128, 256) if TINY else (4096, 65536)
+    for i, n in enumerate(sizes):
+        hosts = [
+            Host(name=f"h{j}", capacity=NODE_CAP, zone=f"z{j % 3}")
+            for j in range(n)
+        ]
+        sim = SoASimulator(hosts, spec, seed=7, k_slots=8, policy=policy)
+        cap0 = sim.fleet._cap0_total
+        state0 = jax.tree_util.tree_map(
+            lambda a: jnp.asarray(np.asarray(a)), sim.fleet.state
+        )
+        t0 = _time.perf_counter()
+        m_py = sim.run_trace(trace)
+        py_us = (_time.perf_counter() - t0) * 1e6
+        res = simulate_scan(trace, policy, state0)  # compile + first run
+        t0 = _time.perf_counter()
+        res = simulate_scan(trace, policy, state0)
+        dev_us = (_time.perf_counter() - t0) * 1e6
+        if i == 0:
+            # the tiny differential smoke: both engines, same trace, equal
+            m_dev = res.sim_metrics(cap0)
+            for f in ("placed_normal", "placed_preemptible", "preemptions",
+                      "storms", "storm_kills"):
+                assert getattr(m_py, f) == getattr(m_dev, f), (
+                    f, getattr(m_py, f), getattr(m_dev, f)
+                )
+            assert np.array_equal(
+                np.stack([res.host, res.slot, res.ok.astype(np.int64),
+                          res.n_kill], axis=1),
+                sim.trace_outcomes,
+            ), "scanned-vs-python placement sequence diverged"
+        e = trace.n_events
+        eps_py, eps_dev = e / (py_us / 1e6), e / (dev_us / 1e6)
+        eps_by_n[n] = (eps_py, eps_dev)
+        emit(f"screen_scan_python_n{n}", py_us,
+             f"end_to_end;events={e};eps={eps_py:.0f}")
+        emit(f"screen_scan_device_n{n}", dev_us,
+             f"end_to_end;events={e};eps={eps_dev:.0f};"
+             f"speedup={eps_dev / eps_py:.2f}")
+    if not TINY:
+        eps_py, eps_dev = eps_by_n[4096]
+        assert eps_dev >= eps_py, (
+            f"scanned loop slower than python at 4096 hosts: "
+            f"{eps_dev:.0f} < {eps_py:.0f} events/s"
+        )
+
+    # the Monte-Carlo harness: S seeds, ONE dispatch
+    n = 128 if TINY else 1024
+    seeds = 8 if TINY else 32
+    hosts = [
+        Host(name=f"h{j}", capacity=NODE_CAP, zone=f"z{j % 3}")
+        for j in range(n)
+    ]
+    sim = SoASimulator(hosts, spec, seed=0, k_slots=8, policy=policy)
+    ens_duration = 400.0 if TINY else 1200.0
+    traces = [
+        trace_from_workload(spec, ens_duration, seed=s,
+                            storms=((ens_duration * 0.5, s % 3, 0.5),))
+        for s in range(seeds)
+    ]
+    lanes = simulate_ensemble(traces, policy, sim.fleet.state)  # compile
+    t0 = _time.perf_counter()
+    lanes = simulate_ensemble(traces, policy, sim.fleet.state)
+    ens_us = (_time.perf_counter() - t0) * 1e6
+    e_max = max(t.n_events for t in traces)
+    emit(
+        f"screen_scan_ensemble_n{n}_s{seeds}", ens_us,
+        f"one_dispatch;seeds={seeds};events={e_max};"
+        f"tps={seeds / (ens_us / 1e6):.2f};"
+        f"placed={sum(l.counters['placed_preemptible'] for l in lanes)}",
+    )
+
+
 def run() -> None:
     on_tpu = jax.default_backend() == "tpu"
     n = 512 if TINY else 65536
@@ -587,6 +699,7 @@ def run() -> None:
     _bench_sustained()
     # Failure-domain storm study: churn-aware vs churn-blind (PR 7).
     _bench_storm()
+    _bench_scan()
     write_bench_json("screen")
 
 

@@ -424,12 +424,15 @@ def _stage1_rows(
     return valid, cost_lb, cost_ub, raw
 
 
-def _base_of(mult, raw, consts: ScreenConsts) -> jax.Array:
+def _base_of(mult, raw, consts: ScreenConsts, gates=None) -> jax.Array:
     """``base_from_consts`` over a 3- or 4-entry ``raw`` tuple (the 4th is
-    the churn term) — the one unpacking every assembly site shares."""
+    the churn term) — the one unpacking every assembly site shares.
+    ``gates`` = the static multipliers when ``mult`` carries traced
+    per-lane values (ensemble axis); None gates on ``mult`` itself."""
     churn_raw = raw[3] if len(raw) > 3 else None
     return base_from_consts(
-        mult, raw[0], raw[1], raw[2], consts, churn_raw=churn_raw
+        mult, raw[0], raw[1], raw[2], consts, churn_raw=churn_raw,
+        gates=gates,
     )
 
 
@@ -630,6 +633,7 @@ def _decision_core(
     churn: Optional[jax.Array] = None,
     host_zone: Optional[jax.Array] = None,
     exclude_zone: Optional[jax.Array] = None,
+    mult_val: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
     """The two-stage decision pipeline on raw SoA arrays (shared by the
     rebuild path, the persistent fast path, and the batched ``lax.scan``
@@ -702,13 +706,31 @@ def _decision_core(
         exclude_zone = None
     mult = policy.all_multipliers if churn_on else policy.weigher_multipliers
     thr = policy.churn_threshold if churn_on else None
+    # Ensemble multiplier axis: ``mult_val`` carries traced per-lane weigher
+    # values (a (5,) f32 vector under vmap); the STATIC policy multipliers
+    # keep their role as compile-time term gates (``gates``), so lanes share
+    # one program whose included terms — and the termination-cost bound side
+    # (`opt_cost`) — are fixed by the policy while the arithmetic rides the
+    # lane values.  ``mult_val=None`` (every pre-existing caller) compiles
+    # the exact unchanged program.
+    gates = mult
+    if mult_val is not None:
+        mult = tuple(mult_val[i] for i in range(len(gates)))
     m_term = mult[1]
+    m_term_gate = gates[1]
     use_mesh = (
         mesh is not None
         and m_cand > 0
         and n_hosts % mesh.size == 0
         and n_hosts // mesh.size >= m_cand + 1
     )
+    if mult_val is not None and (use_mesh or fused_screen):
+        raise NotImplementedError(
+            "traced multiplier values (ensemble axis) are not supported on "
+            "the mesh/fused-screen stage-1 paths — those close the static "
+            "multipliers over shard_map / the Pallas kernel; run the "
+            "ensemble with fused_screen=False and mesh=None"
+        )
 
     def stage1_of(free_f, free_n, schedulable, domain, slow, inst_res,
                   inst_cost, inst_valid, churn=None, host_zone=None):
@@ -736,15 +758,16 @@ def _decision_core(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid, churn, host_zone,
         )
-        consts = consts_of(mult, valid, cost_lb, cost_ub, *raw)
-        base = _base_of(mult, raw, consts)
+        consts = consts_of(gates, valid, cost_lb, cost_ub, *raw)
+        base = _base_of(mult, raw, consts, gates=gates)
         ispan = inv_span(consts.c_lo, consts.c_hi)
         best_cost, best_mask, _ = _plan_terms(use_pallas)(
             free_f, inst_res, inst_cost, inst_valid, req_res, masks
         )
         best_cost = jnp.where(req_preemptible, 0.0, best_cost)
         best_mask = jnp.where(req_preemptible, 0, best_mask)
-        omega = omega_of(best_cost, base, valid, consts, ispan, m_term)
+        omega = omega_of(best_cost, base, valid, consts, ispan, m_term,
+                         gate=m_term_gate)
         host_idx = jnp.argmax(omega).astype(jnp.int32)
         return host_idx, best_mask[host_idx], omega[host_idx] > NEG_INF / 2
 
@@ -784,7 +807,7 @@ def _decision_core(
             churn[cand] if churn_on else None,
             host_zone[cand] if zone_on else None,
         )
-        base_c = _base_of(mult, raw_c, consts)
+        base_c = _base_of(mult, raw_c, consts, gates=gates)
     elif fused_screen:
         # One fused pass over the fleet; only the (M+1,) shortlist and the 10
         # normalization scalars come back.  Entry M is the best omega_ub
@@ -816,17 +839,21 @@ def _decision_core(
             churn[cand] if churn_on else None,
             host_zone[cand] if zone_on else None,
         )
-        base_c = _base_of(mult, raw_c, consts)
+        base_c = _base_of(mult, raw_c, consts, gates=gates)
     else:
         valid, cost_lb, cost_ub, raw = stage1_of(
             free_f, free_n, schedulable, domain, slow,
             inst_res, inst_cost, inst_valid, churn, host_zone,
         )
-        consts = consts_of(mult, valid, cost_lb, cost_ub, *raw)
-        base = _base_of(mult, raw, consts)
+        consts = consts_of(gates, valid, cost_lb, cost_ub, *raw)
+        base = _base_of(mult, raw, consts, gates=gates)
         ispan_ub = inv_span(consts.c_lo, consts.c_hi)
-        opt_cost = cost_lb if m_term >= 0 else cost_ub
-        omega_ub = omega_of(opt_cost, base, valid, consts, ispan_ub, m_term)
+        # Bound side chosen by the STATIC sign: ensemble lanes must keep the
+        # policy's sign so omega_ub stays an upper bound (validated by
+        # scan_sim.simulate_ensemble before any lane runs).
+        opt_cost = cost_lb if m_term_gate >= 0 else cost_ub
+        omega_ub = omega_of(opt_cost, base, valid, consts, ispan_ub, m_term,
+                            gate=m_term_gate)
         # NOTE: top_k(M) + a masked argmax for the (u, j_u) witness, NOT the
         # seemingly cleaner top_k(M+1) whose entry M is the same witness:
         # XLA CPU only rewrites top_k into its fast TopK custom-call for
@@ -847,7 +874,8 @@ def _decision_core(
     )
     bc_s = jnp.where(req_preemptible, 0.0, bc_s)
     bm_s = jnp.where(req_preemptible, 0, bm_s)
-    omega_s = omega_of(bc_s, base_c, valid_c, consts, ispan, m_term)  # (M,)
+    omega_s = omega_of(bc_s, base_c, valid_c, consts, ispan, m_term,
+                       gate=m_term_gate)  # (M,)
     best_val = jnp.max(omega_s)
     # Winner = lowest ORIGINAL index among exact-score ties (what the full
     # path's argmax-first-hit does over the whole fleet).
@@ -869,8 +897,11 @@ def _decision_core(
     # pad the strict branch by that margin; the exact-tie branch keeps the
     # fast path for mass-tied fleets (see module docstring for the residual
     # ulp-tie caveat on non-integer inputs).
-    if m_term:
-        tol = abs(m_term) * ispan * (3.0 * k * 1.2e-7) * jnp.maximum(
+    if m_term_gate:
+        # python ``abs`` for the static program (constant-folded as before);
+        # jnp.abs when the lane value is a tracer.
+        m_abs = abs(m_term) if mult_val is None else jnp.abs(m_term)
+        tol = m_abs * ispan * (3.0 * k * 1.2e-7) * jnp.maximum(
             jnp.abs(consts.c_hi), jnp.abs(consts.c_lo)
         )
     else:
@@ -1315,7 +1346,7 @@ def _apply_decision(
 def _step_core(
     state: SoAFleetState,
     req_res, req_preemptible, req_domain, now, price, req_cost_kind,
-    req_period, policy: SchedulerPolicy, req_exclude=None,
+    req_period, policy: SchedulerPolicy, req_exclude=None, mult_val=None,
 ):
     inst_cost = fleet_slot_costs(state, now, policy)
     # The learned per-host churn rate ẑ is derived from the zone T/U
@@ -1332,7 +1363,7 @@ def _step_core(
         req_res, req_preemptible, req_domain,
         policy, require_free_slot=True, churn=churn,
         host_zone=state.host_zone if req_exclude is not None else None,
-        exclude_zone=req_exclude,
+        exclude_zone=req_exclude, mult_val=mult_val,
     )
     state, slot, kill = _apply_decision(
         state, host_idx, mask_idx, ok, req_res, req_preemptible, now, price,
@@ -1474,6 +1505,86 @@ def schedule_many(
         jnp.asarray(req_cost_kind, jnp.int32),
         jnp.asarray(req_period, jnp.float32),
         jnp.asarray(req_exclude_zone, jnp.int32), policy=policy,
+    )
+
+
+def _reloc_entry(state, v_host, v_slot, v_on, req_res, req_domain,
+                 req_cost_kind, req_period, req_price, req_exclude, now,
+                 *, policy):
+    k = state.inst_valid.shape[1]
+    slot_ids = jnp.arange(k)
+
+    def body(st, xs):
+        vh, vs, on, res, dom, kind, period, price, excl = xs
+        # 1. checkpoint FIRST (never-worse: the replacement restarts from
+        #    here, and a storm racing the move loses only the work since
+        #    this instant) — gated on `on` so padding rows are no-ops.
+        row = jnp.where((slot_ids == vs) & on, now, st.inst_ckpt[vh])
+        st = dataclasses.replace(st, inst_ckpt=st.inst_ckpt.at[vh].set(row))
+        # 2. re-place through the ordinary pipeline, source zone excluded.
+        st, (h, s, ok, _kill, fb, mg) = _step_core(
+            st, res, jnp.asarray(True), dom, now, price, kind, period,
+            policy, req_exclude=excl,
+        )
+        # 3. make-before-break: the victim departs only once its
+        #    replacement is live (voluntary — a move is not churn, so the
+        #    source zone's T numerator is untouched while U still accrues).
+        mask = (slot_ids == vs) & on & ok
+        st = apply_termination(st, vh, mask, now=now, involuntary=False)
+        return st, (h, s, ok, fb, mg)
+
+    return jax.lax.scan(
+        body, state,
+        (v_host, v_slot, v_on, req_res, req_domain, req_cost_kind,
+         req_period, req_price, req_exclude),
+    )
+
+
+_reloc_donated = functools.partial(
+    jax.jit, static_argnames=_STEP_STATICS, donate_argnums=(0,)
+)(_reloc_entry)
+_reloc_kept = functools.partial(jax.jit, static_argnames=_STEP_STATICS)(_reloc_entry)
+
+
+def relocate_many(
+    state: SoAFleetState,
+    v_host: jax.Array,        # (B,) int32 — victim host index
+    v_slot: jax.Array,        # (B,) int32 — victim slot on that host
+    v_on: jax.Array,          # (B,) bool  — False = padding row (full no-op)
+    req_res: jax.Array,       # (B, D) — replacement request sizes
+    req_domain: jax.Array,    # (B,) int32; -1 = any
+    req_cost_kind: jax.Array,  # (B,) int32 kind ids; -1 = policy default
+    req_period: jax.Array,    # (B,) float32; -1 = policy default
+    req_price: jax.Array,     # (B,) float32 — the victim's price rate
+    req_exclude_zone: jax.Array,  # (B,) int32 — the source zone, hard-excluded
+    now: jax.Array,           # () float — one relocation pass instant
+    policy: Optional[SchedulerPolicy] = None,
+    donate: Optional[bool] = None,
+) -> Tuple[SoAFleetState, Tuple[jax.Array, ...]]:
+    """One evacuation batch as ONE fused ``lax.scan`` dispatch: per victim,
+    checkpoint → re-place (zone-excluded, always preemptible) → terminate
+    the victim iff its replacement landed — the exact op sequence the
+    per-victim ``schedule_step`` loop ran, so decisions are bit-identical
+    to sequential evacuation while the dispatch count drops from one per
+    victim to one per zone batch (the PR-8 follow-up).
+
+    Returns ``(state', (host_idx (B,), slot (B,), ok (B,), fell_back (B,),
+    margin (B,)))``; replacement requests are preemptible so they never
+    kill (no ``kill`` column).  Padding rows (``v_on=False`` + sentinel
+    unsatisfiable ``req_res``) leave the carried state bitwise untouched,
+    exactly like ``schedule_many``'s padding."""
+    policy = ensure_policy(policy, "relocate_many")
+    if donate is None:
+        donate = policy.donate
+    fn = _reloc_donated if donate else _reloc_kept
+    return fn(
+        state, jnp.asarray(v_host, jnp.int32), jnp.asarray(v_slot, jnp.int32),
+        jnp.asarray(v_on, bool), req_res, jnp.asarray(req_domain, jnp.int32),
+        jnp.asarray(req_cost_kind, jnp.int32),
+        jnp.asarray(req_period, jnp.float32),
+        jnp.asarray(req_price, jnp.float32),
+        jnp.asarray(req_exclude_zone, jnp.int32),
+        jnp.asarray(now, jnp.float32), policy=policy,
     )
 
 

@@ -279,20 +279,30 @@ def base_from_consts(
     strag_raw: jax.Array,
     consts: ScreenConsts,
     churn_raw: jax.Array = None,
+    gates: Tuple[float, ...] = None,
 ) -> jax.Array:
     """Enumeration-free weigher terms, summed in the ONE fixed order every
     path shares (bit-exact parity requires identical float ops); the churn
-    term is added LAST so churn-off programs are unchanged."""
+    term is added LAST so churn-off programs are unchanged.
+
+    ``gates`` splits compile-time term selection from the arithmetic values:
+    the scanned ensemble (``scan_sim.simulate_ensemble``) vmaps over a
+    traced multiplier axis, so the term gates come from the STATIC policy
+    (``gates``) while the per-lane values ride in ``multipliers``.  The
+    default (``gates=None``) gates on ``multipliers`` itself — the exact
+    pre-ensemble program."""
+    if gates is None:
+        gates = multipliers
     m_over, _, m_pack, m_strag = multipliers[:4]
     m_churn = _m_churn(multipliers)
     base = jnp.zeros_like(over_raw)
-    if m_over:
+    if gates[0]:
         base = base + m_over * norm01(over_raw, consts.over_lo, consts.over_hi)
-    if m_pack:
+    if gates[2]:
         base = base + m_pack * norm01(pack_raw, consts.pack_lo, consts.pack_hi)
-    if m_strag:
+    if gates[3]:
         base = base + m_strag * norm01(strag_raw, consts.strag_lo, consts.strag_hi)
-    if m_churn and churn_raw is not None:
+    if _m_churn(gates) and churn_raw is not None:
         base = base + m_churn * norm01(churn_raw, consts.churn_lo, consts.churn_hi)
     return base
 
@@ -304,13 +314,18 @@ def omega_of(
     consts: ScreenConsts,
     ispan: jax.Array,
     m_term: float,
+    gate: float = None,
 ) -> jax.Array:
     """Total weigher score: base terms + the termination-cost weigher
     normalized with the *bound-derived* constants (not the enumerated costs'
     min/max) — computable in O(N·K), which is what lets stage 2 skip the
-    enumeration for every non-shortlisted host while staying bit-exact."""
+    enumeration for every non-shortlisted host while staying bit-exact.
+
+    ``gate`` plays the same role as ``base_from_consts``'s ``gates``: the
+    static include-the-term decision when ``m_term`` itself is traced
+    (ensemble multiplier axis); ``None`` gates on ``m_term``."""
     w = base
-    if m_term:
+    if m_term if gate is None else gate:
         w = w + m_term * ((consts.c_hi - jnp.minimum(best_cost, POS_INF)) * ispan)
     return jnp.where(valid, w, NEG_INF)
 

@@ -407,6 +407,145 @@ class SoASimulator:
         self._min_dep = float("inf")
         return failed_normal
 
+    # -- pre-materialized trace replay (core.scan_sim oracle) ------------------
+    def run_trace(self, trace, sample_every_s: float = 300.0) -> SimMetrics:
+        """Replay an ``EventTrace`` (``core.scan_sim``) through the python
+        event loop — the differential oracle the scanned simulator is pinned
+        against.  Same flush/sample discipline as ``run``, but events come
+        from the trace rows in index order instead of the heap/rng, so the
+        two engines process the identical stream.
+
+        Returns ``SimMetrics``; per-arrival outcomes land in
+        ``self.trace_outcomes`` as ``(host_idx, slot, ok, n_victims)``
+        rows aligned with the trace's arrival rows (-1/-1/False/0 for
+        non-arrival rows), mirroring ``ScanResult.host/slot/ok/n_kill``.
+        """
+        from . import scan_sim as ss
+
+        fleet = self.fleet
+        if fleet.admission is not None:
+            raise NotImplementedError(
+                "run_trace: streaming admission mode is not trace-replayable"
+            )
+        if fleet.policy.relocation_on:
+            raise NotImplementedError(
+                "run_trace: the relocation plane rewrites instance ids "
+                "mid-trace; run it via SoASimulator.run"
+            )
+        e = trace.n_events
+        inv_dom = {i: name for name, i in fleet.domain_ids.items()}
+        #: arrival row -> live instance id (None = rejected / never placed)
+        iids: List[Optional[str]] = [None] * e
+        self.trace_outcomes = np.full((e, 4), -1, np.int64)
+        self.trace_outcomes[:, 2:] = 0
+        pending: List[int] = []  # buffered arrival row indices
+        next_sample = 0.0
+
+        def flush() -> None:
+            items = []
+            for row in pending:
+                req = self._trace_request(trace, row, inv_dom)
+                items.append((req, float(trace.time[row]), float(trace.price[row])))
+            outcomes = fleet.schedule_batch(items)
+            for row, out in zip(pending, outcomes):
+                self.metrics.preemptions += len(out.victims)
+                ok = out.ok
+                pre = bool(trace.preemptible[row])
+                if ok:
+                    iids[row] = out.instance.id
+                    h = fleet.index[out.instance.host]
+                    s = out.instance.metadata.get("slot", -1)
+                    self.trace_outcomes[row] = (h, s, 1, len(out.victims))
+                    if pre:
+                        self.metrics.placed_preemptible += 1
+                    else:
+                        self.metrics.placed_normal += 1
+                else:
+                    self.trace_outcomes[row] = (-1, -1, 0, len(out.victims))
+                    if pre:
+                        self.metrics.failures_preemptible += 1
+                    else:
+                        self.metrics.failures_normal += 1
+            pending.clear()
+
+        for row in range(e):
+            kind = int(trace.kind[row])
+            t = float(trace.time[row])
+            if pending and (
+                kind != ss.ARRIVAL
+                or t >= next_sample
+                or len(pending) >= self.batch_max
+            ):
+                flush()
+            self.now = t
+            if self.now >= next_sample:
+                self._sample()
+                next_sample = self.now + sample_every_s
+            if kind == ss.ARRIVAL:
+                pending.append(row)
+            elif kind == ss.DEPARTURE:
+                iid = iids[int(trace.inst_id[row])]
+                if iid is not None:
+                    fleet.depart(self._depart_id(iid), now=self.now)
+            elif kind == ss.FAIL_HOST:
+                fleet.fail_host(fleet.names[int(trace.host[row])], now=self.now)
+            elif kind == ss.HEAL_HOST:
+                fleet.heal_host(fleet.names[int(trace.host[row])])
+            elif kind == ss.CHECKPOINT:
+                iid = iids[int(trace.inst_id[row])]
+                if iid is not None:
+                    fleet.checkpoint(iid, now=self.now)
+            elif kind == ss.ZONE_STORM:
+                self._trace_storm(
+                    int(trace.zone[row]), float(trace.frac[row])
+                )
+        if pending:
+            flush()
+        self._sample()
+        return self.metrics
+
+    def _trace_request(self, trace, row: int, inv_dom) -> Request:
+        from .policy import COST_KINDS
+
+        kind_id = int(trace.cost_kind[row])
+        period = float(trace.period[row])
+        dom_id = int(trace.domain[row])
+        prio = int(trace.priority[row])
+        return Request(
+            id=f"e{row}",
+            resources=Resources(self.fleet.spec, np.asarray(trace.res[row])),
+            preemptible=bool(trace.preemptible[row]),
+            domain=None if dom_id < 0 else inv_dom[dom_id],
+            cost_kind=None if kind_id < 0 else COST_KINDS[kind_id],
+            period=None if period <= 0 else period,
+            priority=None if prio < 0 else prio,
+        )
+
+    def _trace_storm(self, zone_id: int, kill_frac: float) -> int:
+        """Deterministic storm used by trace replay (no rng, unlike
+        ``_zone_storm``): kill the ``n`` lowest ``(host, slot)``-indexed
+        live preemptible slots of the zone, ``n = min(max(1,
+        round_f32(count * frac)), count)`` — the exact rule the scanned
+        simulator's storm branch computes on device."""
+        fleet = self.fleet
+        victims = sorted(
+            (h, slot, iid)
+            for iid, (h, slot) in fleet.locator.items()
+            if slot is not None and fleet.zone_ids[fleet.zones[h]] == zone_id
+        )
+        self.metrics.storms += 1
+        if not victims:
+            return 0
+        n = min(
+            max(1, int(np.round(np.float32(len(victims)) * np.float32(kill_frac)))),
+            len(victims),
+        )
+        killed = 0
+        for h, slot, iid in victims[:n]:
+            killed += bool(fleet.preempt_instance(iid, now=self.now))
+        self.metrics.storm_kills += killed
+        return killed
+
     # -- streaming admission mode (policy.queue_capacity > 0) ------------------
     def _run_streaming(
         self,

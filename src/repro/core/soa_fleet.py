@@ -34,6 +34,7 @@ from .jax_scheduler import (
     apply_termination,
     build_fleet_state,
     jax_cost_params,  # noqa: F401  (back-compat re-export)
+    relocate_many,
     schedule_many,
     schedule_step,
     set_schedulable,
@@ -598,6 +599,9 @@ class SoAFleet:
             assert self.slot_ids[host_idx][slot] is None, "slot collision"
             self.slot_ids[host_idx][slot] = inst.id
             self.locator[inst.id] = (host_idx, slot)
+            # survives the locator entry (an in-batch preemption may reap
+            # this instance before the caller reads the outcome)
+            inst.metadata["slot"] = int(slot)
         else:
             self.locator[inst.id] = (host_idx, None)
         return SoAOutcome(
@@ -792,7 +796,16 @@ class SoAFleet:
         return started
 
     def _evacuate_zone(self, zone: str, now: float) -> int:
-        """Evacuate one armed zone's worst-loss victims (≤ budget)."""
+        """Evacuate one armed zone's worst-loss victims (≤ budget).
+
+        Direct (unqueued) mode runs the whole batch as ONE fused
+        ``relocate_many`` dispatch — per victim checkpoint → re-place →
+        terminate in the exact sequence the old per-victim
+        ``schedule_request`` loop applied, so decisions are bit-identical
+        while the dispatch count drops from one per victim to one per zone
+        (``tests/test_relocation.py`` pins both).  With the admission plane
+        on, victims still ride the queue one entry each and settle at the
+        drain that decides them."""
         pol = self.policy
         st = self.relocation
         budget = min(pol.relocate_budget, self.state.n_hosts * self.k_slots)
@@ -803,6 +816,7 @@ class SoAFleet:
         hosts, slots = np.asarray(hosts), np.asarray(slots)
         valid = np.asarray(valid)
         started = 0
+        batch: List[Tuple[str, int, int, Instance, Request]] = []
         for h, s, v in zip(hosts, slots, valid):
             if not v:
                 continue
@@ -812,9 +826,6 @@ class SoAFleet:
                 continue  # already mid-flight from an earlier pass
             inst = self.instances[iid]
             st.attempted += 1
-            # Checkpoint FIRST: the replacement restarts from here, and a
-            # storm racing the move loses only the work since this instant.
-            self.checkpoint(iid, now)
             req = Request(
                 id=f"reloc-{iid}",
                 resources=inst.resources,
@@ -827,6 +838,9 @@ class SoAFleet:
                 metadata={"relocation": iid},
             )
             if self.admission is not None:
+                # Checkpoint FIRST: the replacement restarts from here, and
+                # a storm racing the move loses only the work since now.
+                self.checkpoint(iid, now)
                 self.admission.submit_relocation(
                     req, iid, zone, now, price=inst.price_rate
                 )
@@ -834,12 +848,72 @@ class SoAFleet:
                 st.pending += 1
                 started += 1
             else:
-                out = self.schedule_request(req, now, price=inst.price_rate)
-                if out.ok:
-                    self._settle_relocation_placed(iid, zone, out, now)
-                    started += 1
-                else:
-                    self._settle_relocation_rejected(iid, zone, now)
+                # Mirror half of the checkpoint now; the device half runs
+                # inside the fused scan (gated per row), keeping the
+                # checkpoint→place→kill order per victim.
+                inst.last_checkpoint = now
+                batch.append((iid, int(h), int(s), inst, req))
+        if batch:
+            started += self._relocate_batch(zone, batch, now)
+        return started
+
+    def _relocate_batch(
+        self,
+        zone: str,
+        batch: List[Tuple[str, int, int, Instance, Request]],
+        now: float,
+    ) -> int:
+        """Direct-mode settle of one fused ``relocate_many`` dispatch."""
+        b = len(batch)
+        padded = max(4, 1 << (b - 1).bit_length())
+        d = len(self.spec.dims)
+        vh = np.zeros((padded,), np.int32)
+        vs = np.zeros((padded,), np.int32)
+        von = np.zeros((padded,), bool)
+        res = np.full((padded, d), _PAD_RES, np.float32)
+        dom = np.full((padded,), -1, np.int32)
+        kind = np.full((padded,), -1, np.int32)
+        period = np.full((padded,), -1.0, np.float32)
+        price = np.ones((padded,), np.float32)
+        excl = np.full((padded,), -1, np.int32)
+        for i, (iid, h, s, inst, req) in enumerate(batch):
+            (res[i], _, dom[i], kind[i], period[i],
+             excl[i]) = self._req_arrays(req)
+            vh[i], vs[i], von[i] = h, s, True
+            price[i] = inst.price_rate
+        self.state, (host_idx, slot, ok, fell_back, margin) = relocate_many(
+            self.state, vh, vs, von, res, dom, kind, period, price, excl,
+            now, policy=self._flush_policy(),
+        )
+        host_idx, slot = np.asarray(host_idx), np.asarray(slot)
+        ok = np.asarray(ok)
+        fb = np.asarray(fell_back)[:b]
+        mg = np.asarray(margin)[:b]
+        self._observe(int(fb.sum()), float(mg.min()), b)
+        st = self.relocation
+        z = self._reloc_zone.setdefault(zone, _ZoneReloc())
+        no_kill = np.zeros((self.k_slots,), bool)
+        started = 0
+        for i, (iid, h, s, inst, req) in enumerate(batch):
+            if bool(ok[i]):
+                out = self._absorb(
+                    req, now, inst.price_rate,
+                    int(host_idx[i]), int(slot[i]), True, no_kill,
+                )
+                # The fused scan already departed the victim on device
+                # (make-before-break, voluntary); fold the mirror here —
+                # the python half of ``_settle_relocation_placed`` minus
+                # the device transition.  Direct mode is single-threaded,
+                # so the lost/stale races of the queued path cannot occur.
+                self.instances.pop(iid)
+                del self.locator[iid]
+                self.slot_ids[h][s] = None
+                self.relocated_ids[iid] = out.instance.id
+                st.relocated += 1
+                z.fail_streak = 0
+                started += 1
+            else:
+                self._settle_relocation_rejected(iid, zone, now)
         return started
 
     def _settle_relocation_placed(

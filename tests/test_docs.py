@@ -42,6 +42,7 @@ def test_doc_files_exist():
     assert (REPO / "docs" / "admission.md").is_file()
     assert (REPO / "docs" / "failure_domains.md").is_file()
     assert (REPO / "docs" / "relocation.md").is_file()
+    assert (REPO / "docs" / "scan_sim.md").is_file()
     assert (REPO / "docs" / "tpu_validation.md").is_file()
 
 

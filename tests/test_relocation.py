@@ -556,3 +556,94 @@ def test_evacuation_reduces_storm_kills(streaming):
     assert m1.relocations == st.relocated
     assert m1.relocation_failed == st.failed
     assert m1.relocation_lost == st.lost_victims
+
+
+# ---------------------------------------------------------------------------
+# 7. batched victim re-placement: one fused dispatch, decisions bit-exact
+# ---------------------------------------------------------------------------
+def test_batched_evacuation_one_dispatch_bit_exact(monkeypatch):
+    """Direct-mode evacuation must run the whole victim batch as ONE
+    ``relocate_many`` dispatch (no per-victim ``schedule_request``), and
+    the fused scan's decisions must be bit-identical to the old
+    per-victim checkpoint → re-place → terminate loop replayed
+    sequentially on a clone fleet."""
+    import repro.core.soa_fleet as sf
+
+    policy = _reloc_policy(relocate_budget=4)
+
+    def build():
+        fleet = _hot_cold_fleet(policy, n_hot=2, n_cold=4)
+        ids = []
+        for i in range(6):
+            out = fleet.schedule_request(
+                Request(id=f"p{i}", resources=SIZES[i % 2], preemptible=True),
+                now=0.0,
+            )
+            assert out.ok
+            ids.append(out.instance.id)
+        # stagger checkpoints so the loss ranking is nontrivial
+        assert fleet.checkpoint(ids[0], 900.0)
+        assert fleet.checkpoint(ids[2], 400.0)
+        _seed_churn(fleet, [10.0, 0.0], [100.0, 100.0])
+        return fleet, ids
+
+    fleet, _ = build()
+    calls = {"batch": 0, "per_victim": 0}
+    real_many = sf.relocate_many
+
+    def counting_many(*a, **kw):
+        calls["batch"] += 1
+        return real_many(*a, **kw)
+
+    real_sr = SoAFleet.schedule_request
+
+    def counting_sr(self, *a, **kw):
+        calls["per_victim"] += 1
+        return real_sr(self, *a, **kw)
+
+    monkeypatch.setattr(sf, "relocate_many", counting_many)
+    monkeypatch.setattr(SoAFleet, "schedule_request", counting_sr)
+    now = 2000.0
+    fleet.relocate(now)
+    monkeypatch.undo()
+    assert calls["batch"] == 1, "evacuation must be one fused dispatch"
+    assert calls["per_victim"] == 0, "no per-victim dispatches allowed"
+    assert fleet.relocation.attempted == 4
+    assert fleet.relocation.relocated > 0
+
+    # sequential oracle: the old loop, one victim at a time
+    oracle, _ = build()
+    hosts, slots, valid = sf._relocation_victims(
+        oracle.state, jnp.int32(oracle.zone_ids["z0"]), jnp.float32(now),
+        jnp.float32(policy.period), budget=4,
+    )
+    moved = {}
+    for h, s, v in zip(np.asarray(hosts), np.asarray(slots), np.asarray(valid)):
+        if not v:
+            continue
+        iid = oracle.slot_ids[int(h)][int(s)]
+        inst = oracle.instances[iid]
+        assert oracle.checkpoint(iid, now)
+        out = oracle.schedule_request(
+            Request(
+                id=f"reloc-{iid}", resources=inst.resources, preemptible=True,
+                user=inst.user, cost_kind=inst.cost_kind, period=inst.period,
+                priority=0, exclude_zone="z0",
+            ),
+            now, price=inst.price_rate,
+        )
+        if out.ok:
+            assert oracle.depart(iid, now=now)
+            moved[iid] = out.instance.metadata.get("slot")
+
+    # device state arrays bitwise equal between fused batch and oracle loop
+    for f in dataclasses.fields(oracle.state):
+        a = np.asarray(getattr(oracle.state, f.name))
+        b = np.asarray(getattr(fleet.state, f.name))
+        assert np.array_equal(a, b), f"state column {f.name} diverged"
+    # and the move ledger agrees victim-for-victim
+    assert set(fleet.relocated_ids) == set(moved)
+    for iid, new_id in fleet.relocated_ids.items():
+        h, s = fleet.locator[new_id]
+        assert s == moved[iid]
+    _assert_conserved(fleet)
