@@ -618,6 +618,141 @@ def _bench_scan() -> None:
     )
 
 
+def _bench_scan_stream() -> None:
+    """In-scan streaming admission vs the python front-end loop, end to
+    end on the identical trace.  Emits:
+
+      * ``screen_scan_stream_python_n{N}`` / ``screen_scan_stream_device_n{N}``
+        — the same streaming trace (queue, SLO batching, retries) through
+        ``SoASimulator.run_trace`` (one fused drain dispatch per trigger,
+        host loop between events) and through ``simulate_scan`` with the
+        queue arrays riding the scan carry (ONE dispatch total).  The
+        in-scan path must be ≥5× faster at 4096 hosts (asserted when not
+        TINY — the committed acceptance row);
+      * ``screen_scan_stream_knobs_n{N}_l{L}`` — the admission-knob sweep:
+        L traced ``(aging_rate, slo_target_s, storm_threshold)`` rows over
+        one trace in ONE vmapped dispatch (``tps=`` lanes/sec).
+
+    The smallest size doubles as a parity smoke: placement sequence and
+    every admission counter must agree exactly before anything is timed."""
+    import time as _time
+
+    from repro.core.scan_sim import (
+        simulate_ensemble, simulate_scan, trace_from_workload,
+    )
+
+    policy = SchedulerPolicy(
+        # admit_batch=4 is the low-latency admission config: the python
+        # loop pays one fused drain dispatch per 4 admissions, which is
+        # exactly the per-trigger overhead the in-carry queue removes.
+        queue_capacity=64, admit_batch=4, slo_target_s=120.0,
+        max_retries=4, n_classes=3, aging_rate=0.005, storm_threshold=0.05,
+    )
+    spec = WorkloadSpec(
+        arrival_rate_per_s=1 / 8.0,
+        lifetime_min_s=300.0, lifetime_mean_s=1200.0, lifetime_max_s=2400.0,
+        preemptible_fraction=0.6,
+        flavors=tuple((f"f{i}", s) for i, s in enumerate(SIZES.values())),
+    )
+    duration = 800.0 if TINY else 3200.0
+    trace = trace_from_workload(
+        spec, duration, seed=7,
+        storms=((duration * 0.5, 0, 0.5),),
+        failures=((duration * 0.4, 1, duration * 0.2),),
+        checkpoint_every=4,
+        priorities=(-1, 0, 1, 2),
+    )
+    eps_by_n = {}
+    sizes = (128, 256) if TINY else (4096, 65536)
+    for i, n in enumerate(sizes):
+        hosts = [
+            Host(name=f"h{j}", capacity=NODE_CAP, zone=f"z{j % 3}")
+            for j in range(n)
+        ]
+        sim = SoASimulator(hosts, spec, seed=7, k_slots=8, policy=policy)
+        state0 = jax.tree_util.tree_map(
+            lambda a: jnp.asarray(np.asarray(a)), sim.fleet.state
+        )
+        t0 = _time.perf_counter()
+        m_py = sim.run_trace(trace)
+        py_us = (_time.perf_counter() - t0) * 1e6
+        res = simulate_scan(trace, policy, state0)  # compile + first run
+        t0 = _time.perf_counter()
+        res = simulate_scan(trace, policy, state0)
+        dev_us = (_time.perf_counter() - t0) * 1e6
+        if i == 0:
+            # parity smoke: outcomes + every admission counter, exact
+            front = sim.fleet.admission
+            st = front.stats
+            want = {k: getattr(st, k) for k in (
+                "arrivals", "admitted", "rejected_overflow",
+                "rejected_retry", "drains", "retries", "degraded",
+            )}
+            want["queue_depth"] = front.waiting
+            assert res.admission == want, (res.admission, want)
+            assert np.array_equal(
+                np.stack([res.host, res.slot, res.ok.astype(np.int64),
+                          res.n_kill], axis=1),
+                sim.trace_outcomes,
+            ), "streaming scan-vs-python placement sequence diverged"
+            assert m_py.placed_normal + m_py.placed_preemptible == (
+                st.admitted
+            )
+        e = trace.n_events
+        eps_py, eps_dev = e / (py_us / 1e6), e / (dev_us / 1e6)
+        eps_by_n[n] = (eps_py, eps_dev)
+        adm = res.admission
+        emit(f"screen_scan_stream_python_n{n}", py_us,
+             f"end_to_end;events={e};eps={eps_py:.0f};"
+             f"admitted={adm['admitted']}")
+        emit(f"screen_scan_stream_device_n{n}", dev_us,
+             f"end_to_end;events={e};eps={eps_dev:.0f};"
+             f"admitted={adm['admitted']};"
+             f"speedup={eps_dev / eps_py:.2f}")
+    if not TINY:
+        eps_py, eps_dev = eps_by_n[4096]
+        assert eps_dev >= 5.0 * eps_py, (
+            f"in-scan streaming admission must be >=5x the python loop at "
+            f"4096 hosts: {eps_dev:.0f} vs {eps_py:.0f} events/s"
+        )
+
+    # the admission-knob sweep: L lanes, ONE dispatch
+    n = 128 if TINY else 1024
+    lanes_n = 8 if TINY else 32
+    hosts = [
+        Host(name=f"h{j}", capacity=NODE_CAP, zone=f"z{j % 3}")
+        for j in range(n)
+    ]
+    sim = SoASimulator(hosts, spec, seed=0, k_slots=8, policy=policy)
+    ens_duration = 400.0 if TINY else 1200.0
+    ktrace = trace_from_workload(
+        spec, ens_duration, seed=3,
+        storms=((ens_duration * 0.5, 0, 0.5),),
+        priorities=(-1, 0, 1, 2),
+    )
+    rng = np.random.default_rng(42)
+    knob_rows = np.column_stack([
+        rng.uniform(0.0, 0.05, lanes_n),
+        rng.uniform(30.0, 300.0, lanes_n),
+        np.where(rng.random(lanes_n) < 0.5, np.inf,
+                 rng.uniform(0.005, 0.5, lanes_n)),
+    ]).astype(np.float32)
+    lanes = simulate_ensemble(
+        [ktrace], policy, sim.fleet.state, knobs=knob_rows
+    )  # compile
+    t0 = _time.perf_counter()
+    lanes = simulate_ensemble(
+        [ktrace], policy, sim.fleet.state, knobs=knob_rows
+    )
+    ens_us = (_time.perf_counter() - t0) * 1e6
+    emit(
+        f"screen_scan_stream_knobs_n{n}_l{lanes_n}", ens_us,
+        f"one_dispatch;lanes={lanes_n};events={ktrace.n_events};"
+        f"tps={lanes_n / (ens_us / 1e6):.2f};"
+        f"admitted={sum(l.admission['admitted'] for l in lanes)}",
+    )
+
+
 def run() -> None:
     on_tpu = jax.default_backend() == "tpu"
     n = 512 if TINY else 65536
@@ -700,6 +835,8 @@ def run() -> None:
     # Failure-domain storm study: churn-aware vs churn-blind (PR 7).
     _bench_storm()
     _bench_scan()
+    # In-scan streaming admission vs the python front-end loop (PR 10).
+    _bench_scan_stream()
     write_bench_json("screen")
 
 

@@ -178,7 +178,8 @@ def queue_select(
     q: AdmissionQueueState,
     batch: int,
     now: Optional[jax.Array] = None,
-    aging_rate: float = 0.0,
+    aging_rate=0.0,
+    n_classes: Optional[int] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Pick the next ``batch`` entries in drain order.
 
@@ -188,23 +189,40 @@ def queue_select(
     ``(idx (B,), take (B,))``; rows with ``take=False`` gathered an invalid
     entry (queue shorter than the batch) and must be treated as padding.
 
-    With ``aging_rate > 0`` (``policy.aging_rate``; a static knob, so the
-    branch is compile-time) an entry's *effective* class decays with its
-    queue wait — ``max(0, klass - floor(aging_rate * (now - enq_t)))`` —
-    so long-waiting batch entries eventually drain ahead of fresh
-    interactive load instead of starving (and stop burning retries against
-    a fleet that keeps serving class 0 first).  The secondary ``seq`` key
-    is untouched: FIFO within an effective class, and ``aging_rate=0``
-    compiles to the exact pre-aging selection.
+    The two-key order is computed as ONE stable sort over a packed monotone
+    uint32 key — effective class in the high ``cb = n_classes.bit_length()``
+    bits, ``seq`` below, invalid rows pinned to the all-ones sentinel — so
+    every drain pays a single sort pass instead of ``lexsort``'s two.  The
+    packing is exact (bit-identical to the old lexsort order, pinned by
+    tests/test_admission.py) because a valid key can never collide with the
+    sentinel: classes are clipped to ``2**cb - 2`` and ``seq`` tickets must
+    stay below ``2**(32 - cb)`` (~10^9 at the default two classes; callers
+    with ``n_classes=None`` get an 8-bit class field and 2^24 tickets).
+
+    With ``aging_rate > 0`` (``policy.aging_rate``, or a TRACED scalar on
+    the scanned simulator's knob axis) an entry's *effective* class decays
+    with its queue wait — ``max(0, klass - floor(aging_rate * (now -
+    enq_t)))`` — so long-waiting batch entries eventually drain ahead of
+    fresh interactive load instead of starving (and stop burning retries
+    against a fleet that keeps serving class 0 first).  The secondary
+    ``seq`` key is untouched: FIFO within an effective class, and
+    ``aging_rate=0`` (static or traced) selects exactly the pre-aging
+    order.
     """
     klass = q.klass
-    if aging_rate and now is not None:
+    if now is not None and (isinstance(aging_rate, jax.Array) or aging_rate):
         waited = jnp.maximum(jnp.asarray(now, jnp.float32) - q.enq_t, 0.0)
-        decay = jnp.floor(jnp.float32(aging_rate) * waited).astype(jnp.int32)
+        decay = jnp.floor(
+            jnp.asarray(aging_rate, jnp.float32) * waited
+        ).astype(jnp.int32)
         klass = jnp.maximum(klass - decay, 0)
-    k_key = jnp.where(q.valid, klass, _BIG)
-    s_key = jnp.where(q.valid, q.seq, _BIG)
-    order = jnp.lexsort((s_key, k_key))  # primary k_key, secondary s_key
+    cb = int(n_classes).bit_length() if n_classes else 8
+    shift = 32 - cb
+    packed = (
+        jnp.clip(klass, 0, (1 << cb) - 2).astype(jnp.uint32) << shift
+    ) | q.seq.astype(jnp.uint32)
+    key = jnp.where(q.valid, packed, jnp.uint32(0xFFFFFFFF))
+    order = jnp.argsort(key, stable=True)
     idx = order[: int(batch)].astype(jnp.int32)
     return idx, q.valid[idx]
 
@@ -285,7 +303,8 @@ def _drain_entry(
     )
 
     idx, take = queue_select(
-        q, policy.admit_batch, now=now, aging_rate=policy.aging_rate
+        q, policy.admit_batch, now=now, aging_rate=policy.aging_rate,
+        n_classes=policy.n_classes,
     )
     b = idx.shape[0]
     b_res = jnp.where(take[:, None], q.res[idx], PAD_RES)
@@ -376,7 +395,22 @@ class AdmissionStats:
     def _pct(samples: Sequence[float], pct: float) -> float:
         if not samples:
             return 0.0
-        return float(np.percentile(np.asarray(samples), pct))
+        # f32 on purpose: the waits themselves are f32 device differences,
+        # and interpolating in f32 keeps this reader bit-identical to the
+        # scanned engine's (``ScanResult.wait_percentiles``).
+        return float(np.percentile(np.asarray(samples, np.float32), pct))
+
+    def wait_percentiles(self) -> Dict[str, float]:
+        """Sim-time queue-wait distribution (drain time − arrival time per
+        admitted placement).  The waits are f32 differences computed by the
+        device drain program itself, so the same reader over
+        ``ScanResult.wait_s`` (the in-carry accumulator of the scanned
+        simulator) returns bit-identical percentiles — the deterministic
+        latency comparison the streaming parity suite pins."""
+        return {
+            "wait_p50_s": self._pct(self.wait_s, 50),
+            "wait_p99_s": self._pct(self.wait_s, 99),
+        }
 
     def summary(self) -> Dict[str, float]:
         return {
@@ -660,6 +694,13 @@ class AdmissionFrontEnd:
         prev = self.flush()
         if prev is not None:
             self._unclaimed.append(prev)
+
+    def wait_percentiles(self) -> Dict[str, float]:
+        """Sim-time queue-wait p50/p99 over every absorbed placement —
+        the same reader ``ScanResult.wait_percentiles`` exposes for the
+        scanned engine (bit-identical on a shared trace)."""
+        self.sync()
+        return self.stats.wait_percentiles()
 
     def take_results(self) -> List[DrainResult]:
         """Flush and return every drain result not yet handed to a caller

@@ -273,6 +273,12 @@ class SchedulerPolicy:
             raise ValueError(f"max_retries must be >= 1, got {mr}")
         if nc < 1:
             raise ValueError(f"n_classes must be >= 1, got {nc}")
+        if nc > 255:
+            raise ValueError(
+                f"n_classes must be <= 255, got {nc}: drain order sorts one "
+                "packed uint32 key whose class field is at most 8 bits "
+                "(see core/admission.py queue_select)"
+            )
         object.__setattr__(self, "queue_capacity", qc)
         object.__setattr__(self, "admit_batch", ab)
         object.__setattr__(self, "slo_target_s", float(self.slo_target_s))

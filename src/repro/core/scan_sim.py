@@ -18,14 +18,28 @@ event stream into one jitted ``lax.scan``:
   ``_step_core``-compatible carry, ``lax.switch``-dispatching on the event
   kind, syncing to host ``SimMetrics`` only at configurable sample points.
 * ``simulate_ensemble`` — ``vmap`` of the scan over a stacked-trace (seed)
-  axis and an optional stacked weigher-multiplier axis: one dispatch
-  evaluates hundreds of fleet trajectories (the Monte-Carlo substrate for
-  policy sweeps).
+  axis and optional stacked weigher-multiplier / admission-knob axes: one
+  dispatch evaluates hundreds of fleet trajectories (the Monte-Carlo
+  substrate for policy sweeps).
+
+Streaming admission (``policy.queue_capacity > 0``) runs INSIDE the scan:
+the ``AdmissionQueueState`` arrays ride the carry, arrivals ``queue_push``
+instead of dispatching directly, and drains (``queue_select`` with aging →
+batched ``_step_core`` → ``queue_pop``, storm degradation included) fire
+behind predicate-gated ``lax.cond`` on the same triggers the python front
+end uses — SLO deadline crossed (before the event), batch filled by an
+arrival, capacity freed by a departure/failure/heal/storm (after it) —
+with a ``drain_all``-mirroring ``fori_loop`` epilogue at the last
+timestamp.  ``knobs`` traces ``(aging_rate, slo_target_s,
+storm_threshold)`` so an admission-policy sweep shares one compiled
+program (``storm_threshold=inf`` disables degradation numerically).
 
 Parity contract (pinned by ``tests/test_scan_sim.py``): on integer-time /
 integer-resource traces the scanned simulator is **bit-exact** against
 ``SoASimulator.run_trace`` — final fleet-state arrays, per-arrival
-placement/rejection sequences, and every ``SimMetrics`` counter.  f32 sums
+placement/rejection sequences, every ``SimMetrics`` counter, and (in
+streaming mode) every admission counter, the final queue arrays, and the
+per-placement sim-time wait distribution.  f32 sums
 of integers below 2^24 are exact regardless of association, so the fused
 device reductions here equal the python loop's sequential adds bitwise;
 decisions run the same ``_step_core`` program on both sides, so even
@@ -47,6 +61,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from .admission import (
+    PAD_RES,
+    AdmissionQueueState,
+    queue_init,
+    queue_pop,
+    queue_push,
+    queue_select,
+)
 from .jax_scheduler import (
     SoAFleetState,
     _step_core,
@@ -57,6 +79,7 @@ from .jax_scheduler import (
     set_schedulable,
 )
 from .policy import COST_KINDS, SchedulerPolicy
+from .screen_math import churn_stats
 from .simulator import SimMetrics, WorkloadSpec
 
 # -- event kinds --------------------------------------------------------------
@@ -456,6 +479,17 @@ class _ScanCarry:
     samp_t: jax.Array        # (E+1,) f32 sample times
     samp_f: jax.Array        # (E+1,) f32 free_f[:, 0] sums at samples
     samp_n: jax.Array        # (E+1,) f32 free_n[:, 0] sums at samples
+    # -- streaming admission plane (policy.queue_capacity > 0; else None) ----
+    qstate: Optional[AdmissionQueueState] = None  # the in-carry wait queue
+    q_src: Optional[jax.Array] = None     # (Q,) i32 trace row per queue slot
+    ev_ok: Optional[jax.Array] = None     # (E+1,) bool arrival row placed
+    ev_kill: Optional[jax.Array] = None   # (E+1,) i32 victims of the placement
+    ev_pre: Optional[jax.Array] = None    # (E+1,) bool EFFECTIVE (post-
+                                          # degradation) preemptible flag
+    ev_wait: Optional[jax.Array] = None   # (E+1,) f32 sim-time queue wait
+                                          # at placement (-1 = never placed)
+    adm: Optional[jax.Array] = None       # (7,) i32 admission counters
+    next_deadline: Optional[jax.Array] = None  # () f32 earliest enq + SLO
 
     def tree_flatten(self):
         return tuple(getattr(self, f.name) for f in dataclasses.fields(self)), None
@@ -468,10 +502,18 @@ class _ScanCarry:
 _C_PLACED_N, _C_PLACED_P, _C_FAILED_N, _C_FAILED_P = 0, 1, 2, 3
 _C_PREEMPT, _C_STORMS, _C_STORM_KILLS = 4, 5, 6
 
+_A_ARRIVALS, _A_ADMITTED, _A_REJ_OVER, _A_REJ_RETRY = 0, 1, 2, 3
+_A_DRAINS, _A_RETRIES, _A_DEGRADED = 4, 5, 6
+_ADM_NAMES = (
+    "arrivals", "admitted", "rejected_overflow", "rejected_retry", "drains",
+    "retries", "degraded",
+)
+
 _COL_ORDER = tuple(f.name for f in dataclasses.fields(EventTrace))
 
 
-def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
+def _scan_impl(state, cols, normal_res0, sample_every, mult, knobs, policy,
+               with_mult, with_knobs):
     (kind, time, res, pre, dur, prio, ck, per, price, dom, zone, frac,
      inst_id, host) = cols
     e_total = kind.shape[0]
@@ -480,6 +522,20 @@ def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
     slot_ids = jnp.arange(k)
     mult_val = tuple(mult[i] for i in range(len(policy.all_multipliers))) \
         if with_mult else None
+    streaming = policy.queue_capacity > 0
+    # Admission knobs: static policy floats by default; TRACED scalars on the
+    # ensemble knob axis.  Traced neutral values (aging 0, storm inf) are
+    # numerically inert, so the always-computed traced program is outcome-
+    # bit-exact against the statically-gated one.
+    if with_knobs:
+        aging, slo, storm_thr = knobs[0], knobs[1], knobs[2]
+    else:
+        aging = policy.aging_rate
+        slo = jnp.float32(policy.slo_target_s)
+        storm_thr = (
+            None if policy.storm_threshold is None
+            else jnp.float32(policy.storm_threshold)
+        )
 
     def record_sample(c, t):
         do = t >= c.next_sample
@@ -498,7 +554,39 @@ def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
     no_y = (jnp.int32(-1), jnp.int32(-1), jnp.asarray(False), jnp.int32(0))
 
     def ev_arrival(c, ev):
-        e, t, r, p, ckk, pd, pc, dm, zn, fr, tg, hs = ev
+        e, t, r, p, pr, ckk, pd, pc, dm, zn, fr, tg, hs = ev
+        if streaming:
+            # Route through the in-carry wait queue instead of deciding
+            # inline; the decision happens at the next drain boundary.
+            klass = jnp.where(
+                pr >= 0, pr,
+                jnp.where(p, jnp.int32(policy.n_classes - 1), jnp.int32(0)),
+            )
+            q, slot, okp = queue_push(
+                c.qstate, r, p, dm, ckk, pd, jnp.int32(-1), klass, t, pc,
+            )
+            adm = c.adm.at[_A_ARRIVALS].add(1)
+            adm = adm.at[_A_REJ_OVER].add((~okp).astype(jnp.int32))
+            counters = c.counters
+            counters = counters.at[_C_FAILED_N].add(
+                (~okp & ~p).astype(jnp.int32)
+            )
+            counters = counters.at[_C_FAILED_P].add(
+                (~okp & p).astype(jnp.int32)
+            )
+            # queue_push's slot is garbage when the push was rejected — keep
+            # the old source row in that case.
+            q_src = c.q_src.at[slot].set(
+                jnp.where(okp, e.astype(jnp.int32), c.q_src[slot])
+            )
+            nd = jnp.where(
+                okp, jnp.minimum(c.next_deadline, t + slo), c.next_deadline
+            )
+            c = dataclasses.replace(
+                c, qstate=q, q_src=q_src, adm=adm, counters=counters,
+                next_deadline=nd,
+            )
+            return c, no_y
         st, (h, s, ok, kill, _fb, _mg) = _step_core(
             c.state, r, p, dm, t, pc, ckk, pd, policy,
             req_exclude=jnp.int32(-1), mult_val=mult_val,
@@ -533,12 +621,15 @@ def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
         return c, y
 
     def ev_departure(c, ev):
-        e, t, r, p, ckk, pd, pc, dm, zn, fr, tg, hs = ev
+        e, t, r, p, pr, ckk, pd, pc, dm, zn, fr, tg, hs = ev
         tgc = jnp.clip(tg, 0, e_total)
         live = c.ev_live[tgc]
         h = jnp.maximum(c.ev_host[tgc], 0)
         s = jnp.clip(c.ev_slot[tgc], 0, k - 1)
-        is_pre = pre[tgc]
+        # Streaming: storm degradation may have demoted the placement to
+        # NORMAL capacity — the trace's preemptible column lies; the carry's
+        # EFFECTIVE flag is the truth.
+        is_pre = c.ev_pre[tgc] if streaming else pre[tgc]
         mask = (slot_ids == s) & live & is_pre
         st = apply_termination(c.state, h, mask, now=t, involuntary=False)
         radd = res[tgc] * (live & ~is_pre).astype(jnp.float32)
@@ -553,7 +644,7 @@ def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
         return c, no_y
 
     def ev_fail(c, ev):
-        e, t, r, p, ckk, pd, pc, dm, zn, fr, tg, hs = ev
+        e, t, r, p, pr, ckk, pd, pc, dm, zn, fr, tg, hs = ev
         h = jnp.clip(hs, 0, n - 1)
         st = apply_host_failure(c.state, h, c.normal_res[h], now=t)
         on_h = c.ev_live & (c.ev_host == h)
@@ -566,16 +657,18 @@ def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
         return c, no_y
 
     def ev_heal(c, ev):
-        e, t, r, p, ckk, pd, pc, dm, zn, fr, tg, hs = ev
+        e, t, r, p, pr, ckk, pd, pc, dm, zn, fr, tg, hs = ev
         h = jnp.clip(hs, 0, n - 1)
         return dataclasses.replace(
             c, state=set_schedulable(c.state, h, jnp.asarray(True))
         ), no_y
 
     def ev_checkpoint(c, ev):
-        e, t, r, p, ckk, pd, pc, dm, zn, fr, tg, hs = ev
+        e, t, r, p, pr, ckk, pd, pc, dm, zn, fr, tg, hs = ev
         tgc = jnp.clip(tg, 0, e_total)
-        live = c.ev_live[tgc] & pre[tgc]
+        # fleet.checkpoint no-ops on normal instances, so a demoted
+        # (effectively normal) streaming placement must not take one.
+        live = c.ev_live[tgc] & (c.ev_pre[tgc] if streaming else pre[tgc])
         h = jnp.maximum(c.ev_host[tgc], 0)
         s = jnp.clip(c.ev_slot[tgc], 0, k - 1)
         row = jnp.where((slot_ids == s) & live, t, c.state.inst_ckpt[h])
@@ -585,7 +678,7 @@ def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
         return dataclasses.replace(c, state=st), no_y
 
     def ev_storm(c, ev):
-        e, t, r, p, ckk, pd, pc, dm, zn, fr, tg, hs = ev
+        e, t, r, p, pr, ckk, pd, pc, dm, zn, fr, tg, hs = ev
         st = c.state
         live = st.inst_valid & (st.host_zone[:, None] == zn)
         flat = live.reshape(-1)
@@ -624,11 +717,143 @@ def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
     branches = (ev_arrival, ev_departure, ev_fail, ev_heal, ev_checkpoint,
                 ev_storm, ev_pad)
 
+    def drain(c, now):
+        """One in-carry admission drain: select → ``_step_core`` scan → pop.
+
+        The pure-transition mirror of ``admission._drain_entry`` (minus the
+        push scan — arrivals were already pushed at their event rows), with
+        the host mirror's bookkeeping (``AdmissionFrontEnd.flush``) folded
+        into the carry arrays instead of python lists.
+        """
+        q = c.qstate
+        idx, take = queue_select(
+            q, policy.admit_batch, now=now, aging_rate=aging,
+            n_classes=policy.n_classes,
+        )
+        b = idx.shape[0]
+        b_res = jnp.where(take[:, None], q.res[idx], PAD_RES)
+        b_pre = jnp.where(take, q.preemptible[idx], False)
+        b_dom = jnp.where(take, q.domain[idx], -1)
+        b_kind = jnp.where(take, q.cost_kind[idx], -1)
+        b_period = jnp.where(take, q.period[idx], -1.0)
+        b_price = jnp.where(take, q.price[idx], 1.0)
+        b_now = jnp.full((b,), now, jnp.float32)
+        src = jnp.where(take, c.q_src[idx], e_total).astype(jnp.int32)
+
+        orig_pre = b_pre
+        if storm_thr is None:
+            degraded = jnp.zeros_like(b_pre)
+        else:
+            # storm_thr == +inf (the traced-knob "off" value) makes the
+            # predicate constant-False: exactly the no-degradation program.
+            churn = churn_stats(c.state.zone_term, c.state.zone_up)[-1]
+            storm = churn > storm_thr
+            degraded = b_pre & storm
+            b_pre = b_pre & ~storm
+
+        def attempt(cc, xs):
+            src_e, r, p, dm, t_, pc_, kd_, pd_ = xs
+            st, (h, s, ok, kill, _fb, _mg) = _step_core(
+                cc.state, r, p, dm, t_, pc_, kd_, pd_, policy,
+                req_exclude=None, mult_val=mult_val,
+            )
+            n_kill = jnp.sum(kill.astype(jnp.int32))
+            owner_row = cc.slot_owner[h]
+            dead = jnp.where(kill & (owner_row >= 0), owner_row, e_total)
+            ev_live = cc.ev_live.at[dead].set(False)
+            placed_pre = ok & p
+            owner_row = jnp.where(kill, -1, owner_row)
+            owner_row = jnp.where(
+                (slot_ids == s) & placed_pre, src_e, owner_row
+            )
+            r0 = jnp.where(ok & ~p, r, jnp.zeros_like(r))
+            counters = cc.counters
+            counters = counters.at[_C_PLACED_N].add(
+                (ok & ~p).astype(jnp.int32)
+            )
+            counters = counters.at[_C_PLACED_P].add(
+                placed_pre.astype(jnp.int32)
+            )
+            counters = counters.at[_C_PREEMPT].add(n_kill)
+            cc = dataclasses.replace(
+                cc, state=st,
+                slot_owner=cc.slot_owner.at[h].set(owner_row),
+                ev_live=ev_live.at[src_e].set(ev_live[src_e] | ok),
+                ev_host=cc.ev_host.at[src_e].set(
+                    jnp.where(ok, h, cc.ev_host[src_e])
+                ),
+                ev_slot=cc.ev_slot.at[src_e].set(
+                    jnp.where(placed_pre, s, cc.ev_slot[src_e])
+                ),
+                ev_ok=cc.ev_ok.at[src_e].set(cc.ev_ok[src_e] | ok),
+                ev_kill=cc.ev_kill.at[src_e].add(n_kill),
+                ev_pre=cc.ev_pre.at[src_e].set(
+                    jnp.where(ok, p, cc.ev_pre[src_e])
+                ),
+                normal_res=cc.normal_res.at[h].add(r0),
+                counters=counters,
+            )
+            return cc, ok
+
+        c, ok_b = lax.scan(
+            attempt, c,
+            (src, b_res, b_pre, b_dom, b_now, b_price, b_kind, b_period),
+        )
+        placed = ok_b & take
+        wait = jnp.where(placed, now - q.enq_t[idx], 0.0)
+        ev_wait = c.ev_wait.at[src].set(
+            jnp.where(placed, wait, c.ev_wait[src])
+        )
+        q2, dropped = queue_pop(q, idx, take, placed, policy.max_retries)
+        # Rejections (retries exhausted) book as failures under the ORIGINAL
+        # preemptible flag — the queue stores it; demotion is per-attempt.
+        counters = c.counters
+        counters = counters.at[_C_FAILED_N].add(
+            jnp.sum((dropped & ~orig_pre).astype(jnp.int32))
+        )
+        counters = counters.at[_C_FAILED_P].add(
+            jnp.sum((dropped & orig_pre).astype(jnp.int32))
+        )
+        adm = c.adm
+        adm = adm.at[_A_ADMITTED].add(jnp.sum(placed.astype(jnp.int32)))
+        adm = adm.at[_A_REJ_RETRY].add(jnp.sum(dropped.astype(jnp.int32)))
+        adm = adm.at[_A_RETRIES].add(
+            jnp.sum((take & ~placed & ~dropped).astype(jnp.int32))
+        )
+        adm = adm.at[_A_DEGRADED].add(jnp.sum(degraded.astype(jnp.int32)))
+        adm = adm.at[_A_DRAINS].add(1)
+        nd = jnp.min(
+            jnp.where(q2.valid, q2.enq_t, jnp.float32(jnp.inf))
+        ) + slo
+        return dataclasses.replace(
+            c, qstate=q2, ev_wait=ev_wait, adm=adm, counters=counters,
+            next_deadline=nd,
+        )
+
     def step(c, xs):
         kd = xs[0]
         ev = xs[1:]
-        c = record_sample(c, ev[1])
-        return lax.switch(jnp.clip(kd, 0, PAD), branches, c, ev)
+        t = ev[1]
+        c = record_sample(c, t)
+        if not streaming:
+            return lax.switch(jnp.clip(kd, 0, PAD), branches, c, ev)
+        # SLO pre-drain: the incoming event's timestamp crossing the oldest
+        # waiting entry's deadline forces (at most) one drain first.
+        c = lax.cond(
+            t >= c.next_deadline, lambda cc: drain(cc, t), lambda cc: cc, c
+        )
+        c, y = lax.switch(jnp.clip(kd, 0, PAD), branches, c, ev)
+        # Post-event drain triggers: a full admit batch after an arrival, or
+        # freed capacity (departure/failure/heal/storm) while entries wait.
+        depth = c.qstate.depth
+        freeing = (
+            (kd == DEPARTURE) | (kd == FAIL_HOST) | (kd == HEAL_HOST)
+            | (kd == ZONE_STORM)
+        )
+        fire = ((kd == ARRIVAL) & (depth >= policy.admit_batch)) \
+            | (freeing & (depth > 0))
+        c = lax.cond(fire, lambda cc: drain(cc, t), lambda cc: cc, c)
+        return c, y
 
     s1 = e_total + 1
     carry0 = _ScanCarry(
@@ -645,11 +870,46 @@ def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
         samp_f=jnp.zeros((s1,), jnp.float32),
         samp_n=jnp.zeros((s1,), jnp.float32),
     )
-    xs = (kind, jnp.arange(e_total, dtype=jnp.int32), time, res, pre, ck, per,
-          price, dom, zone, frac, inst_id, host)
+    if streaming:
+        carry0 = dataclasses.replace(
+            carry0,
+            qstate=queue_init(policy.queue_capacity, d),
+            q_src=jnp.full((policy.queue_capacity,), e_total, jnp.int32),
+            ev_ok=jnp.zeros((s1,), bool),
+            ev_kill=jnp.zeros((s1,), jnp.int32),
+            ev_pre=jnp.zeros((s1,), bool),
+            ev_wait=jnp.full((s1,), -1.0, jnp.float32),
+            adm=jnp.zeros((7,), jnp.int32),
+            next_deadline=jnp.float32(jnp.inf),
+        )
+    xs = (kind, jnp.arange(e_total, dtype=jnp.int32), time, res, pre, prio,
+          ck, per, price, dom, zone, frac, inst_id, host)
     carry, ys = lax.scan(step, carry0, xs)
-    # final host sample, mirroring the python loop's closing _sample()
     t_last = time[e_total - 1] if e_total else jnp.float32(0.0)
+    stream = None
+    if streaming:
+        # End-of-run epilogue (``AdmissionFrontEnd.drain_all``): every
+        # still-waiting entry gets its retries.  Each failing entry burns one
+        # retry per drain, so ceil(Q/B) * max_retries + 2 rounds suffice.
+        limit = (
+            -(-policy.queue_capacity // policy.admit_batch)
+            * policy.max_retries + 2
+        )
+
+        def _epilogue(_, cc):
+            return lax.cond(
+                cc.qstate.depth > 0, lambda c2: drain(c2, t_last),
+                lambda c2: c2, cc,
+            )
+
+        carry = lax.fori_loop(0, limit, _epilogue, carry)
+        # Per-arrival outcomes resolve at drain boundaries, not event rows —
+        # read them off the final carry instead of the scan's ys.
+        ys = (carry.ev_host[:e_total], carry.ev_slot[:e_total],
+              carry.ev_ok[:e_total], carry.ev_kill[:e_total])
+        stream = (carry.qstate, carry.adm, carry.ev_wait[:e_total],
+                  carry.qstate.depth)
+    # final host sample, mirroring the python loop's closing _sample()
     si = carry.n_samp
     return (
         carry.state,
@@ -661,32 +921,46 @@ def _scan_impl(state, cols, normal_res0, sample_every, mult, policy, with_mult):
             carry.samp_n.at[si].set(jnp.sum(carry.state.free_n[:, 0])),
             si + 1,
         ),
+        stream,
     )
 
 
 @functools.lru_cache(maxsize=64)
-def _scan_fn(policy: SchedulerPolicy, with_mult: bool):
-    def run(state, cols, normal_res0, sample_every, mult):
+def _scan_fn(policy: SchedulerPolicy, with_mult: bool, with_knobs: bool):
+    def run(state, cols, normal_res0, sample_every, mult, knobs):
         return _scan_impl(
-            state, cols, normal_res0, sample_every, mult, policy, with_mult
+            state, cols, normal_res0, sample_every, mult, knobs, policy,
+            with_mult, with_knobs,
         )
     return jax.jit(run)
 
 
 @functools.lru_cache(maxsize=64)
-def _ensemble_fn(policy: SchedulerPolicy, with_mult: bool):
-    def run(state, cols, normal_res0, sample_every, mult):
+def _ensemble_fn(policy: SchedulerPolicy, with_mult: bool, with_knobs: bool):
+    def run(state, cols, normal_res0, sample_every, mult, knobs):
         return _scan_impl(
-            state, cols, normal_res0, sample_every, mult, policy, with_mult
+            state, cols, normal_res0, sample_every, mult, knobs, policy,
+            with_mult, with_knobs,
         )
     return jax.jit(
-        jax.vmap(run, in_axes=(None, 0, None, None, 0 if with_mult else None))
+        jax.vmap(run, in_axes=(
+            None, 0, None, None,
+            0 if with_mult else None,
+            0 if with_knobs else None,
+        ))
     )
 
 
 @dataclasses.dataclass
 class ScanResult:
-    """Host-side view of one scanned trajectory."""
+    """Host-side view of one scanned trajectory.
+
+    Streaming-mode runs (``policy.queue_capacity > 0``) additionally carry
+    the final queue arrays, the admission counter dict (the keys of
+    ``AdmissionStats.summary()``'s integer counters), and the per-arrival
+    sim-time queue wait (``-1`` = never placed); they are ``None`` on
+    direct-mode runs.
+    """
 
     state: SoAFleetState
     host: np.ndarray       # (E,) i32 winning host per arrival row (-1)
@@ -697,6 +971,30 @@ class ScanResult:
     sample_t: np.ndarray        # (S,) f32 sample times
     sample_free0: np.ndarray    # (S,) f32 sum(free_f[:, 0]) at each sample
     sample_free0_normal: np.ndarray  # (S,) f32 sum(free_n[:, 0])
+    #: final wait-queue arrays (streaming mode only; numpy-materialized)
+    queue: Optional[AdmissionQueueState] = None
+    #: admission counters: arrivals / admitted / rejected_overflow /
+    #: rejected_retry / drains / retries / degraded / queue_depth
+    admission: Optional[Dict[str, int]] = None
+    #: (E,) f32 sim-time enqueue→absorb wait per arrival row (-1 = never
+    #: placed: rejected, or a non-arrival row)
+    wait_s: Optional[np.ndarray] = None
+
+    def wait_percentiles(self) -> Dict[str, float]:
+        """Sim-time queue-wait p50/p99 over the placed arrivals — the same
+        reader as ``AdmissionStats.wait_percentiles`` over the python front
+        end, bit-identical on a shared trace (the waits are the same f32
+        differences computed by the same drain program)."""
+        if self.wait_s is None:
+            return {"wait_p50_s": 0.0, "wait_p99_s": 0.0}
+        w = np.asarray(self.wait_s)
+        w = w[w >= 0.0]
+        if not w.size:
+            return {"wait_p50_s": 0.0, "wait_p99_s": 0.0}
+        return {
+            "wait_p50_s": float(np.percentile(w, 50)),
+            "wait_p99_s": float(np.percentile(w, 99)),
+        }
 
     def sim_metrics(self, cap0_total: float) -> SimMetrics:
         """Materialize ``SimMetrics`` exactly as the python loop would: the
@@ -727,22 +1025,25 @@ _COUNTER_NAMES = (
 
 
 def _check_policy(policy: SchedulerPolicy, where: str) -> None:
-    if policy.queue_capacity:
-        raise NotImplementedError(
-            f"{where}: the streaming admission plane (queue_capacity > 0) is "
-            f"not folded into the scanned loop yet"
-        )
+    # Everything else — including the streaming admission plane
+    # (queue_capacity > 0) — runs inside the scan; see
+    # docs/scan_sim.md#which-planes-scan for the full support matrix.
     if policy.relocation_on:
         raise NotImplementedError(
-            f"{where}: the relocation plane is not folded into the scanned "
-            f"loop yet"
+            f"{where}: the relocation plane runs host-side passes between "
+            f"events (victim identity bookkeeping) and is not folded into "
+            f"the scanned loop; see docs/scan_sim.md#which-planes-scan"
         )
     if policy.mesh is not None:
-        raise NotImplementedError(f"{where}: sharded fleets are not supported")
+        raise NotImplementedError(
+            f"{where}: sharded fleet state is not supported under the scan; "
+            f"see docs/scan_sim.md#which-planes-scan"
+        )
     if policy.adaptive_shortlist:
         raise NotImplementedError(
             f"{where}: adaptive_shortlist mutates the policy between batches "
-            f"(host-side controller) and cannot run inside one scan"
+            f"(host-side controller) and cannot run inside one scan; see "
+            f"docs/scan_sim.md#which-planes-scan"
         )
 
 
@@ -771,6 +1072,20 @@ def _check_trace(trace: EventTrace, state: SoAFleetState,
             f"trace bills by cost kind ids {bad.tolist()}, not in the "
             f"policy's kind table {policy.kind_table}"
         )
+    if policy.queue_capacity:
+        if np.any(arr & (trace.priority >= policy.n_classes)):
+            i = int(np.nonzero(arr & (trace.priority >= policy.n_classes))[0][0])
+            raise ValueError(
+                f"arrival at row {i} has priority {int(trace.priority[i])} "
+                f"outside the policy's {policy.n_classes} classes"
+            )
+        headroom = 1 << (32 - int(policy.n_classes).bit_length())
+        if trace.n_events >= headroom:
+            raise ValueError(
+                f"trace has {trace.n_events} rows but the packed "
+                f"queue_select key holds only {headroom} seq tickets at "
+                f"n_classes={policy.n_classes}"
+            )
 
 
 def _check_mult(mult: np.ndarray, policy: SchedulerPolicy) -> np.ndarray:
@@ -799,14 +1114,49 @@ def _check_mult(mult: np.ndarray, policy: SchedulerPolicy) -> np.ndarray:
     return mult
 
 
+def _check_knobs(knobs, policy: SchedulerPolicy) -> np.ndarray:
+    """Validate a ``(..., 3)`` array of traced admission-knob rows:
+    ``(aging_rate, slo_target_s, storm_threshold)``.  ``storm_threshold =
+    np.inf`` disables degradation for that lane (the predicate ``churn >
+    inf`` is constant-False)."""
+    if not policy.queue_capacity:
+        raise ValueError(
+            "admission knobs need a streaming policy (queue_capacity > 0)"
+        )
+    knobs = np.asarray(knobs, np.float32)
+    if knobs.shape[-1] != 3:
+        raise ValueError(
+            f"knob rows must be (aging_rate, slo_target_s, storm_threshold), "
+            f"got shape {knobs.shape}"
+        )
+    flat = knobs.reshape(-1, 3)
+    if np.any(~np.isfinite(flat[:, 0])) or np.any(flat[:, 0] < 0):
+        raise ValueError("aging_rate knob must be finite and >= 0")
+    if np.any(~np.isfinite(flat[:, 1])) or np.any(flat[:, 1] <= 0):
+        raise ValueError("slo_target_s knob must be finite and > 0")
+    if np.any(np.isnan(flat[:, 2])) or np.any(flat[:, 2] <= 0):
+        raise ValueError(
+            "storm_threshold knob must be > 0 (np.inf = degradation off)"
+        )
+    return knobs
+
+
 def _device_cols(cols: Dict[str, np.ndarray]):
     return tuple(jnp.asarray(cols[name]) for name in _COL_ORDER)
 
 
-def _lane_result(state, ys, counters, samples) -> ScanResult:
+def _lane_result(state, ys, counters, samples, stream=None) -> ScanResult:
     h, s, ok, n_kill = (np.asarray(y) for y in ys)
     samp_t, samp_f, samp_n, n_samp = samples
     n_samp = int(n_samp)
+    queue = admission = wait_s = None
+    if stream is not None:
+        qstate, adm, ev_wait, depth = stream
+        queue = jax.tree_util.tree_map(np.asarray, qstate)
+        adm = np.asarray(adm)
+        admission = {name: int(adm[i]) for i, name in enumerate(_ADM_NAMES)}
+        admission["queue_depth"] = int(depth)
+        wait_s = np.asarray(ev_wait)
     return ScanResult(
         state=state,
         host=h, slot=s, ok=ok, n_kill=n_kill,
@@ -817,6 +1167,7 @@ def _lane_result(state, ys, counters, samples) -> ScanResult:
         sample_t=np.asarray(samp_t)[:n_samp],
         sample_free0=np.asarray(samp_f)[:n_samp],
         sample_free0_normal=np.asarray(samp_n)[:n_samp],
+        queue=queue, admission=admission, wait_s=wait_s,
     )
 
 
@@ -828,6 +1179,7 @@ def simulate_scan(
     normal_res: Optional[np.ndarray] = None,
     sample_every_s: float = 300.0,
     mult: Optional[np.ndarray] = None,
+    knobs: Optional[np.ndarray] = None,
 ) -> ScanResult:
     """Run ``trace`` against ``state`` as ONE jitted ``lax.scan`` dispatch.
 
@@ -836,6 +1188,14 @@ def simulate_scan(
     ``fail_host`` row may evacuate); defaults to zeros.  ``mult`` optionally
     substitutes TRACED weigher/churn multiplier values (same zero pattern
     and m_term sign as the policy's static ones — see ``simulate_ensemble``).
+
+    With ``policy.queue_capacity > 0`` the run is in **streaming admission
+    mode**: arrivals queue through the in-carry ``AdmissionQueueState`` and
+    drains fire inside the scan (see docs/scan_sim.md), bit-exact against
+    the python front end (``SoASimulator.run_trace`` streaming replay).
+    ``knobs`` then optionally substitutes one TRACED ``(aging_rate,
+    slo_target_s, storm_threshold)`` row for the policy's static values
+    (``np.inf`` threshold = degradation off).
 
     Returns a ``ScanResult``: the final fleet state, the per-arrival
     placement/rejection sequence, metric counters, and the sample-point
@@ -855,12 +1215,22 @@ def simulate_scan(
                              "simulate_ensemble for a stacked axis")
     else:
         mult = np.zeros((len(policy.all_multipliers),), np.float32)
+    with_knobs = knobs is not None
+    if with_knobs:
+        knobs = _check_knobs(knobs, policy)
+        if knobs.ndim != 1:
+            raise ValueError("simulate_scan takes one knob row; use "
+                             "simulate_ensemble for a stacked axis")
+    else:
+        knobs = np.zeros((3,), np.float32)
     cols = {name: getattr(trace, name) for name in _COL_ORDER}
-    out_state, ys, counters, samples = _scan_fn(policy, with_mult)(
+    out_state, ys, counters, samples, stream = _scan_fn(
+        policy, with_mult, with_knobs
+    )(
         state, _device_cols(cols), jnp.asarray(normal_res, jnp.float32),
-        jnp.float32(sample_every_s), jnp.asarray(mult),
+        jnp.float32(sample_every_s), jnp.asarray(mult), jnp.asarray(knobs),
     )
-    return _lane_result(out_state, ys, counters, samples)
+    return _lane_result(out_state, ys, counters, samples, stream)
 
 
 def simulate_ensemble(
@@ -869,23 +1239,30 @@ def simulate_ensemble(
     state: SoAFleetState,
     *,
     mults: Optional[np.ndarray] = None,
+    knobs: Optional[np.ndarray] = None,
     normal_res: Optional[np.ndarray] = None,
     sample_every_s: float = 300.0,
 ) -> List[ScanResult]:
     """Monte-Carlo harness: ``vmap`` the scanned loop over a stacked-trace
-    (seed) axis and, optionally, a stacked weigher-multiplier axis.
+    (seed) axis and, optionally, stacked weigher-multiplier and
+    admission-knob axes.
 
     ``traces`` are right-padded with no-op PAD rows and stacked; ``mults``
     is a ``(P, len(policy.all_multipliers))`` array of TRACED multiplier
-    values zipped lane-for-lane with the traces (a single trace broadcasts
-    against P multiplier rows and vice versa).  Each lane is bitwise
-    identical to the corresponding single ``simulate_scan`` dispatch on
-    integer-cost traces (pinned by tests/test_scan_sim.py).
+    values zipped lane-for-lane with the traces; ``knobs`` (streaming
+    policies only) is a ``(P, 3)`` array of TRACED ``(aging_rate,
+    slo_target_s, storm_threshold)`` rows — a whole admission-policy sweep
+    in one dispatch.  Any axis of length 1 broadcasts against the others.
+    Each lane is bitwise identical to the corresponding single
+    ``simulate_scan`` dispatch on integer-cost traces (pinned by
+    tests/test_scan_sim.py).
 
     Multiplier rows must preserve the static policy's zero pattern and
     m_term sign: zeros gate terms out at COMPILE time (``consts_of`` folds),
     and the screening bound side is compiled from ``sign(m_term)`` — traced
-    values may change magnitudes, never structure.
+    values may change magnitudes, never structure.  Knob rows have no such
+    structural constraint (``storm_threshold=np.inf`` turns degradation off
+    numerically, not structurally).
     """
     policy = ensure_policy(policy, "simulate_ensemble")
     _check_policy(policy, "simulate_ensemble")
@@ -904,38 +1281,73 @@ def simulate_ensemble(
         mults = _check_mult(mults, policy)
         if mults.ndim != 2:
             raise ValueError("mults must be (P, n_multipliers)")
-        if len(traces) == 1 and mults.shape[0] > 1:
-            traces = traces * mults.shape[0]
-        elif mults.shape[0] == 1 and len(traces) > 1:
-            mults = np.repeat(mults, len(traces), axis=0)
-        if mults.shape[0] != len(traces):
+    with_knobs = knobs is not None
+    if with_knobs:
+        knobs = _check_knobs(knobs, policy)
+        if knobs.ndim != 2:
             raise ValueError(
-                f"{len(traces)} traces vs {mults.shape[0]} multiplier rows"
+                "knobs must be (P, 3) rows of (aging_rate, slo_target_s, "
+                "storm_threshold)"
             )
-    else:
+    n_lanes = max(
+        len(traces),
+        mults.shape[0] if with_mult else 1,
+        knobs.shape[0] if with_knobs else 1,
+    )
+    if len(traces) == 1 and n_lanes > 1:
+        traces = traces * n_lanes
+    if with_mult and mults.shape[0] == 1 and n_lanes > 1:
+        mults = np.repeat(mults, n_lanes, axis=0)
+    if with_knobs and knobs.shape[0] == 1 and n_lanes > 1:
+        knobs = np.repeat(knobs, n_lanes, axis=0)
+    if with_mult and mults.shape[0] != len(traces):
+        raise ValueError(
+            f"{len(traces)} traces vs {mults.shape[0]} multiplier rows"
+        )
+    if with_knobs and knobs.shape[0] != len(traces):
+        raise ValueError(
+            f"{len(traces)} traces vs {knobs.shape[0]} knob rows"
+        )
+    if not with_mult:
         mults = np.zeros(
             (len(traces), len(policy.all_multipliers)), np.float32
         )
+    if not with_knobs:
+        knobs = np.zeros((len(traces), 3), np.float32)
     for t in traces:
         _check_trace(t, state, policy)
     n, d = state.free_f.shape
     if normal_res is None:
         normal_res = np.zeros((n, d), np.float32)
     stacked = stack_traces(traces)
-    out_state, ys, counters, samples = _ensemble_fn(policy, with_mult)(
+    out_state, ys, counters, samples, stream = _ensemble_fn(
+        policy, with_mult, with_knobs
+    )(
         state, _device_cols(stacked), jnp.asarray(normal_res, jnp.float32),
-        jnp.float32(sample_every_s), jnp.asarray(mults),
+        jnp.float32(sample_every_s), jnp.asarray(mults), jnp.asarray(knobs),
     )
     lanes = []
     n_lanes = len(traces)
     state_np = jax.tree_util.tree_map(np.asarray, out_state)
+    stream_np = (
+        None if stream is None
+        else jax.tree_util.tree_map(np.asarray, stream)
+    )
     for i in range(n_lanes):
         e = traces[i].n_events
         lane_state = jax.tree_util.tree_map(lambda a: a[i], state_np)
+        lane_stream = None
+        if stream_np is not None:
+            qst, adm, ev_wait, depth = stream_np
+            lane_stream = (
+                jax.tree_util.tree_map(lambda a: a[i], qst),
+                adm[i], ev_wait[i, :e], depth[i],
+            )
         lanes.append(_lane_result(
             lane_state,
             tuple(np.asarray(y)[i, :e] for y in ys),
             np.asarray(counters)[i],
             tuple(np.asarray(s)[i] for s in samples),
+            lane_stream,
         ))
     return lanes

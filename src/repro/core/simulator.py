@@ -419,19 +419,23 @@ class SoASimulator:
         ``self.trace_outcomes`` as ``(host_idx, slot, ok, n_victims)``
         rows aligned with the trace's arrival rows (-1/-1/False/0 for
         non-arrival rows), mirroring ``ScanResult.host/slot/ok/n_kill``.
+
+        With ``policy.queue_capacity > 0`` the replay runs in streaming
+        admission mode (``_run_trace_streaming``): arrivals submit to the
+        front end and blocking drains fire on the exact event-boundary
+        triggers of the scanned engine — the oracle the in-scan admission
+        plane is pinned bit-exact against.
         """
         from . import scan_sim as ss
 
         fleet = self.fleet
-        if fleet.admission is not None:
-            raise NotImplementedError(
-                "run_trace: streaming admission mode is not trace-replayable"
-            )
         if fleet.policy.relocation_on:
             raise NotImplementedError(
                 "run_trace: the relocation plane rewrites instance ids "
                 "mid-trace; run it via SoASimulator.run"
             )
+        if fleet.admission is not None:
+            return self._run_trace_streaming(trace, sample_every_s)
         e = trace.n_events
         inv_dom = {i: name for name, i in fleet.domain_ids.items()}
         #: arrival row -> live instance id (None = rejected / never placed)
@@ -545,6 +549,98 @@ class SoASimulator:
             killed += bool(fleet.preempt_instance(iid, now=self.now))
         self.metrics.storm_kills += killed
         return killed
+
+    # -- pre-materialized trace replay, streaming admission mode ---------------
+    def _run_trace_streaming(self, trace, sample_every_s: float) -> SimMetrics:
+        """Streaming-mode trace replay: the python oracle for the scanned
+        simulator's in-carry admission plane.
+
+        Every drain is BLOCKING and fires at an event boundary on the exact
+        triggers the scan compiles: (1) before the event, when the incoming
+        timestamp crosses the oldest waiting arrival's f32 SLO deadline (at
+        most one per boundary); (2) after an arrival, when a full
+        ``admit_batch`` waits; (3) after any capacity-freeing event
+        (departure / fail / heal / storm) while anything waits.  Placements
+        book under the request's EFFECTIVE (post-degradation) preemptible
+        flag, rejections under the ORIGINAL trace flag — matching the
+        scanned carry's counters bitwise.
+        """
+        from . import scan_sim as ss
+
+        fleet = self.fleet
+        front = fleet.admission
+        policy = fleet.policy
+        e = trace.n_events
+        inv_dom = {i: name for name, i in fleet.domain_ids.items()}
+        iids: List[Optional[str]] = [None] * e
+        self.trace_outcomes = np.full((e, 4), -1, np.int64)
+        self.trace_outcomes[:, 2:] = 0
+        next_sample = 0.0
+        slo32 = np.float32(policy.slo_target_s)
+
+        def handle(dr) -> None:
+            for out in dr.outcomes:
+                req = out.request
+                row = int(req.id[1:])
+                self.metrics.preemptions += len(out.victims)
+                iids[row] = out.instance.id
+                h = fleet.index[out.instance.host]
+                s = out.instance.metadata.get("slot", -1)
+                self.trace_outcomes[row] = (h, s, 1, len(out.victims))
+                if req.preemptible:  # effective flag (degradation demotes)
+                    self.metrics.placed_preemptible += 1
+                else:
+                    self.metrics.placed_normal += 1
+            for req in dr.rejected:
+                row = int(req.id[1:])
+                if bool(trace.preemptible[row]):  # original flag
+                    self.metrics.failures_preemptible += 1
+                else:
+                    self.metrics.failures_normal += 1
+
+        for row in range(e):
+            kind = int(trace.kind[row])
+            t = float(trace.time[row])
+            self.now = t
+            if self.now >= next_sample:
+                self._sample()
+                next_sample = self.now + sample_every_s
+            oldest = front.oldest_enq_t()
+            if oldest is not None and np.float32(t) >= np.float32(oldest) + slo32:
+                handle(front.drain(self.now, block=True))
+            if kind == ss.ARRIVAL:
+                front.submit(
+                    self._trace_request(trace, row, inv_dom), self.now,
+                    price=float(trace.price[row]),
+                )
+                if front.waiting >= policy.admit_batch:
+                    handle(front.drain(self.now, block=True))
+            elif kind == ss.DEPARTURE:
+                iid = iids[int(trace.inst_id[row])]
+                if iid is not None:
+                    fleet.depart(self._depart_id(iid), now=self.now)
+                if front.waiting:
+                    handle(front.drain(self.now, block=True))
+            elif kind == ss.FAIL_HOST:
+                fleet.fail_host(fleet.names[int(trace.host[row])], now=self.now)
+                if front.waiting:
+                    handle(front.drain(self.now, block=True))
+            elif kind == ss.HEAL_HOST:
+                fleet.heal_host(fleet.names[int(trace.host[row])])
+                if front.waiting:
+                    handle(front.drain(self.now, block=True))
+            elif kind == ss.CHECKPOINT:
+                iid = iids[int(trace.inst_id[row])]
+                if iid is not None:
+                    fleet.checkpoint(iid, now=self.now)
+            elif kind == ss.ZONE_STORM:
+                self._trace_storm(int(trace.zone[row]), float(trace.frac[row]))
+                if front.waiting:
+                    handle(front.drain(self.now, block=True))
+        for dr in front.drain_all(self.now):
+            handle(dr)
+        self._sample()
+        return self.metrics
 
     # -- streaming admission mode (policy.queue_capacity > 0) ------------------
     def _run_streaming(

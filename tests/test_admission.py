@@ -519,3 +519,90 @@ def test_streaming_simulator_respects_slo_deadline():
     # by the retry/backfill path, never for first-attempt admissions
     waits = np.asarray(st_.wait_s)
     assert float(np.percentile(waits, 50)) <= slo + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Packed-key drain order: one fused sort == the old two-pass lexsort
+# ---------------------------------------------------------------------------
+
+
+@seeded_property()
+def test_queue_select_packed_key_matches_lexsort(seed):
+    """``queue_select`` now sorts ONE packed uint32 key; it must reproduce
+    the two-key ``lexsort((seq, effective_klass))`` order bit-exactly —
+    including aged and retried entries — at several class counts/batches."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    for n_classes, batch in ((2, 4), (3, 8), (8, 5), (255, 16), (None, 6)):
+        nc = n_classes if n_classes else 255
+        cap, d = 32, 3
+        q = queue_init(cap, d)
+        occupied = set()
+        t = 0.0
+        for i in range(64):
+            t += float(rng.integers(0, 40))
+            if rng.random() < 0.75 and len(occupied) < cap:
+                q, slot, ok = queue_push(
+                    q, np.ones((d,), np.float32), False, -1, -1, -1.0, -1,
+                    int(rng.integers(nc)), t, 1.0,
+                )
+                assert bool(ok)
+                occupied.add(int(slot))
+            elif occupied:  # burn retries on a few random rows (tries += 1,
+                # seq ticket KEPT) without ever dropping them
+                rows = rng.choice(sorted(occupied), size=1)
+                idxv = np.full((4,), rows[0], np.int32)
+                takev = np.zeros((4,), bool)
+                takev[0] = True
+                q, dropped = queue_pop(
+                    q, idxv, takev, np.zeros((4,), bool), max_retries=10**6
+                )
+                assert not np.asarray(dropped).any()
+            aging = float(rng.choice([0.0, 0.002, 0.05]))
+            now = jnp.float32(t)
+            idx, take = queue_select(
+                q, batch, now=now, aging_rate=aging, n_classes=n_classes
+            )
+            # reference: the pre-packing two-pass order
+            klass = np.asarray(q.klass)
+            if aging:
+                waited = np.maximum(t - np.asarray(q.enq_t), 0.0)
+                decay = np.floor(
+                    np.float32(aging) * waited.astype(np.float32)
+                ).astype(np.int32)
+                klass = np.maximum(klass - decay, 0)
+            valid = np.asarray(q.valid)
+            eff = np.where(valid, klass, np.iinfo(np.int32).max)
+            ref = np.asarray(
+                jnp.lexsort((jnp.asarray(np.asarray(q.seq)),
+                             jnp.asarray(eff)))
+            )[:batch]
+            # compare the VALID prefix (padding rows gather arbitrary
+            # invalid entries; both sorts place them strictly last)
+            idx, take = np.asarray(idx), np.asarray(take)
+            assert np.array_equal(take, valid[ref]), (
+                f"take mask diverged (n_classes={n_classes}, batch={batch})"
+            )
+            assert np.array_equal(idx[take], ref[valid[ref]]), (
+                f"packed-key order diverged from lexsort "
+                f"(n_classes={n_classes}, batch={batch}, aging={aging})"
+            )
+
+
+def test_wait_percentile_readers_agree():
+    """The front end's sim-time p50/p99 reader interpolates in f32 —
+    bit-identical to ``ScanResult.wait_percentiles`` over the same waits."""
+    sim = _streaming_sim()
+    sim.run(6 * 3600.0)
+    front = sim.fleet.admission
+    pct = front.wait_percentiles()
+    assert set(pct) == {"wait_p50_s", "wait_p99_s"}
+    w = np.asarray(front.stats.wait_s, np.float32)
+    assert pct["wait_p50_s"] == float(np.percentile(w, 50))
+    assert pct["wait_p99_s"] == float(np.percentile(w, 99))
+    assert pct["wait_p50_s"] <= pct["wait_p99_s"]
+    # summary() exposes the same sim-time percentiles
+    summ = front.stats.summary()
+    assert summ["wait_p50_s"] == pct["wait_p50_s"]
+    assert summ["wait_p99_s"] == pct["wait_p99_s"]

@@ -505,12 +505,245 @@ def test_unsupported_planes_raise():
                        policy=SchedulerPolicy())
     trace = trace_from_workload(_workload(rate=1 / 100.0), 400.0, seed=0)
     for bad in (
-        SchedulerPolicy(queue_capacity=32),
         SchedulerPolicy(relocate_threshold=0.5),
         SchedulerPolicy(adaptive_shortlist=True, shortlist=32),
     ):
-        with pytest.raises(NotImplementedError):
+        with pytest.raises(NotImplementedError,
+                           match="which-planes-scan"):
             simulate_scan(trace, bad, sim.fleet.state)
     with pytest.raises(NotImplementedError):
         simulate_ensemble([trace], SchedulerPolicy(use_pallas=True),
                           sim.fleet.state)
+
+
+# ---------------------------------------------------------------------------
+# 5. streaming admission: in-scan queue vs the python front-end oracle
+# ---------------------------------------------------------------------------
+#: plain streaming policy — batch-full + SLO + capacity-freed drains
+STREAM_POLICY = SchedulerPolicy(
+    queue_capacity=16, admit_batch=4, slo_target_s=120.0, max_retries=2,
+    n_classes=3,
+)
+
+#: every admission knob live at once: aging, degradation, mixed billing
+STREAM_MIXED_POLICY = SchedulerPolicy(
+    queue_capacity=16, admit_batch=4, slo_target_s=90.0, max_retries=2,
+    n_classes=3, aging_rate=0.01, storm_threshold=0.05,
+    cost_kind="period", cost_kinds=("count", "revenue", "recompute"),
+)
+
+_ADM_KEYS = ("arrivals", "admitted", "rejected_overflow", "rejected_retry",
+             "drains", "retries", "degraded")
+
+
+def _assert_stream_equal(py_sim: SoASimulator, dev: ss.ScanResult) -> None:
+    """Admission-plane parity: counters, queue arrays, latency samples."""
+    front = py_sim.fleet.admission
+    st = front.stats
+    expected = {k: getattr(st, k) for k in _ADM_KEYS}
+    expected["queue_depth"] = front.waiting
+    assert dev.admission == expected, (
+        f"admission counters diverged: {dev.admission} vs {expected}"
+    )
+    # conservation: every arrival is admitted, rejected, or still queued
+    adm = dev.admission
+    assert adm["arrivals"] == (
+        adm["admitted"] + adm["rejected_overflow"] + adm["rejected_retry"]
+        + adm["queue_depth"]
+    )
+    # final queue arrays, every column bitwise
+    for f in dataclasses.fields(front.qstate):
+        a = np.asarray(getattr(front.qstate, f.name))
+        b = np.asarray(getattr(dev.queue, f.name))
+        assert np.array_equal(a, b), f"queue column {f.name} diverged"
+    # sim-time wait distribution: the per-placement f32 differences are the
+    # same multiset, and both percentile readers agree bit-for-bit
+    dev_w = np.sort(dev.wait_s[dev.wait_s >= 0])
+    py_w = np.sort(np.asarray(st.wait_s, np.float32))
+    assert np.array_equal(dev_w, py_w), "wait_s distributions diverged"
+    assert dev.wait_percentiles() == front.wait_percentiles()
+
+
+def _run_both_streaming(trace: EventTrace, policy: SchedulerPolicy,
+                        n_hosts: int, seed: int = 0):
+    sim, dev, m_py = _run_both(trace, policy, n_hosts, seed)
+    _assert_bitwise_equal(sim, dev, m_py, trace)
+    _assert_stream_equal(sim, dev)
+    return sim, dev, m_py
+
+
+@pytest.mark.parametrize("seed", PARITY_SEEDS)
+def test_stream_parity_randomized_all_kinds(seed):
+    """The headline streaming sweep: 400+-event randomized traces with
+    storms-under-degradation, aging, mixed billing, failures + heals,
+    checkpoints — scan vs python streaming oracle bit-exact."""
+    trace = _rich_trace(seed)
+    assert trace.n_events >= 300
+    sim, dev, _ = _run_both_streaming(
+        trace, STREAM_MIXED_POLICY, n_hosts=16, seed=seed
+    )
+    assert dev.admission["admitted"] > 0
+    assert dev.admission["drains"] > 0
+
+
+def test_stream_parity_overflow_and_retry_exhaustion():
+    """Saturation on a 2-host fleet: persistent retries fill the queue so
+    fresh arrivals overflow, and retry budgets exhaust."""
+    policy = SchedulerPolicy(queue_capacity=8, admit_batch=4,
+                             slo_target_s=60.0, max_retries=6, n_classes=2)
+    trace = trace_from_workload(
+        WorkloadSpec(
+            arrival_rate_per_s=1 / 6.0,
+            flavors=[(f"f{i}", s) for i, s in enumerate(SIZES)],
+            preemptible_fraction=0.5,
+        ),
+        4000.0, seed=11, priorities=(-1, 0, 1),
+    )
+    assert trace.n_events >= 400
+    _, dev, _ = _run_both_streaming(trace, policy, n_hosts=2, seed=11)
+    assert dev.admission["rejected_overflow"] > 0
+    assert dev.admission["rejected_retry"] > 0
+    assert dev.admission["retries"] > 0
+
+
+def test_stream_parity_slo_deadline_drains():
+    """Sparse arrivals never fill a batch: every drain is SLO-deadline
+    (or end-of-run) triggered."""
+    policy = SchedulerPolicy(queue_capacity=32, admit_batch=16,
+                             slo_target_s=25.0, max_retries=2)
+    trace = trace_from_workload(_workload(rate=1 / 60.0), 6000.0, seed=7)
+    _, dev, _ = _run_both_streaming(trace, policy, n_hosts=8, seed=7)
+    assert dev.admission["admitted"] > 0
+    # a batch of 16 never accumulates at this rate, yet drains fired
+    # throughout the run, not only in the epilogue
+    assert dev.admission["drains"] > dev.admission["admitted"] // 16 + 1
+
+
+def test_stream_parity_storm_degradation():
+    """A tight storm_threshold demotes preemptible attempts mid-storm; the
+    degraded counter and the demoted placements stay exact."""
+    policy = dataclasses.replace(STREAM_MIXED_POLICY, storm_threshold=0.001)
+    trace = trace_from_workload(
+        _workload(frac=1.0), 4000.0, seed=13,
+        storms=((400.0, 0, 0.8), (1500.0, 1, 0.7), (2600.0, 2, 0.9)),
+        priorities=(-1, 0, 1, 2),
+        cost_kinds=(-1, 0, 1, 2, 3),
+    )
+    _, dev, _ = _run_both_streaming(trace, policy, n_hosts=9, seed=13)
+    assert dev.admission["degraded"] > 0
+
+
+def test_stream_knobs_neutral_identity():
+    """A traced knob row equal to the static policy's values is bitwise
+    identical to the untraced scan (floor(0*w)=0, inf threshold =
+    constant-False predicate)."""
+    policy = STREAM_POLICY
+    sim = SoASimulator(_hosts(8), _workload(), seed=1, k_slots=K,
+                       policy=policy)
+    state0 = _snapshot(sim.fleet.state)
+    trace = trace_from_workload(_workload(), 3000.0, seed=1,
+                                priorities=(-1, 0, 1, 2))
+    static = simulate_scan(trace, policy, state0)
+    neutral = np.asarray(
+        [policy.aging_rate, policy.slo_target_s,
+         np.inf if policy.storm_threshold is None
+         else policy.storm_threshold],
+        np.float32,
+    )
+    knobbed = simulate_scan(trace, policy, state0, knobs=neutral)
+    _lane_equal(static, knobbed)
+    assert static.admission == knobbed.admission
+    assert np.array_equal(static.wait_s, knobbed.wait_s)
+    for f in dataclasses.fields(static.queue):
+        assert np.array_equal(getattr(static.queue, f.name),
+                              getattr(knobbed.queue, f.name))
+
+
+def test_stream_knob_ensemble_lanes():
+    """An admission-knob sweep in ONE dispatch == per-row single scans."""
+    policy = STREAM_POLICY
+    sim = SoASimulator(_hosts(8), _workload(), seed=1, k_slots=K,
+                       policy=policy)
+    state0 = _snapshot(sim.fleet.state)
+    trace = trace_from_workload(_workload(), 3000.0, seed=1,
+                                priorities=(-1, 0, 1, 2))
+    knob_rows = np.asarray(
+        [[0.0, 120.0, np.inf],
+         [0.05, 30.0, 0.02],
+         [0.2, 300.0, 1.0]],
+        np.float32,
+    )
+    lanes = simulate_ensemble([trace], policy, state0, knobs=knob_rows)
+    assert len(lanes) == 3
+    for row, lane in zip(knob_rows, lanes):
+        single = simulate_scan(trace, policy, state0, knobs=row)
+        _lane_equal(single, lane)
+        assert single.admission == lane.admission
+        assert np.array_equal(single.wait_s, lane.wait_s)
+
+
+def test_stream_ensemble_lanes_match_padded_singles():
+    """Mixed-length streaming traces on the vmap axis: each lane equals a
+    single scan of the SAME padded trace (PAD rows at t_last can fire
+    extra SLO drains, so the comparison must share the padding)."""
+    policy = STREAM_POLICY
+    sim = SoASimulator(_hosts(6), _workload(), seed=0, k_slots=K,
+                       policy=policy)
+    state0 = _snapshot(sim.fleet.state)
+    traces = [
+        trace_from_workload(_workload(rate=1 / 30.0), 1500.0, seed=s,
+                            priorities=(-1, 0, 1, 2))
+        for s in (1, 2, 3, 4)
+    ]
+    emax = max(t.n_events for t in traces)
+    lanes = simulate_ensemble(traces, policy, state0)
+    for t, lane in zip(traces, lanes):
+        e = t.n_events
+        single = simulate_scan(t.padded(emax), policy, state0)
+        trimmed = dataclasses.replace(
+            single, host=single.host[:e], slot=single.slot[:e],
+            ok=single.ok[:e], n_kill=single.n_kill[:e],
+        )
+        _lane_equal(trimmed, lane)
+        assert single.admission == lane.admission
+        assert np.array_equal(single.wait_s[:e], lane.wait_s)
+        for f in dataclasses.fields(single.queue):
+            assert np.array_equal(getattr(single.queue, f.name),
+                                  getattr(lane.queue, f.name))
+
+
+def test_stream_knob_validation():
+    sim = SoASimulator(_hosts(4), _workload(), seed=0, k_slots=K,
+                       policy=STREAM_POLICY)
+    state0 = _snapshot(sim.fleet.state)
+    trace = trace_from_workload(_workload(rate=1 / 100.0), 400.0, seed=0)
+    with pytest.raises(ValueError, match="queue_capacity > 0"):
+        simulate_scan(trace, SchedulerPolicy(), state0,
+                      knobs=np.array([0.0, 60.0, np.inf], np.float32))
+    with pytest.raises(ValueError, match="knob rows must be"):
+        simulate_scan(trace, STREAM_POLICY, state0,
+                      knobs=np.array([0.0, 60.0], np.float32))
+    with pytest.raises(ValueError, match="aging_rate knob"):
+        simulate_scan(trace, STREAM_POLICY, state0,
+                      knobs=np.array([-1.0, 60.0, np.inf], np.float32))
+    with pytest.raises(ValueError, match="slo_target_s knob"):
+        simulate_scan(trace, STREAM_POLICY, state0,
+                      knobs=np.array([0.0, 0.0, np.inf], np.float32))
+    with pytest.raises(ValueError, match="storm_threshold knob"):
+        simulate_scan(trace, STREAM_POLICY, state0,
+                      knobs=np.array([0.0, 60.0, np.nan], np.float32))
+    with pytest.raises(ValueError, match="one knob row"):
+        simulate_scan(trace, STREAM_POLICY, state0,
+                      knobs=np.array([[0.0, 60.0, np.inf]], np.float32))
+    with pytest.raises(ValueError, match="3 traces vs 2 knob rows"):
+        simulate_ensemble([trace, trace, trace], STREAM_POLICY, state0,
+                          knobs=np.full((2, 3), 60.0, np.float32))
+
+
+def test_stream_trace_priority_validation():
+    sim = SoASimulator(_hosts(4), _workload(), seed=0, k_slots=K,
+                       policy=STREAM_POLICY)
+    trace = trace_from_workload(_workload(rate=1 / 50.0), 800.0, seed=0,
+                                priorities=(5,))
+    with pytest.raises(ValueError, match="priority"):
+        simulate_scan(trace, STREAM_POLICY, sim.fleet.state)
